@@ -1,0 +1,54 @@
+"""Shared setup for the paper-figure benchmarks (Fig 1-3, Table I)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_optimizer, make_problem, newton_solve, run_rounds
+from repro.core.losses import logistic
+from repro.data.libsvm_like import PAPER_DATASETS, load
+
+
+def build_problem(dataset: str, *, seed: int = 0, n_cap: int | None = None):
+    """Federated logistic-regression problem per paper Table II."""
+    spec, X, y = load(dataset, seed=seed)
+    if n_cap and X.shape[0] > n_cap:
+        X, y = X[:n_cap], y[:n_cap]
+    lam = 1e-3  # paper: lambda = 1e-3 everywhere
+    prob = make_problem(X, y, m=spec.m_clients, lam=lam, objective=logistic,
+                        key=jax.random.PRNGKey(seed))
+    w0 = jnp.zeros((prob.dim,), jnp.float64)
+    w_star = newton_solve(prob, w0, iters=40)
+    return spec, prob, w0, w_star
+
+
+# Methods compared in the paper's Fig. 1 (+ our flens_plus)
+def fig1_methods(spec):
+    k = spec.sketch_k
+    return [
+        ("fedavg", dict(lr=2.0, local_steps=5)),
+        ("fedprox", dict(lr=2.0, local_steps=5, mu_prox=0.01)),
+        ("fednew", dict(rho=spec_rho(spec), alpha=spec_alpha(spec))),
+        ("fednl", {}),
+        ("fedns", dict(k=k)),
+        ("fedndes", {}),
+        ("fednewton", {}),
+        ("flens", dict(k=k)),
+        ("flens_plus", dict(k=k)),
+    ]
+
+
+def spec_rho(spec):
+    return {"phishing": 0.1, "covtype": 50.0, "susy": 50.0}.get(spec.name, 0.1)
+
+
+def spec_alpha(spec):
+    return {"phishing": 0.25, "covtype": 1.0, "susy": 1.0}.get(spec.name, 0.25)
+
+
+def run_method(name, kwargs, prob, w0, w_star, rounds, seed=0):
+    opt = make_optimizer(name, **kwargs)
+    return run_rounds(opt, prob, w0, w_star, rounds=rounds, seed=seed)

@@ -1,0 +1,70 @@
+"""Aggregate dry-run JSONs into the §Roofline table (markdown + rows)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+def aggregate(dryrun_dir) -> list[dict]:
+    rows = []
+    for f in sorted(pathlib.Path(dryrun_dir).glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    order = {"single": 0, "multi": 1}
+    rows.sort(key=lambda r: (r["arch"], r["shape"], order.get(r["mesh"], 2)))
+    return rows
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}us"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def markdown_table(rows: list[dict], mesh: str = "single") -> str:
+    """§Roofline markdown (single-pod by default, per the brief)."""
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful-FLOPs ratio | peak mem/chip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | "
+                f"skipped ({r['reason'].split('(')[0].strip()}) | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        rf = r["roofline"]
+        ratio = rf.get("useful_flops_ratio")
+        peak = r["memory"]["peak_bytes_estimate"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(rf['compute_s'])} | "
+            f"{_fmt_s(rf['memory_s'])} | {_fmt_s(rf['collective_s'])} | "
+            f"**{rf['dominant'].replace('_s','')}** | "
+            f"{ratio:.2f} | {peak:.1f} GB |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = aggregate(args.dir)
+    print(markdown_table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

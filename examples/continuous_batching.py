@@ -1,0 +1,66 @@
+"""Continuous-batching serving demo.
+
+Submits a stream of variable-length requests to the slot-based engine
+(per-slot decode indices — sequences at different positions share one
+batched decode step) and reports throughput + per-request latency.
+
+  PYTHONPATH=src python examples/continuous_batching.py --arch gemma3-1b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.lm import LM
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, max_batch=args.max_batch,
+                           cache_len=args.cache_len)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 40))
+        reqs.append(Request(
+            uid=i,
+            prompt=list(rng.integers(0, cfg.vocab, size=plen)),
+            max_new_tokens=int(rng.integers(4, 16)),
+        ))
+        engine.submit(reqs[-1])
+
+    t0 = time.perf_counter()
+    steps = 0
+    while engine.queue or engine.active.any():
+        engine.step()
+        steps += 1
+    dt = time.perf_counter() - t0
+
+    total_new = sum(len(r.generated) for r in reqs)
+    print(f"arch={cfg.arch_id} (reduced)  requests={len(reqs)} "
+          f"max_batch={args.max_batch}")
+    print(f"decode steps={steps}  new tokens={total_new}  "
+          f"wall={dt:.2f}s  ({total_new/dt:.1f} tok/s)")
+    occupancy = total_new / (steps * args.max_batch)
+    print(f"slot occupancy={occupancy:.2f} "
+          f"(continuous batching keeps slots busy across request lengths)")
+    for r in reqs[:4]:
+        print(f"  req {r.uid}: prompt {len(r.prompt):2d} toks -> "
+              f"{len(r.generated)} new, first: {r.generated[:6]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""FLeNS-head: the paper's optimizer inside an LLM fine-tuning loop.
+
+Scenario: m federated clients share a (reduced) TinyLlama backbone and
+fine-tune a binary classification head on their private token data. The
+head objective given backbone features is exactly the paper's convex
+problem, so FLeNS applies *soundly* (DESIGN.md §4.1):
+
+  1. warm up the backbone with a few AdamW LM steps (shared, public data);
+  2. every client extracts features from its private sequences;
+  3. run FLeNS rounds on the federated head objective — sketched k x k
+     Hessian uplink per client — and compare with FedAvg on the same head.
+
+  PYTHONPATH=src python examples/federated_llm.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_optimizer, newton_solve, run_rounds
+from repro.data.lm_stream import FastLMStream
+from repro.models.lm import LM
+from repro.optim import adamw_init, adamw_update, extract_features, head_problem
+
+
+def main():
+    m_clients, n_per_client, seq = 8, 64, 32
+    cfg = get_config("tinyllama-1.1b").reduced(d_model=128, vocab=256)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # 1. brief LM warmup so the features aren't random projections
+    stream = FastLMStream(cfg.vocab, seq, batch=8, seed=0)
+    opt_state = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+        p2, o2, _ = adamw_update(params, grads, opt_state, lr=1e-3)
+        return p2, o2, loss
+
+    for i, batch in enumerate(stream.batches(30)):
+        params, opt_state, loss = step(params, opt_state, batch)
+    print(f"backbone warmup done (lm loss {float(loss):.3f})")
+
+    # 2. private client data: label = does the sequence contain a marker
+    #    token pattern (a nonlinear function of the tokens -> the backbone
+    #    features are genuinely useful)
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, cfg.vocab, size=(m_clients * n_per_client, seq))
+    labels = np.where((toks < 8).sum(axis=1) >= 2, 1.0, -1.0)
+    feats = extract_features(model, params, jnp.asarray(toks, jnp.int32))
+    print(f"features: {feats.shape}, positives: {(labels>0).mean():.2f}")
+
+    # 3. federated second-order head training with FLeNS
+    prob = head_problem(feats, jnp.asarray(labels), m_clients, lam=1e-3)
+    w0 = jnp.zeros((prob.dim,), jnp.float64)
+    w_star = newton_solve(prob, w0, iters=40)
+
+    k = min(64, prob.dim)
+    for name, kw in [
+        ("fedavg", dict(lr=1.0, local_steps=5)),
+        ("flens", dict(k=k)),
+        ("fednewton", {}),
+    ]:
+        hist = run_rounds(make_optimizer(name, **kw), prob, w0, w_star,
+                          rounds=10)
+        print(f"{hist.name:>10} uplink/round={hist.uplink_floats:>6} "
+              f"gap: " + "  ".join(f"{g:.1e}" for g in hist.gap[::2]))
+
+    # head accuracy at the FLeNS solution
+    hist = run_rounds(make_optimizer("flens", k=k), prob, w0, w_star, rounds=10)
+    # (re-run returns final w via state; reuse problem to score w_star)
+    acc = float(jnp.mean((feats @ np.asarray(w_star) > 0) == (labels > 0)))
+    print(f"head accuracy at w*: {acc:.3f} (chance 0.5)")
+
+
+if __name__ == "__main__":
+    main()

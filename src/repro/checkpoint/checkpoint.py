@@ -1,0 +1,87 @@
+"""Minimal production-shaped checkpointing: atomic, step-managed, pytree-safe.
+
+Format: one directory per step (``step_000042/``) holding
+  * ``tree.msgpack`` — the pytree structure + array metadata
+  * ``arrays.npz``   — the tensor payloads (host-gathered)
+Writes go to a temp dir + atomic rename, so a killed run never leaves a
+half-written "latest" checkpoint. Restore rebuilds the exact pytree
+(dtypes preserved, bf16 round-trips via a uint16 view).
+"""
+from __future__ import annotations
+
+import pathlib
+import shutil
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir, step: int, tree) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:09d}"
+    tmp = ckpt_dir / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten(tree)
+    arrays = {}
+    meta = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = arr.dtype.name
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            dtype_name = "bfloat16"
+        arrays[f"a{i}"] = arr
+        meta.append({"dtype": dtype_name, "shape": list(arr.shape)})
+
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "tree.msgpack").write_bytes(
+        msgpack.packb({"treedef": str(treedef), "meta": meta, "step": step})
+    )
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*") if p.is_dir()
+    )
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir, step: int, like):
+    """Restore into the structure of ``like`` (validates leaf count/shape)."""
+    path = pathlib.Path(ckpt_dir) / f"step_{step:09d}"
+    blob = msgpack.unpackb((path / "tree.msgpack").read_bytes())
+    data = np.load(path / "arrays.npz")
+    leaves, treedef = _flatten(like)
+    if len(leaves) != len(blob["meta"]):
+        raise ValueError(
+            f"checkpoint has {len(blob['meta'])} leaves, expected {len(leaves)}"
+        )
+    out = []
+    for i, (leaf, m) in enumerate(zip(leaves, blob["meta"])):
+        arr = data[f"a{i}"]
+        if m["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != expected {np.shape(leaf)}"
+            )
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,84 @@
+"""Architecture registry: the 10 assigned configs + input-shape registry."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.common import ModelConfig
+
+ARCH_IDS = (
+    "kimi_k2_1t_a32b",
+    "recurrentgemma_2b",
+    "mamba2_780m",
+    "gemma3_4b",
+    "llama32_vision_90b",
+    "tinyllama_1_1b",
+    "qwen15_110b",
+    "gemma3_1b",
+    "whisper_tiny",
+    "arctic_480b",
+)
+
+# public ids as assigned (hyphens) -> module names
+_ALIASES = {
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mamba2-780m": "mamba2_780m",
+    "gemma3-4b": "gemma3_4b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "qwen1.5-110b": "qwen15_110b",
+    "gemma3-1b": "gemma3_1b",
+    "whisper-tiny": "whisper_tiny",
+    "arctic-480b": "arctic_480b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    """Arch id, optionally with a variant suffix: "gemma3-4b@rightsized"."""
+    variant = None
+    if "@" in arch:
+        arch, variant = arch.split("@", 1)
+    mod_name = _ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg = mod.CONFIG
+    if variant == "rightsized":
+        cfg = dataclasses.replace(cfg, cache_mode="rightsized")
+    elif variant:
+        raise ValueError(f"unknown variant {variant!r}")
+    return cfg
+
+
+def sub_quadratic(cfg: ModelConfig) -> bool:
+    """Can this arch serve a 500k context (per DESIGN.md skip matrix)?"""
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    if cfg.local_per_global and cfg.window:  # sliding-window dense (gemma3)
+        return True
+    return False
+
+
+def supported_shapes(cfg: ModelConfig) -> list[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if sub_quadratic(cfg):
+        out.append("long_500k")
+    if cfg.family == "audio":
+        # whisper decoder context is architecturally tiny; 500k skipped
+        pass
+    return out

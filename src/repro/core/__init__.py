@@ -1,0 +1,48 @@
+"""Core library: the paper's contribution (FLeNS) + every Table-I baseline."""
+from repro.core.base import FederatedOptimizer, History, run_rounds
+from repro.core.federated import FederatedProblem, make_problem, newton_solve
+from repro.core.first_order import FedAvg, FedProx
+from repro.core.flens import FLeNS
+from repro.core.losses import OBJECTIVES, least_squares, logistic
+from repro.core.newton_family import (
+    DistributedNewton,
+    FedNew,
+    FedNewton,
+    FedNL,
+    LocalNewton,
+)
+from repro.core.sketch import Sketch, effective_dimension, make_sketch, sketch_psd
+from repro.core.sketched import FedNDES, FedNS
+
+
+def make_optimizer(name: str, **kw) -> FederatedOptimizer:
+    """Factory over every implemented algorithm (Table I)."""
+    registry = {
+        "fedavg": FedAvg,
+        "fedprox": FedProx,
+        "fednewton": FedNewton,
+        "distributed_newton": DistributedNewton,
+        "local_newton": LocalNewton,
+        "fednew": FedNew,
+        "fednl": FedNL,
+        "fedns": FedNS,
+        "fedndes": FedNDES,
+        "flens": FLeNS,
+        "flens_plus": lambda **k: FLeNS(variant="plus", **k),
+    }
+    return registry[name](**kw)
+
+
+ALGORITHMS = (
+    "fedavg",
+    "fedprox",
+    "fednewton",
+    "distributed_newton",
+    "local_newton",
+    "fednew",
+    "fednl",
+    "fedns",
+    "fedndes",
+    "flens",
+    "flens_plus",
+)

@@ -1,0 +1,102 @@
+"""Federated optimizer interface + round-loop driver.
+
+Every algorithm implements:
+
+  * ``init(problem, w0) -> state``          (state is a pytree dict)
+  * ``round(problem, state, key) -> state`` (pure, jittable; one comm round)
+  * ``uplink_floats(problem)`` / ``downlink_floats(problem)``
+      static per-client-per-round communication formulas (floats), used to
+      reproduce Table I empirically.
+
+``state`` always carries the current iterate under key ``"w"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.federated import FederatedProblem
+
+OptState = Dict[str, Any]
+
+
+class FederatedOptimizer:
+    name: str = "base"
+
+    def init(self, problem: FederatedProblem, w0: jax.Array) -> OptState:
+        return {"w": w0}
+
+    def round(
+        self, problem: FederatedProblem, state: OptState, key: jax.Array
+    ) -> OptState:
+        raise NotImplementedError
+
+    # -- communication accounting (per client, per round) -------------------
+    def uplink_floats(self, problem: FederatedProblem) -> int:
+        raise NotImplementedError
+
+    def downlink_floats(self, problem: FederatedProblem) -> int:
+        # server broadcasts the model every round for every method here
+        return problem.dim
+
+
+@dataclasses.dataclass
+class History:
+    """Per-round trajectory of one optimizer on one problem."""
+
+    name: str
+    loss: np.ndarray  # (T+1,) global loss, loss[0] at w0
+    gap: np.ndarray  # (T+1,) loss - loss(w*)
+    grad_norm: np.ndarray  # (T+1,)
+    uplink_floats: int  # per client per round
+    downlink_floats: int
+    wall_time_s: float
+    rounds: int
+
+    @property
+    def cumulative_uplink(self) -> np.ndarray:
+        return np.arange(len(self.loss)) * float(self.uplink_floats)
+
+
+def run_rounds(
+    opt: FederatedOptimizer,
+    problem: FederatedProblem,
+    w0: jax.Array,
+    w_star: jax.Array,
+    rounds: int,
+    seed: int = 0,
+) -> History:
+    """Drive ``rounds`` communication rounds and record the trajectory."""
+    loss_fn = jax.jit(problem.global_value)
+    grad_fn = jax.jit(problem.global_grad)
+    round_fn = jax.jit(lambda s, k: opt.round(problem, s, k))
+
+    loss_star = float(loss_fn(w_star))
+    state = opt.init(problem, w0)
+    keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
+
+    losses = [float(loss_fn(state["w"]))]
+    gnorms = [float(jnp.linalg.norm(grad_fn(state["w"])))]
+    t0 = time.perf_counter()
+    for t in range(rounds):
+        state = round_fn(state, keys[t])
+        losses.append(float(loss_fn(state["w"])))
+        gnorms.append(float(jnp.linalg.norm(grad_fn(state["w"]))))
+    wall = time.perf_counter() - t0
+
+    losses = np.asarray(losses)
+    return History(
+        name=opt.name,
+        loss=losses,
+        gap=np.maximum(losses - loss_star, 0.0),
+        grad_norm=np.asarray(gnorms),
+        uplink_floats=opt.uplink_floats(problem),
+        downlink_floats=opt.downlink_floats(problem),
+        wall_time_s=wall,
+        rounds=rounds,
+    )

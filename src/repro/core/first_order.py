@@ -1,0 +1,77 @@
+"""First-order federated baselines: FedAvg and FedProx.
+
+Both transmit only the locally-updated model (O(M) uplink) and average on
+the server — the sublinear-rate baselines of the paper's Table I.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base import FederatedOptimizer, OptState
+from repro.core.federated import FederatedProblem
+
+
+def _local_grad_at(problem: FederatedProblem, Xj, yj, mj, w):
+    """Gradient of one client's local objective at w (masked rows)."""
+    nj = jnp.sum(mj)
+    if problem.objective.name == "logistic":
+        margins = yj * (Xj @ w)
+        s = jax.nn.sigmoid(-margins) * mj
+        return -(Xj.T @ (s * yj)) / nj + problem.lam * w
+    r = (Xj @ w - yj) * mj
+    return Xj.T @ r / nj + problem.lam * w
+
+
+class FedAvg(FederatedOptimizer):
+    """McMahan et al. 2017 — E local full-batch GD steps, weighted average."""
+
+    name = "fedavg"
+
+    def __init__(self, lr: float = 1.0, local_steps: int = 5):
+        self.lr = lr
+        self.local_steps = local_steps
+
+    def round(self, problem, state: OptState, key) -> OptState:
+        w = state["w"]
+
+        def client(Xj, yj, mj):
+            def body(wl, _):
+                g = _local_grad_at(problem, Xj, yj, mj, wl)
+                return wl - self.lr * g, None
+
+            wl, _ = jax.lax.scan(body, w, None, length=self.local_steps)
+            return wl
+
+        w_locals = jax.vmap(client)(problem.X, problem.y, problem.mask)
+        p = problem.client_weights
+        return {"w": jnp.einsum("j,jm->m", p, w_locals)}
+
+    def uplink_floats(self, problem) -> int:
+        return problem.dim
+
+
+class FedProx(FedAvg):
+    """Li et al. 2020 — FedAvg with a proximal term (mu/2)||w - w_t||^2."""
+
+    name = "fedprox"
+
+    def __init__(self, lr: float = 1.0, local_steps: int = 5, mu_prox: float = 0.1):
+        super().__init__(lr=lr, local_steps=local_steps)
+        self.mu_prox = mu_prox
+
+    def round(self, problem, state: OptState, key) -> OptState:
+        w = state["w"]
+
+        def client(Xj, yj, mj):
+            def body(wl, _):
+                g = _local_grad_at(problem, Xj, yj, mj, wl)
+                g = g + self.mu_prox * (wl - w)
+                return wl - self.lr * g, None
+
+            wl, _ = jax.lax.scan(body, w, None, length=self.local_steps)
+            return wl
+
+        w_locals = jax.vmap(client)(problem.X, problem.y, problem.mask)
+        p = problem.client_weights
+        return {"w": jnp.einsum("j,jm->m", p, w_locals)}

@@ -1,0 +1,173 @@
+"""FLeNS — Federated Learning with Enhanced Nesterov-Newton Sketch.
+
+The paper's algorithm (Algorithm 1), made dimensionally consistent as
+described in DESIGN.md §1.1:
+
+  1. Nesterov look-ahead       v_t = w_t + beta_t (w_t - w_{t-1})
+  2. Every client j computes   g_j(v_t)   and the two-sided sketch
+                               H~_j = S H_j(v_t) S^T  in R^{k x k},
+     with the SAME per-round SRHT S (the server broadcasts the O(1) seed).
+     Efficient form: H_j = A_j^T A_j + lam I  (A_j = sqrt-Hessian rows),
+     so  H~_j = (A_j S^T)^T (A_j S^T) + lam * S S^T  — never materializes
+     the M x M Hessian; cost O(n_j M log M) via the FWHT.
+  3. Uplink per client: H~_j (k^2 floats) + S g_j (k floats)  ->  O(k^2).
+  4. Server aggregates and takes the sketched-subspace Newton step
+         delta = S^T (H~ + lam_damp I)^{-1} (S g),
+         w_{t+1} = v_t - mu * delta.
+
+``variant="plus"`` is the beyond-paper FLeNS+ of DESIGN.md §1.2: clients
+additionally upload the raw gradient (O(M), the same uplink order as
+FedAvg) and the server adds a first-order step in the orthogonal
+complement of the sketch subspace, removing the sketch floor:
+         w_{t+1} = v_t - mu * delta - eta * (g - P_S g),
+with P_S the exact projector onto range(S^T).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base import FederatedOptimizer, OptState
+from repro.core.federated import FederatedProblem
+from repro.core.sketch import Sketch, make_sketch
+
+
+class FLeNS(FederatedOptimizer):
+    name = "flens"
+
+    def __init__(
+        self,
+        k: int,
+        mu: float = 1.0,
+        beta: float | str = "paper",
+        sketch: str = "srht",
+        lam_damp: float = 1e-8,
+        variant: str = "paper",  # "paper" | "plus"
+        eta: float | None = None,  # complement step size (plus); None -> 1/L1
+        step_from: str = "v",  # "v" (standard accelerated) | "w" (paper literal)
+        restart: bool = True,  # function-value adaptive momentum restart
+    ):
+        self.k = k
+        self.mu = mu
+        self.beta = beta
+        self.sketch = sketch
+        self.lam_damp = lam_damp
+        self.variant = variant
+        self.eta = eta
+        self.step_from = step_from
+        self.restart = restart
+        if variant == "plus":
+            self.name = "flens_plus"
+
+    # -- momentum schedule ---------------------------------------------------
+    def _beta_value(self, problem: FederatedProblem, w0: jax.Array) -> float:
+        if isinstance(self.beta, (int, float)):
+            return float(self.beta)
+        h = problem.global_hessian(w0)
+        evals = jnp.linalg.eigvalsh(h)
+        l1 = float(evals[-1])
+        gam = float(jnp.maximum(evals[0], problem.lam))
+        if self.beta == "paper":  # Assumption A7: (L1 - gamma)/(L1 + gamma)
+            return (l1 - gam) / (l1 + gam)
+        if self.beta == "sqrt":  # classical accelerated-GD schedule
+            sl, sg = l1 ** 0.5, gam ** 0.5
+            return (sl - sg) / (sl + sg)
+        raise ValueError(f"unknown beta rule {self.beta!r}")
+
+    def init(self, problem, w0):
+        beta = self._beta_value(problem, w0)
+        if self.eta is None:
+            h = problem.global_hessian(w0)
+            l1 = float(jnp.linalg.eigvalsh(h)[-1])
+            self._eta = 1.0 / l1
+        else:
+            self._eta = float(self.eta)
+        return {
+            "w": w0,
+            "w_prev": w0,
+            "beta": jnp.asarray(beta, w0.dtype),
+            "loss": problem.global_value(w0),
+            "scale": jnp.asarray(1.0, w0.dtype),
+        }
+
+    # -- one communication round ----------------------------------------------
+    def round(self, problem, state: OptState, key) -> OptState:
+        w, w_prev, beta = state["w"], state["w_prev"], state["beta"]
+        dim = problem.dim
+        dtype = w.dtype
+
+        # (1) Nesterov look-ahead (common knowledge: server-known w, w_prev)
+        v = w + beta * (w - w_prev)
+
+        # (2) per-round shared sketch, seed broadcast by the server
+        s = make_sketch(key, self.sketch, self.k, dim, dtype=dtype)
+        sst = s.apply(s.apply_t(jnp.eye(self.k, dtype=dtype)))  # S S^T (k,k)
+
+        # client-side: local gradient + two-sided sketched Hessian
+        gs = self._local_grads_at(problem, v)  # (m, M)
+        a = self._local_hess_sqrt_at(problem, v)  # (m, n_shard, M)
+
+        def client_sketch(aj):
+            bj = s.apply(aj)  # A_j S^T : (n_shard, k)
+            return bj.T @ bj  # (k, k), + lam S S^T added after aggregation
+
+        h_sk = jax.vmap(client_sketch)(a)  # (m, k, k)
+        sg = jax.vmap(s.apply)(gs)  # (m, k)
+
+        # (3)+(4) server aggregation and sketched-subspace Newton step
+        p = problem.client_weights
+        h_tilde = jnp.einsum("j,jab->ab", p, h_sk) + problem.lam * sst
+        g_sk = jnp.einsum("j,jk->k", p, sg)
+        eye_k = jnp.eye(self.k, dtype=dtype)
+        delta_k = jnp.linalg.solve(h_tilde + self.lam_damp * eye_k, g_sk)
+        delta = s.apply_t(delta_k)
+
+        base = v if self.step_from == "v" else w
+        scale = state.get("scale", jnp.asarray(1.0, dtype))
+        w_next = base - scale * self.mu * delta
+
+        if self.variant == "plus":
+            g = jnp.einsum("j,jm->m", p, gs)  # full gradient (O(M) uplink)
+            proj = s.apply_t(jnp.linalg.solve(sst, s.apply(g)))  # P_S g
+            w_next = w_next - scale * self._eta * (g - proj)
+
+        # Guarded step + adaptive momentum restart (O'Donoghue & Candes
+        # flavour): clients piggyback their local loss (1 scalar of uplink),
+        # so the server knows L(w_next). If the loss increased, the step is
+        # rejected and the momentum killed for the next round — this is what
+        # keeps the literal Assumption-A7 momentum (beta ~ 1) stable; see
+        # EXPERIMENTS.md §Paper for the unguarded divergence measurement.
+        loss_next = problem.global_value(w_next)
+        if self.restart:
+            # NaN-safe acceptance: a NaN loss is a rejected step, and the
+            # stored loss must never become NaN (jnp.minimum would poison it)
+            ok = loss_next <= state["loss"]
+            w_out = jnp.where(ok, w_next, w)
+            w_prev_out = jnp.where(ok, w, w_out)  # reject -> zero momentum
+            loss_out = jnp.where(ok, loss_next, state["loss"])
+            # backtracking across rounds: halve the trust scale on reject,
+            # grow it back (capped at 1) on accept
+            scale_out = jnp.where(ok, jnp.minimum(scale * 2.0, 1.0),
+                                  jnp.maximum(scale * 0.5, 1.0 / 64.0))
+        else:
+            w_out, w_prev_out, loss_out = w_next, w, loss_next
+            scale_out = scale
+        return {"w": w_out, "w_prev": w_prev_out, "beta": beta,
+                "loss": loss_out, "scale": scale_out}
+
+    # Evaluated at the look-ahead point v (Algorithm 1 step 2 updates the
+    # gradient/Hessian at v_t before communication).
+    def _local_grads_at(self, problem, v):
+        return problem.local_grad(v)
+
+    def _local_hess_sqrt_at(self, problem, v):
+        return problem.local_hess_sqrt(v)
+
+    def uplink_floats(self, problem) -> int:
+        extra = 1 if self.restart else 0  # piggybacked local-loss scalar
+        if self.variant == "plus":
+            return self.k * self.k + self.k + problem.dim + extra
+        return self.k * self.k + self.k + extra
+
+    def downlink_floats(self, problem) -> int:
+        return problem.dim + 1  # model + sketch seed

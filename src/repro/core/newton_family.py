@@ -1,0 +1,205 @@
+"""Newton-type federated baselines from the paper's Table I.
+
+* FedNewton           — exact aggregated Hessian (O(M^2) uplink)
+* DistributedNewton   — GIANT-style averaged local-Newton directions
+* LocalNewton         — L local Newton iterations, average weights
+* FedNew              — one-pass ADMM direction (Elgabli et al. 2022)
+* FedNL               — rank-1 compressed Hessian learning (Safaryan 2022)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base import FederatedOptimizer, OptState
+from repro.core.federated import FederatedProblem
+
+
+class FedNewton(FederatedOptimizer):
+    """Exact federated Newton: aggregate full local Hessians + gradients."""
+
+    name = "fednewton"
+
+    def __init__(self, mu: float = 1.0):
+        self.mu = mu
+
+    def round(self, problem, state: OptState, key) -> OptState:
+        w = state["w"]
+        g = problem.global_grad(w)
+        h = problem.global_hessian(w)
+        return {"w": w - self.mu * jnp.linalg.solve(h, g)}
+
+    def uplink_floats(self, problem) -> int:
+        return problem.dim * problem.dim + problem.dim
+
+
+class DistributedNewton(FederatedOptimizer):
+    """GIANT-style (Ghosh et al. 2020): average of H_j^{-1} g_global.
+
+    Two-phase round: (1) clients upload local gradients, server broadcasts
+    the global gradient; (2) clients return local-Newton directions
+    H_j^{-1} g, server averages. Uplink 2M per round.
+    """
+
+    name = "distributed_newton"
+
+    def __init__(self, mu: float = 1.0):
+        self.mu = mu
+
+    def round(self, problem, state: OptState, key) -> OptState:
+        w = state["w"]
+        g = problem.global_grad(w)
+        hs = problem.local_hessian(w)  # (m, M, M)
+        dirs = jax.vmap(lambda h: jnp.linalg.solve(h, g))(hs)
+        p = problem.client_weights
+        d = jnp.einsum("j,jm->m", p, dirs)
+        return {"w": w - self.mu * d}
+
+    def uplink_floats(self, problem) -> int:
+        return 2 * problem.dim
+
+
+class LocalNewton(FederatedOptimizer):
+    """Gupta et al. 2021: L local Newton iterations, average the weights."""
+
+    name = "local_newton"
+
+    def __init__(self, mu: float = 1.0, local_iters: int = 2):
+        self.mu = mu
+        self.local_iters = local_iters
+
+    def round(self, problem, state: OptState, key) -> OptState:
+        w = state["w"]
+        eye = jnp.eye(problem.dim, dtype=problem.X.dtype)
+
+        def client(Xj, yj, mj):
+            nj = jnp.sum(mj)
+
+            def local_grad(wl):
+                if problem.objective.name == "logistic":
+                    margins = yj * (Xj @ wl)
+                    s = jax.nn.sigmoid(-margins) * mj
+                    return -(Xj.T @ (s * yj)) / nj + problem.lam * wl
+                r = (Xj @ wl - yj) * mj
+                return Xj.T @ r / nj + problem.lam * wl
+
+            def local_hess(wl):
+                if problem.objective.name == "logistic":
+                    margins = yj * (Xj @ wl)
+                    pr = jax.nn.sigmoid(margins)
+                    d = pr * (1 - pr) * mj
+                else:
+                    d = mj
+                return (Xj.T * d) @ Xj / nj + problem.lam * eye
+
+            def body(wl, _):
+                step = jnp.linalg.solve(local_hess(wl), local_grad(wl))
+                return wl - self.mu * step, None
+
+            wl, _ = jax.lax.scan(body, w, None, length=self.local_iters)
+            return wl
+
+        w_locals = jax.vmap(client)(problem.X, problem.y, problem.mask)
+        p = problem.client_weights
+        return {"w": jnp.einsum("j,jm->m", p, w_locals)}
+
+    def uplink_floats(self, problem) -> int:
+        return problem.dim
+
+
+class FedNew(FederatedOptimizer):
+    """Elgabli et al. 2022: one-pass ADMM for the Newton direction.
+
+    Clients maintain direction d_j and dual y_j; each round performs one
+    ADMM sweep on  min_d 0.5 d^T H_j d - g_j^T d  s.t. d_j = d_bar:
+        d_j   <- (H_j + rho I)^{-1} (g_j + rho d_bar - y_j)
+        d_bar <- weighted mean of d_j
+        y_j   <- y_j + alpha (d_j - d_bar)
+    and the server steps  w <- w - mu d_bar.
+    """
+
+    name = "fednew"
+
+    def __init__(self, mu: float = 1.0, rho: float = 0.1, alpha: float = 0.25):
+        self.mu = mu
+        self.rho = rho
+        self.alpha = alpha
+
+    def init(self, problem, w0):
+        m, dim = problem.m, problem.dim
+        return {
+            "w": w0,
+            "d_bar": jnp.zeros((dim,), w0.dtype),
+            "duals": jnp.zeros((m, dim), w0.dtype),
+        }
+
+    def round(self, problem, state: OptState, key) -> OptState:
+        w, d_bar, duals = state["w"], state["d_bar"], state["duals"]
+        gs = problem.local_grad(w)  # (m, M)
+        hs = problem.local_hessian(w)  # (m, M, M)
+        eye = jnp.eye(problem.dim, dtype=w.dtype)
+
+        def client(hj, gj, yj):
+            rhs = gj + self.rho * d_bar - yj
+            return jnp.linalg.solve(hj + self.rho * eye, rhs)
+
+        ds = jax.vmap(client)(hs, gs, duals)
+        p = problem.client_weights
+        d_new = jnp.einsum("j,jm->m", p, ds)
+        duals = duals + self.alpha * (ds - d_new[None])
+        return {"w": w - self.mu * d_new, "d_bar": d_new, "duals": duals}
+
+    def uplink_floats(self, problem) -> int:
+        return problem.dim
+
+
+class FedNL(FederatedOptimizer):
+    """Safaryan et al. 2022: compressed Hessian learning.
+
+    Server maintains a Hessian model B; clients send a rank-1 (top
+    eigenpair, by power iteration) compression of (H_j(w_t) - B_t) plus
+    their gradient; B is updated with the aggregated compressed
+    differences and the step uses (B + l_reg I)^{-1}.
+    """
+
+    name = "fednl"
+
+    def __init__(self, mu: float = 1.0, power_iters: int = 16, l_reg: float = 1e-3):
+        self.mu = mu
+        self.power_iters = power_iters
+        self.l_reg = l_reg
+
+    def init(self, problem, w0):
+        b0 = problem.global_hessian(w0)
+        return {"w": w0, "B": b0}
+
+    def _rank1_compress(self, delta: jax.Array, key: jax.Array) -> jax.Array:
+        """Top eigenpair of the symmetric difference via power iteration."""
+        dim = delta.shape[-1]
+        v = jax.random.normal(key, (dim,), delta.dtype)
+        v = v / jnp.linalg.norm(v)
+
+        def body(v, _):
+            v = delta @ v
+            return v / (jnp.linalg.norm(v) + 1e-30), None
+
+        v, _ = jax.lax.scan(body, v, None, length=self.power_iters)
+        lam = v @ (delta @ v)
+        return lam * jnp.outer(v, v)
+
+    def round(self, problem, state: OptState, key) -> OptState:
+        w, B = state["w"], state["B"]
+        g = problem.global_grad(w)
+        hs = problem.local_hessian(w)  # (m, M, M)
+        keys = jax.random.split(key, problem.m)
+        comps = jax.vmap(lambda h, k: self._rank1_compress(h - B, k))(hs, keys)
+        p = problem.client_weights
+        B = B + jnp.einsum("j,jab->ab", p, comps)
+        # PSD safeguard: project to symmetric + ridge
+        B = 0.5 * (B + B.T)
+        step = jnp.linalg.solve(B + self.l_reg * jnp.eye(problem.dim, dtype=w.dtype), g)
+        return {"w": w - self.mu * step, "B": B}
+
+    def uplink_floats(self, problem) -> int:
+        # rank-1 eigenpair (M + 1) + gradient (M)
+        return 2 * problem.dim + 1

@@ -1,0 +1,136 @@
+"""Sketch operators for Newton sketching (SRHT / Gaussian / SJLT).
+
+A sketch is a random linear map ``S : R^dim -> R^k`` (conceptually a
+``k x dim`` matrix) normalized so that ``E[S^T S / k] ~ I`` in the
+Gaussian/SJLT case and ``S S^T = (dim/k) I_k`` exactly for SRHT.
+
+The SRHT is ``S = sqrt(dim/k) * P * H_n * D`` restricted to the first
+``dim`` input coordinates, where ``n = next_pow2(dim)``, ``D`` is a
+diagonal Rademacher sign matrix, ``H_n`` the orthonormal Hadamard
+transform and ``P`` a uniform row sampler without replacement. Its
+application cost is O(n log n) per vector via the fast Walsh-Hadamard
+transform — the compute hot spot accelerated by the Pallas kernel in
+``repro.kernels.fwht``.
+
+All sketches are represented as small parameter pytrees plus pure apply
+functions, so they can live inside jitted/vmapped federated rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+SketchKind = Literal["srht", "gaussian", "sjlt"]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Sketch:
+    """A sampled sketch operator (one realization of S)."""
+
+    kind: str = dataclasses.field(metadata={"static": True})
+    k: int = dataclasses.field(metadata={"static": True})
+    dim: int = dataclasses.field(metadata={"static": True})
+    # srht: signs (n,), rows (k,) ; gaussian: mat (k, dim);
+    # sjlt: rows (s, dim) int32, signs (s, dim)
+    signs: jax.Array | None
+    rows: jax.Array | None
+    mat: jax.Array | None
+
+    # -- application ------------------------------------------------------
+    def apply(self, x: jax.Array) -> jax.Array:
+        """S @ x for x of shape (..., dim) -> (..., k)."""
+        if self.kind == "gaussian":
+            return x @ self.mat.T
+        if self.kind == "sjlt":
+            return x @ self.mat.T  # materialized sparse-as-dense (small dims)
+        # SRHT
+        n = self.signs.shape[-1]
+        pad = n - self.dim
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+        xp = xp * self.signs
+        h = kops.fwht(xp, normalize=True)
+        scale = jnp.sqrt(jnp.asarray(n / self.k, h.dtype))
+        return jnp.take(h, self.rows, axis=-1) * scale
+
+    def apply_t(self, y: jax.Array) -> jax.Array:
+        """S^T @ y for y of shape (..., k) -> (..., dim)."""
+        if self.kind in ("gaussian", "sjlt"):
+            return y @ self.mat
+        n = self.signs.shape[-1]
+        scale = jnp.sqrt(jnp.asarray(n / self.k, y.dtype))
+        z = jnp.zeros(y.shape[:-1] + (n,), y.dtype)
+        z = z.at[..., self.rows].set(y * scale)
+        h = kops.fwht(z, normalize=True)
+        h = h * self.signs
+        return h[..., : self.dim]
+
+    def dense(self) -> jax.Array:
+        """Materialize S as a (k, dim) matrix (tests / tiny dims)."""
+        return self.apply(jnp.eye(self.dim)).T
+
+
+def make_sketch(key: jax.Array, kind: SketchKind, k: int, dim: int,
+                dtype=jnp.float32, sjlt_nnz_per_col: int = 4) -> Sketch:
+    """Sample one sketch operator S in R^{k x dim}."""
+    if kind == "srht":
+        n = _next_pow2(dim)
+        ks, kr = jax.random.split(key)
+        signs = jax.random.rademacher(ks, (n,), dtype=dtype)
+        rows = jax.random.choice(kr, n, (k,), replace=False)
+        return Sketch(kind, k, dim, signs, rows, None)
+    if kind == "gaussian":
+        mat = jax.random.normal(key, (k, dim), dtype) / jnp.sqrt(
+            jnp.asarray(k, dtype)
+        )
+        return Sketch(kind, k, dim, None, None, mat)
+    if kind == "sjlt":
+        # s nonzeros per column, value ±1/sqrt(s); materialized dense for
+        # the small dims of the convex experiments.
+        s = min(sjlt_nnz_per_col, k)
+        kr, ks = jax.random.split(key)
+        rows = jax.random.randint(kr, (s, dim), 0, k)
+        signs = jax.random.rademacher(ks, (s, dim), dtype=dtype)
+        mat = jnp.zeros((k, dim), dtype)
+        cols = jnp.broadcast_to(jnp.arange(dim)[None, :], (s, dim))
+        mat = mat.at[rows.reshape(-1), cols.reshape(-1)].add(
+            signs.reshape(-1) / jnp.sqrt(jnp.asarray(s, dtype))
+        )
+        return Sketch(kind, k, dim, None, None, mat)
+    raise ValueError(f"unknown sketch kind {kind!r}")
+
+
+def sketch_psd(sketch: Sketch, h_mat: jax.Array) -> jax.Array:
+    """S H S^T (k, k) for symmetric H (dim, dim)."""
+    hs_t = sketch.apply(h_mat)          # (dim, k): row i is S @ H[i] == (H S^T)[i]
+    shs_t = sketch.apply(hs_t.T)        # (k, k):   row j is S @ (S H)[j] == (S H S^T)[j]
+    return 0.5 * (shs_t + shs_t.T)      # symmetrize against fp error
+
+
+def sketch_sqrt_rows(sketch: Sketch, a_mat: jax.Array) -> jax.Array:
+    """Left sketch of the Hessian square root: S @ A for A (n_rows, dim_feat).
+
+    FedNS-style: S acts on the *data* axis, so ``sketch.dim == n_rows``;
+    returns (k, dim_feat).
+    """
+    return sketch.apply(a_mat.T).T
+
+
+def effective_dimension(h_mat: jax.Array, lam: float) -> jax.Array:
+    """Empirical effective dimension d_lambda = tr(H (H + lam I)^-1)."""
+    evals = jnp.linalg.eigvalsh(h_mat)
+    evals = jnp.maximum(evals, 0.0)
+    return jnp.sum(evals / (evals + lam))

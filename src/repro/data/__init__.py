@@ -1,0 +1,2 @@
+"""Data pipeline: synthetic LIBSVM twins, federated partitioners, LM streams."""
+from repro.data.libsvm_like import PAPER_DATASETS, DatasetSpec, load, make_classification

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: grouped-query flash attention (online softmax).
+
+Blocking: grid = (batch, q_heads, nQ, nK); the KV loop is the innermost
+(sequential) grid dimension, accumulating into VMEM scratch
+(acc (bq, d) f32, running max / denom (bq,)). GQA is handled in the
+BlockSpec index maps (kv head = q head // group) — no KV expansion in
+HBM. Causal + sliding-window masks are applied from absolute block
+positions; out-of-range KV blocks contribute zero via the mask (TPU grid
+cannot skip blocks — the §Perf log quantifies what block-skipping would
+save).
+
+Mirrors ``repro.kernels.ref.mha_blocked`` (the oracle used in tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0**30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               bq: int, bk: int, nk: int, tk_valid: int, causal: bool,
+               window: int | None, q_offset: int, scale: float):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (bq, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+    qpos = q_offset + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < tk_valid
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None and window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, Tq, H, D)
+    k: jax.Array,  # (B, Tk, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    group = h // hkv
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    pad_q = (-tq) % block_q
+    pad_k = (-tk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        # padded keys are masked in-kernel via kpos < tk_valid
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq = q.shape[1] // block_q
+    nk = k.shape[1] // block_k
+
+    kernel = functools.partial(
+        _fa_kernel, bq=block_q, bk=block_k, nk=nk, tk_valid=tk,
+        causal=causal, window=window, q_offset=q_offset, scale=1.0 / d**0.5,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda b_, h_, iq, ik, g=group: (b_, ik, h_ // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda b_, h_, iq, ik, g=group: (b_, ik, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pad_q:
+        out = out[:, :tq]
+    return out

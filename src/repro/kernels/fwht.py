@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: Fast Walsh-Hadamard Transform (the SRHT hot loop).
+
+TPU adaptation (DESIGN.md §3): instead of emulating the GPU butterfly
+(warp shuffles) on the VPU, the length-N transform is factored as
+
+    H_N = (H_A (x) I_B) . (I_A (x) H_B),      N = A * B
+
+so a row reshaped to (A, B) is transformed by two *dense matmuls* with
+small Hadamard matrices:  Y = H_A @ X @ H_B. Both factors are <=128 wide,
+i.e. exactly MXU-shaped. Rows are tiled into VMEM blocks; the Hadamard
+factors ride along as (tiny) kernel inputs.
+
+Validated against ``repro.kernels.ref.fwht`` in interpret mode (CPU) by
+``tests/test_kernels_fwht.py``; compiled path targets TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import hadamard_matrix
+
+
+def _factor(n: int) -> tuple[int, int]:
+    """n = a * b with both <= 128 when possible (n a power of two)."""
+    assert n & (n - 1) == 0 and n > 0, n
+    b = min(n, 128)
+    a = n // b
+    while a > 128:  # n > 16384: grow b beyond 128 (still a power of 2)
+        b *= 2
+        a = n // b
+    return a, b
+
+
+def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, a: int, b: int, norm: float):
+    rows = x_ref.shape[0]
+    x = x_ref[...].astype(jnp.float32).reshape(rows, a, b)
+    ha = ha_ref[...].astype(jnp.float32)  # (a, a)
+    hb = hb_ref[...].astype(jnp.float32)  # (b, b)
+    # Y = H_A @ X @ H_B per row: einsum over the two small factors
+    y = jax.lax.dot_general(x, hb, (((2,), (0,)), ((), ())))  # (rows, a, b)
+    y = jnp.einsum("rab,ca->rcb", y, ha)
+    o_ref[...] = (y.reshape(rows, a * b) * norm).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("normalize", "block_rows", "interpret"))
+def fwht_pallas(x: jax.Array, *, normalize: bool = False, block_rows: int = 8,
+                interpret: bool = False) -> jax.Array:
+    """WHT along the last axis. x (..., N), N a power of two."""
+    orig_shape = x.shape
+    n = orig_shape[-1]
+    a, b = _factor(n)
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    xm = x.reshape(rows, n)
+    pad = (-rows) % block_rows
+    if pad:
+        xm = jnp.pad(xm, ((0, pad), (0, 0)))
+    ha = hadamard_matrix(a, jnp.float32)
+    hb = hadamard_matrix(b, jnp.float32)
+    norm = (1.0 / n**0.5) if normalize else 1.0
+
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, a=a, b=b, norm=norm),
+        grid=(xm.shape[0] // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xm.shape, x.dtype),
+        interpret=interpret,
+    )(xm, ha, hb)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,69 @@
+"""Jit'd public wrappers around the Pallas kernels with reference fallback.
+
+``impl`` selection:
+  * "auto"      — Pallas on TPU, reference elsewhere (CPU container → ref)
+  * "pallas"    — force the Pallas kernel (compiled; TPU only)
+  * "interpret" — Pallas kernel body interpreted on CPU (used by tests)
+  * "reference" — pure-jnp oracle from ``repro.kernels.ref``
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("normalize", "impl"))
+def fwht(x: jax.Array, *, normalize: bool = False, impl: str = "auto") -> jax.Array:
+    """Walsh-Hadamard transform along the last axis."""
+    if impl == "reference" or (impl == "auto" and not _on_tpu()):
+        return ref.fwht(x, normalize=normalize)
+    from repro.kernels import fwht as fwht_kernel
+
+    return fwht_kernel.fwht_pallas(
+        x, normalize=normalize, interpret=(impl == "interpret")
+    )
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,  # None | int | traced scalar (per-layer metadata)
+    q_offset: int = 0,
+    impl: str = "auto",
+    block_q: int = 512,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Grouped-query flash attention, (B, T, H, D) layout.
+
+    Not jitted here (callers jit the whole step); ``window`` may be a
+    traced scalar so it cannot be a static argument.
+    """
+    if impl == "reference" or (impl == "auto" and not _on_tpu()):
+        return ref.mha_blocked(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            block_q=block_q, block_k=block_k,
+        )
+    from repro.kernels import flash_attention as fa
+
+    return fa.flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        block_q=min(block_q, 128),
+        block_k=min(block_k, 128),
+        interpret=(impl == "interpret"),
+    )

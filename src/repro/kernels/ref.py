@@ -1,0 +1,183 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the ground-truth implementation used by
+``tests/test_kernels_*.py`` to validate the Pallas kernels (run with
+``interpret=True`` on CPU) and as the portable fallback selected by
+``repro.kernels.ops`` when not running on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Fast Walsh-Hadamard transform (the SRHT hot loop)
+# ---------------------------------------------------------------------------
+
+def fwht(x: jax.Array, *, normalize: bool = False) -> jax.Array:
+    """Walsh-Hadamard transform along the last axis (length power of two).
+
+    Iterative butterfly: log2(n) stages of pairwise add/sub. ``normalize``
+    scales by 1/sqrt(n) so the transform is orthonormal.
+    """
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"FWHT length must be a power of two, got {n}")
+    orig_shape = x.shape
+    y = x.reshape((-1, n))
+    h = 1
+    while h < n:
+        y = y.reshape((y.shape[0], n // (2 * h), 2, h))
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    y = y.reshape(orig_shape)
+    if normalize:
+        y = y * (1.0 / jnp.sqrt(jnp.asarray(n, dtype=x.dtype)))
+    return y
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Dense (unnormalized) Hadamard matrix of size n (power of two)."""
+    if n & (n - 1):
+        raise ValueError(f"Hadamard size must be a power of two, got {n}")
+    h = jnp.array([[1.0]], dtype=dtype)
+    while h.shape[0] < n:
+        h = jnp.block([[h, h], [h, -h]])
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (blocked online-softmax) oracle
+# ---------------------------------------------------------------------------
+
+def mha(
+    q: jax.Array,  # (B, Tq, H, D)
+    k: jax.Array,  # (B, Tk, Hkv, D)
+    v: jax.Array,  # (B, Tk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference grouped-query attention.
+
+    ``window`` limits attention to the last ``window`` keys (sliding
+    window); ``q_offset`` is the absolute position of q[0] (for decode).
+    """
+    b, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads
+    kf = jnp.repeat(kf, group, axis=2)
+    vf = jnp.repeat(vf, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    qpos = jnp.arange(tq)[:, None] + q_offset
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # rows that are fully masked produce NaN from softmax(-inf); zero them
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def mha_blocked(
+    q: jax.Array,  # (B, Tq, H, D)
+    k: jax.Array,  # (B, Tk, Hkv, D)
+    v: jax.Array,  # (B, Tk, Hkv, D)
+    *,
+    causal: bool = True,
+    window=None,  # None | int | traced scalar (<=0 means "no window")
+    q_offset: int = 0,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Online-softmax blocked attention: O(T) memory, flash-attention math.
+
+    This is both (a) the memory-sane attention used by every model at
+    train/prefill time and (b) the structural mirror of the Pallas TPU
+    kernel in ``repro.kernels.flash_attention`` (same two-level blocking).
+    """
+    b, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    pad_q = (-tq) % block_q
+    pad_k = (-tk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+
+    qf = (qp.astype(jnp.float32) * scale).reshape(b, nq, block_q, hkv, group, d)
+    kf = kp.astype(jnp.float32).reshape(b, nk, block_k, hkv, d)
+    vf = vp.astype(jnp.float32).reshape(b, nk, block_k, hkv, d)
+    q_valid = jnp.arange(nq * block_q) < tq
+    k_valid = jnp.arange(nk * block_k) < tk
+
+    def attend_batch(qb, kb, vb):
+        # qb (nq, bq, hkv, g, d); kb/vb (nk, bk, hkv, d)
+        def per_q(qi, qblk):
+            qpos = q_offset + qi * block_q + jnp.arange(block_q)
+
+            def kv_step(carry, xs):
+                acc, mx, denom = carry
+                kblk, vblk, ki = xs
+                kpos = ki * block_k + jnp.arange(block_k)
+                logits = jnp.einsum("qhgd,shd->hgqs", qblk, kblk)
+                msk = jnp.broadcast_to(
+                    k_valid[ki * block_k + jnp.arange(block_k)][None, :],
+                    (block_q, block_k),
+                )
+                if causal:
+                    msk = msk & (kpos[None, :] <= qpos[:, None])
+                if window is not None:
+                    w = jnp.asarray(window)
+                    msk = msk & jnp.where(
+                        w > 0, kpos[None, :] > qpos[:, None] - w, True
+                    )
+                logits = jnp.where(msk[None, None], logits, -2.0**30)
+                new_mx = jnp.maximum(mx, jnp.max(logits, axis=-1))
+                alpha = jnp.exp(mx - new_mx)
+                p = jnp.exp(logits - new_mx[..., None])
+                denom = denom * alpha + jnp.sum(p, axis=-1)
+                acc = acc * alpha[..., None] + jnp.einsum(
+                    "hgqs,shd->hgqd", p, vblk
+                )
+                return (acc, new_mx, denom), None
+
+            acc0 = jnp.zeros((hkv, group, block_q, d), jnp.float32)
+            mx0 = jnp.full((hkv, group, block_q), -jnp.inf)
+            d0 = jnp.zeros((hkv, group, block_q), jnp.float32)
+            (acc, mx, denom), _ = jax.lax.scan(
+                kv_step, (acc0, mx0, d0), (kb, vb, jnp.arange(nk))
+            )
+            return acc / jnp.maximum(denom[..., None], 1e-30)
+
+        return jax.vmap(per_q)(jnp.arange(nq), qb)
+
+    out = jax.vmap(attend_batch)(qf, kf, vf)  # (b, nq, hkv, g, bq, d)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, nq * block_q, h, d)
+    out = out[:, :tq]
+    return out.astype(q.dtype)

@@ -1,0 +1,92 @@
+"""Parse compiled HLO text for roofline inputs.
+
+``collective_bytes(hlo_text)`` sums the result-shape bytes of every
+communication op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute) — the quantity the ICI roofline term divides by link
+bandwidth. ``op_histogram`` supports the §Perf iteration loop (spotting
+redundant collectives / remat recompute).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %ag = bf16[16,1024,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[0-9,]*\][^ ]*\s*,?\s*)+)\s*"
+    r"((?:%?[\w-]+)?(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)[\w-]*)\("
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-kind {count, bytes} + total bytes for collective ops."""
+    stats = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result shapes appear before '=' ... find 'kind(' occurrence
+        m = None
+        for kind in _COLLECTIVES:
+            # match ops like "all-reduce(", "all-gather-start(", fusions excluded
+            if re.search(rf"\b{kind}(?:-start|-done)?\(", stripped):
+                m = kind
+                break
+        if m is None:
+            continue
+        if f"{m}-done" in stripped:
+            continue  # bytes counted at -start
+        lhs = stripped.split("=", 1)
+        if len(lhs) != 2:
+            continue
+        # result shape(s) precede the op name on the rhs
+        rhs = lhs[1]
+        op_pos = rhs.find(m)
+        shape_part = rhs[:op_pos]
+        nbytes = _shape_bytes(shape_part)
+        stats[m]["count"] += 1
+        stats[m]["bytes"] += nbytes
+    total = sum(v["bytes"] for v in stats.values())
+    return {"per_kind": dict(stats), "total_bytes": total}
+
+
+def op_histogram(hlo_text: str, top: int = 25) -> list[tuple[str, int]]:
+    """Histogram of HLO opcode occurrences (debug aid for §Perf)."""
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        m = re.search(r"\b([a-z][a-z0-9-]*)\(", rhs)
+        if m:
+            counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,298 @@
+"""ShapeDtypeStruct stand-ins + sharding trees per (arch x input shape).
+
+``build(arch, shape, mesh)`` returns a ``LoweringSpec``:
+  * ``fn``            — the step function to lower (train/prefill/serve)
+  * ``args``          — ShapeDtypeStruct pytrees (no device allocation)
+  * ``in_shardings`` / ``out_shardings`` — NamedSharding pytrees
+plus bookkeeping (param count, model-FLOPs estimate) for §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.models.lm import LM
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.sharding import rules
+from repro.sharding.ctx import use_mesh
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    n_params: int
+    n_active_params: int
+    model_flops: float  # 6*N*D per step (MoE: active params)
+    donate_argnums: tuple = ()
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _count_params(shapes_tree) -> int:
+    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes_tree)))
+
+
+def _active_params(cfg, params_shape) -> int:
+    """Params touched per token (MoE: top_k of n_experts + the rest)."""
+    total = _count_params(params_shape)
+    if not cfg.n_experts:
+        return total
+    expert_total = 0
+    gi = 1 if cfg.first_k_dense else 0
+    for key, sub in params_shape.items():
+        if not key.startswith("group"):
+            continue
+        if isinstance(sub, dict) and "moe" in sub:
+            for nm in ("w_gate", "w_up", "w_down"):
+                expert_total += int(np.prod(sub["moe"][nm].shape))
+    active_frac = cfg.top_k / cfg.n_experts
+    return int(total - expert_total + expert_total * active_frac)
+
+
+def _batch_struct(cfg, b, t, *, train: bool):
+    batch = {
+        "inputs": jax.ShapeDtypeStruct((b, t), jnp.int32),
+    }
+    if train:
+        batch["labels"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    if cfg.family == "vlm":
+        batch["vision"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.vision_dim), jnp.float32
+        )
+    if cfg.family == "audio":
+        batch["audio_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.audio_frames, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+def _serving_param_shardings(mesh, params_shape, param_sh, n_params):
+    """Serving layout policy (§Perf hillclimb 2).
+
+    At decode/prefill there is no optimizer state and weights are reused
+    every step, so FSDP ("data"-axis) weight sharding only buys per-step
+    all-gathers. If the model-parallel-only footprint fits comfortably
+    (< 4 GB/chip), strip the fsdp axis (weight-stationary serving). The
+    vocab table additionally drops its d_model sharding always — the
+    unembed of a single token otherwise all-gathers the whole table.
+    """
+    import dataclasses as _dc
+
+    # Measured (§Perf): stripping FSDP from *all* weights at decode trades
+    # per-step all-gathers for 16x more per-device HBM weight reads — a net
+    # regression for small-weight archs (mamba2 decode 0.8ms -> 1.7ms).
+    # Only the vocab table (whose d_model-sharded contraction makes XLA
+    # gather the whole table per step) keeps the replicated-D layout.
+    strip_fsdp = False
+
+    def fix(path, leaf, sh):
+        names = rules._path_names(path)
+        spec = list(sh.spec)
+        # expert weights flip to the F-sharded decode layout so the MoE
+        # decode path (activation-gather, moe.py) sees zero weight movement:
+        # (E, D, F): (model, None, data);  (E, F, D): (model, data, None)
+        if (len(names) >= 2 and names[-2] == "moe"
+                and names[-1] in ("w_gate", "w_up", "w_down")):
+            lead = [None] * (len(leaf.shape) - 3)
+            if names[-1] == "w_down":
+                return NamedSharding(mesh, rules._guard(
+                    mesh, leaf.shape, tuple(lead) + ("model", "data", None)))
+            return NamedSharding(mesh, rules._guard(
+                mesh, leaf.shape, tuple(lead) + ("model", None, "data")))
+        is_table = names and names[-1] in ("table", "lm_head")
+        # replicate the table's d_model dim only when the vocab dim IS
+        # model-sharded (otherwise the baseline D-sharded layout already
+        # psums small logit partials and replication just adds HBM reads)
+        vocab_sharded = any(ax == "model" or (isinstance(ax, tuple) and
+                                              "model" in ax) for ax in spec)
+        if (is_table and vocab_sharded) or strip_fsdp:
+            spec = [
+                (None if ax == "data" or (isinstance(ax, tuple) and "data" in ax)
+                 else ax)
+                for ax in spec
+            ]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(fix, params_shape, param_sh)
+
+
+def build(arch: str, shape_name: str, mesh: Mesh, *,
+          lr: float = 3e-4, opt_state_dtype=None) -> LoweringSpec:
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    model = LM(cfg)
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n_params = _count_params(params_shape)
+    n_active = _active_params(cfg, params_shape)
+    param_sh = rules.tree_shardings(mesh, params_shape, rules.param_spec)
+    if shp.kind == "decode":
+        # prefill keeps FSDP (it is train-like: weight reads amortize over
+        # the whole sequence — measured regression when stripped, §Perf)
+        param_sh = _serving_param_shardings(mesh, params_shape, param_sh,
+                                            n_params)
+
+    if opt_state_dtype is None:
+        # fp32 moments unless the model cannot fit them (1T-class MoE)
+        opt_state_dtype = jnp.bfloat16 if n_params > 3e11 else jnp.float32
+
+    if shp.kind == "train":
+        import os as _os
+
+        b, t = shp.global_batch, shp.seq_len
+        micro = int(_os.environ.get("REPRO_MICROBATCH", "1"))
+        zero_pod = _os.environ.get("REPRO_ZERO_POD", "0") == "1"
+        batch = _batch_struct(cfg, b, t, train=True)
+        batch_sh = jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(mesh, rules.batch_spec(mesh, p, l)), batch
+        )
+        opt_shape = jax.eval_shape(
+            lambda p: adamw_init(p, state_dtype=opt_state_dtype), params_shape
+        )
+        moments_sh = param_sh
+        if zero_pod and "pod" in mesh.axis_names:
+            # ZeRO-1 over the pod axis: optimizer moments sharded one level
+            # deeper than the params (update gathers them implicitly)
+            def pod_spec(path, leaf):
+                base = rules.param_spec(mesh, path, leaf)
+                spec = list(base) + [None] * (len(leaf.shape) - len(base))
+                for i, ax in enumerate(spec):
+                    if ax is None and leaf.shape[i] % mesh.shape["pod"] == 0:
+                        spec[i] = "pod"
+                        break
+                    if isinstance(ax, str) and ax != "pod":
+                        cand = (ax, "pod")
+                        if leaf.shape[i] % (
+                            mesh.shape[ax] * mesh.shape["pod"]) == 0:
+                            spec[i] = cand
+                            break
+                while spec and spec[-1] is None:
+                    spec.pop()
+                return P(*spec)
+
+            moments_sh = jax.tree_util.tree_map_with_path(
+                lambda p, l: NamedSharding(mesh, pod_spec(p, l)), params_shape
+            )
+        opt_sh = {
+            "m": moments_sh,
+            "v": moments_sh,
+            "step": NamedSharding(mesh, P()),
+        }
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p, mb):
+                return model.loss(p, mb)
+
+            if micro == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                # gradient accumulation: scan over microbatches, grads
+                # accumulated in the param dtype (memory-bound regime)
+                def split(x):
+                    return x.reshape((micro, x.shape[0] // micro) + x.shape[1:])
+
+                mbs = jax.tree.map(split, batch)
+
+                def micro_step(acc, mb):
+                    (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, mb)
+                    acc = jax.tree.map(
+                        lambda a, gg: a + gg.astype(a.dtype), acc, g)
+                    return acc, (l, m["ce"], m["aux"])
+
+                acc0 = jax.tree.map(jnp.zeros_like, params)
+                grads, (ls, ces, auxs) = jax.lax.scan(micro_step, acc0, mbs)
+                grads = jax.tree.map(lambda g: g / micro, grads)
+                loss = jnp.mean(ls)
+                metrics = {"ce": jnp.mean(ces), "aux": jnp.mean(auxs)}
+            new_params, new_opt, gnorm = adamw_update(
+                params, grads, opt_state, lr=lr
+            )
+            out_metrics = {
+                "loss": loss, "ce": metrics["ce"], "aux": metrics["aux"],
+                "grad_norm": gnorm,
+            }
+            return new_params, new_opt, out_metrics
+
+        rep = NamedSharding(mesh, P())
+        metrics_sh = {"loss": rep, "ce": rep, "aux": rep, "grad_norm": rep}
+        # model fwd+bwd flops: ~6 * active params * tokens
+        flops = 6.0 * n_active * b * t
+        return LoweringSpec(
+            arch, shape_name, train_step,
+            (params_shape, opt_shape, batch),
+            (param_sh, opt_sh, batch_sh),
+            (param_sh, opt_sh, metrics_sh),
+            n_params, n_active, flops,
+            donate_argnums=(0, 1),
+        )
+
+    if shp.kind == "prefill":
+        b, t = shp.global_batch, shp.seq_len
+        batch = _batch_struct(cfg, b, t, train=False)
+        batch_sh = jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(mesh, rules.batch_spec(mesh, p, l)), batch
+        )
+
+        def prefill(params, batch):
+            return model.prefill(params, batch)
+
+        with use_mesh(mesh):
+            out_shape = jax.eval_shape(prefill, params_shape, batch)
+        logits_sh = NamedSharding(mesh, rules._guard(
+            mesh, out_shape[0].shape, ("data", "model"))
+        )
+        state_sh = rules.tree_shardings(
+            mesh, out_shape[1], rules.state_spec, batch=b
+        )
+        flops = 2.0 * n_active * b * t  # forward only
+        return LoweringSpec(
+            arch, shape_name, prefill,
+            (params_shape, batch),
+            (param_sh, batch_sh),
+            (logits_sh, state_sh),
+            n_params, n_active, flops,
+        )
+
+    # decode
+    b, s = shp.global_batch, shp.seq_len
+    state_shape = jax.eval_shape(
+        lambda: model.init_decode_state(b, s, index=s - 1)
+    )
+    state_sh = rules.tree_shardings(mesh, state_shape, rules.state_spec, batch=b)
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tokens_sh = NamedSharding(mesh, rules._guard(mesh, (b, 1), ("data", None)))
+
+    def serve_step(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+
+    with use_mesh(mesh):
+        out_shape = jax.eval_shape(serve_step, params_shape, state_shape, tokens)
+    logits_sh = NamedSharding(
+        mesh, rules._guard(mesh, out_shape[0].shape, ("data", "model"))
+    )
+    flops = 2.0 * n_active * b * 1
+    return LoweringSpec(
+        arch, shape_name, serve_step,
+        (params_shape, state_shape, tokens),
+        (param_sh, state_sh, tokens_sh),
+        (logits_sh, state_sh),
+        n_params, n_active, flops,
+        donate_argnums=(1,),
+    )

@@ -1,0 +1,19 @@
+"""Mesh factories (functions, not module constants — importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Production TPU v5e meshes: 16x16 per pod; 2 pods when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, pods: int = 0):
+    """Small forced-host-device mesh for sharding tests."""
+    if pods:
+        return jax.make_mesh((pods, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,107 @@
+"""Training launcher (CPU-runnable end-to-end; mesh-aware when available).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import get_config
+from repro.data.lm_stream import FastLMStream
+from repro.models.lm import LM
+from repro.optim import adamw_init, adamw_update, linear_warmup_cosine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--n-layers", type=int, default=None)
+    ap.add_argument("--vocab", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        overrides = {}
+        if args.d_model:
+            overrides["d_model"] = args.d_model
+        if args.n_layers:
+            overrides["n_layers"] = args.n_layers
+        if args.vocab:
+            overrides["vocab"] = args.vocab
+        cfg = cfg.reduced(**overrides)
+    model = LM(cfg)
+
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt_state = adamw_init(params)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.arch_id} params={n_params/1e6:.1f}M "
+          f"layers={cfg.n_layers} d={cfg.d_model} vocab={cfg.vocab}")
+
+    start = 0
+    if args.ckpt_dir:
+        st = latest_step(args.ckpt_dir)
+        if st is not None:
+            params = restore(args.ckpt_dir, st, params)
+            opt_state = restore(args.ckpt_dir + "/opt", st, opt_state)
+            start = st
+            print(f"restored step {st}")
+
+    @jax.jit
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr = linear_warmup_cosine(step, base_lr=args.lr, warmup_steps=20,
+                                  total_steps=args.steps)
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt_state, lr=lr)
+        return new_params, new_opt, loss, metrics["ce"], gnorm
+
+    stream = FastLMStream(cfg.vocab, args.seq, args.batch, seed=args.seed)
+    t0 = time.perf_counter()
+    losses = []
+    for step, batch in enumerate(stream.batches(args.steps - start), start=start):
+        params, opt_state, loss, ce, gnorm = train_step(
+            params, opt_state, batch, jnp.asarray(step, jnp.float32)
+        )
+        losses.append(float(ce))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            tps = (step - start + 1) * args.batch * args.seq / (
+                time.perf_counter() - t0
+            )
+            print(f"step {step:5d}  ce={float(ce):.4f}  "
+                  f"gnorm={float(gnorm):.3f}  tok/s={tps:,.0f}", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save(args.ckpt_dir, step + 1, params)
+            save(args.ckpt_dir + "/opt", step + 1, opt_state)
+
+    if args.ckpt_dir:
+        save(args.ckpt_dir, args.steps, params)
+        save(args.ckpt_dir + "/opt", args.steps, opt_state)
+    first = np.mean(losses[:10]) if len(losses) >= 10 else losses[0]
+    last = np.mean(losses[-10:])
+    print(f"ce first10={first:.4f} last10={last:.4f} "
+          f"improvement={(first - last):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,235 @@
+"""Grouped-query attention with RoPE, sliding windows, KV caches, cross-attn.
+
+Three entry points:
+  * ``attn_full``   — full-sequence self-attention (train / prefill)
+  * ``attn_decode`` — one-token step against a (possibly ring-buffer) cache
+  * ``attn_cross``  — cross-attention over precomputed memory (VLM/whisper)
+
+Caches store absolute positions per slot (``pos``, -1 = empty), which
+uniformly supports full-length caches and right-sized ring buffers for
+sliding-window layers (cache_mode="rightsized").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.common import ModelConfig, dense_init, residual_out_init, rmsnorm
+from repro.sharding.ctx import BATCH, MODEL, shard
+
+NEG_INF = -2.0**30  # large-negative instead of -inf: keeps masked softmax NaN-free
+
+
+def attention_init(key, cfg: ModelConfig, *, d_kv_in: int | None = None):
+    """QKV + output projection params. d_kv_in: cross-attn memory width."""
+    d_kv_in = d_kv_in or cfg.d_model
+    h, hkv, dh, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, cfg, shape=(d, h, dh)),
+        "wk": dense_init(ks[1], d_kv_in, hkv * dh, cfg, shape=(d_kv_in, hkv, dh), fan_in=d_kv_in),
+        "wv": dense_init(ks[2], d_kv_in, hkv * dh, cfg, shape=(d_kv_in, hkv, dh), fan_in=d_kv_in),
+        "wo": residual_out_init(ks[3], h * dh, d, cfg, shape=(h, dh, d), fan_in=h * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), cfg.param_dtype)
+        p["bk"] = jnp.zeros((hkv, dh), cfg.param_dtype)
+        p["bv"] = jnp.zeros((hkv, dh), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((dh,), cfg.param_dtype)}
+        p["k_norm"] = {"scale": jnp.zeros((dh,), cfg.param_dtype)}
+    return p
+
+
+def rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """Rotary embedding. x (..., T, H, Dh), positions (T,) or (B, T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq_exp = jnp.arange(0, half, dtype=jnp.float32) / half
+    inv_freq = theta ** (-freq_exp)  # (half,) ; theta may be traced
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., T, half)
+    if angles.ndim == 2:  # (T, half) -> broadcast over batch later
+        angles = angles[None]
+    cos = jnp.cos(angles)[..., None, :]  # (B?, T, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _qkv(params, x, kv_x, cfg):
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", kv_x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", kv_x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    return q, k, v
+
+
+def _out(params, o, dtype):
+    return jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(dtype))
+
+
+def attn_full(
+    params,
+    x: jax.Array,  # (B, T, D)
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window=None,  # None | int | traced scalar (per-layer meta)
+    theta=None,
+    positions: jax.Array | None = None,
+) -> jax.Array:
+    """Full-sequence self-attention (training / prefill)."""
+    b, t, d = x.shape
+    theta = cfg.rope_theta if theta is None else theta
+    if positions is None:
+        positions = jnp.arange(t)
+    q, k, v = _qkv(params, x, x, cfg)
+    if theta is not None:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    q = shard(q, BATCH, None, MODEL, None)
+    k = shard(k, BATCH, None, MODEL, None)
+    v = shard(v, BATCH, None, MODEL, None)
+
+    # Blocked online-softmax attention: O(T) memory (flash-attention math;
+    # Pallas kernel on TPU, pure-jnp blocked reference elsewhere).
+    o = kops.flash_attention(q, k, v, causal=causal, window=window)
+    o = shard(o, BATCH, None, MODEL, None)
+    return _out(params, o, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ModelConfig, n_layers: int, batch: int, length: int,
+               dtype=None):
+    """Stacked (per-layer) attention cache with per-slot absolute positions.
+
+    ``pos`` is per batch row ((L, B, S)) so every sequence in the batch may
+    sit at a different decode index — the contract continuous batching
+    (serving/engine.py) relies on.
+    """
+    dtype = dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((n_layers, batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_layers, batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((n_layers, batch, length), -1, jnp.int32),
+    }
+
+
+def attn_decode(
+    params,
+    x: jax.Array,  # (B, 1, D)
+    layer_cache,  # {"k": (B,S,Hkv,Dh), "v": ..., "pos": (B,S)} — one layer
+    index,  # int32 scalar OR (B,): per-sequence absolute position
+    cfg: ModelConfig,
+    *,
+    window=None,
+    theta=None,
+):
+    """One decode step. Returns (out (B,1,D), updated layer_cache).
+
+    ``index`` may differ per batch row (continuous batching).
+    """
+    b = x.shape[0]
+    theta = cfg.rope_theta if theta is None else theta
+    idx = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(index, jnp.int32)), (b,))
+    pos = idx[:, None]  # (B, 1) positions for rope
+    q, k_new, v_new = _qkv(params, x, x, cfg)
+    if theta is not None:
+        q = rope(q, pos, theta)
+        k_new = rope(k_new, pos, theta)
+
+    s_cache = layer_cache["k"].shape[1]
+    slot = jnp.mod(idx, s_cache)  # (B,)
+    # One-hot (elementwise) cache write instead of dynamic_update_slice:
+    # DUS at a dynamic index on a sharded sequence dim forces XLA SPMD to
+    # re-materialize the cache through cache-sized collectives every step;
+    # a where() with a local iota mask partitions with ZERO collectives
+    # (§Perf hillclimb 1 — collective term 3.84s -> ms-scale on qwen
+    # decode_32k). The extra full-cache write is fused by XLA.
+    hot = (jnp.arange(s_cache, dtype=jnp.int32)[None, :] == slot[:, None])  # (B,S)
+    k = jnp.where(hot[:, :, None, None], k_new.astype(layer_cache["k"].dtype),
+                  layer_cache["k"])
+    v = jnp.where(hot[:, :, None, None], v_new.astype(layer_cache["v"].dtype),
+                  layer_cache["v"])
+    pos_arr = jnp.where(hot, idx[:, None], layer_cache["pos"])  # (B,S)
+
+    # Sequence-parallel decode attention: everything downstream of the
+    # cache follows the cache's SEQ sharding (batch -> data when b > 1;
+    # seq -> model, or (data, model) for batch=1 long-context). Without
+    # these constraints XLA reshards the (B, H, 1, S) logits between the
+    # two einsums — cache-sized collectives per layer (§Perf hillclimb 1).
+    from repro.sharding.ctx import axis_size
+
+    batch_ax = BATCH if b >= max(axis_size("data"), 2) else None
+    seq_ax = MODEL if batch_ax is not None else ("data", MODEL)
+    group = cfg.n_heads // cfg.n_kv_heads
+    q = shard(q, batch_ax, None, None, None)  # replicated over model
+    qg = q.reshape(b, 1, cfg.n_kv_heads, group, cfg.head_dim)
+    scale = cfg.head_dim**-0.5
+    # keep the (huge) cache operands in their storage dtype and accumulate
+    # in f32 via preferred_element_type — an explicit .astype(f32) makes
+    # XLA hoist a convert of the ENTIRE stacked cache out of the layer
+    # loop (2 x 86 GB material on qwen decode_32k; §Perf hillclimb 1)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs",
+                        (qg * scale).astype(k.dtype), k,
+                        preferred_element_type=jnp.float32)
+    logits = shard(logits, batch_ax, None, None, None, seq_ax)
+    valid = (pos_arr >= 0) & (pos_arr <= idx[:, None])  # (B, S)
+    if window is not None:
+        w = jnp.asarray(window)
+        valid &= jnp.where(w > 0, pos_arr > (idx[:, None] - w), True)
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = shard(probs, batch_ax, None, None, None, seq_ax)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", probs.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, cfg.n_heads, cfg.head_dim).astype(x.dtype)
+    o = shard(o, batch_ax, None, None, None)
+    out = _out(params, o, x.dtype)
+    return out, {"k": k, "v": v, "pos": pos_arr}
+
+
+def attn_cross(
+    params,
+    x: jax.Array,  # (B, T, D) queries
+    memory_kv,  # precomputed {"k": (B,S,Hkv,Dh), "v": ...} or raw memory (B,S,Dm)
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Cross-attention over encoder/vision memory (non-causal, no rope)."""
+    b, t, d = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+    k, v = memory_kv["k"], memory_kv["v"]
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, t, cfg.n_kv_heads, group, cfg.head_dim)
+    scale = cfg.head_dim**-0.5
+    logits = jnp.einsum("bqhgk,bshk->bhgqs",
+                        (qg * scale).astype(jnp.float32), k.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", probs, v.astype(jnp.float32))
+    o = o.reshape(b, t, cfg.n_heads, cfg.head_dim).astype(x.dtype)
+    return _out(params, o, x.dtype)
+
+
+def cross_kv(params, memory: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from memory (B, S, Dm)."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"].astype(memory.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"].astype(memory.dtype))
+    if "bk" in params:
+        k = k + params["bk"].astype(memory.dtype)
+        v = v + params["bv"].astype(memory.dtype)
+    if "k_norm" in params:
+        k = rmsnorm(params["k_norm"], k)
+    return {"k": k, "v": v}

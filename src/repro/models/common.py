@@ -1,0 +1,268 @@
+"""Model configuration + shared building blocks (norms, MLPs, embeddings).
+
+All models are pure-functional JAX: params are nested dicts of arrays,
+every module is an ``init(key, cfg) -> params`` plus an
+``apply(params, x, ...) -> y`` pair. No flax/haiku — the framework owns
+its substrate end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import BATCH, MODEL, shard
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config describes every architecture family in the zoo."""
+
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None  # default d_model // n_heads
+
+    # attention
+    rope_theta: float = 10_000.0
+    rope_theta_global: float | None = None  # gemma3 global layers use 1e6
+    window: int | None = None  # sliding-window size for local layers
+    global_every: int | None = None  # gemma3: 1 global per `global_every+1`? see groups
+    local_per_global: int | None = None  # gemma3: 5 local then 1 global
+    qkv_bias: bool = False  # qwen1.5
+    qk_norm: bool = False  # gemma3
+    act: str = "silu"  # silu (swiglu) | gelu (geglu)
+    tied_embeddings: bool = True
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0  # kimi: 1 shared expert
+    first_k_dense: int = 0  # kimi: first layer(s) dense
+    moe_dense_residual: bool = False  # arctic: dense FFN in parallel
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # hybrid (recurrentgemma): layer pattern within a super-block
+    block_pattern: tuple = ()  # e.g. ("rec", "rec", "attn")
+    rglru_conv: int = 4
+
+    # VLM
+    cross_attn_every: int = 0  # one cross-attn layer per N self layers
+    vision_tokens: int = 0
+    vision_dim: int = 0
+
+    # audio (whisper): encoder spec; n_layers is the decoder depth
+    encoder_layers: int = 0
+    audio_frames: int = 0
+
+    # numerics / memory
+    dtype: Any = jnp.bfloat16  # activations
+    param_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    logits_chunk: int = 0  # 0 = full logits; else chunked CE over seq
+    cache_mode: str = "uniform"  # uniform | rightsized (local layers)
+
+    # source citation (model card / paper)
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Smoke-test variant: 2 layers, d_model<=512, <=4 experts."""
+        base = dict(
+            n_layers=2,
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            d_head=64,
+            d_ff=min(self.d_ff, 512) or 0,
+            vocab=min(self.vocab, 512),
+            remat=False,
+            dtype=jnp.float32,
+            param_dtype=jnp.float32,
+        )
+        if self.n_experts:
+            base.update(
+                n_experts=4,
+                top_k=min(self.top_k, 2),
+                moe_d_ff=min(self.moe_d_ff, 256),
+                first_k_dense=min(self.first_k_dense, 1),
+            )
+        if self.ssm_state:
+            base.update(ssm_state=32, ssm_head_dim=32, ssm_chunk=32)
+        if self.window:
+            base.update(window=min(self.window, 32))
+        if self.local_per_global:
+            base.update(local_per_global=min(self.local_per_global, 2))
+        if self.cross_attn_every:
+            # vlm group structure needs n_layers % (per+1) == 0
+            base.update(cross_attn_every=2, vision_tokens=16, vision_dim=64,
+                        n_layers=3)
+        if self.encoder_layers:
+            base.update(encoder_layers=2, audio_frames=32)
+        if self.block_pattern:
+            # one full (rec, rec, attn) super-block
+            base.update(window=min(self.window or 32, 32), n_layers=3)
+        base.update(overrides)
+        return dataclasses.replace(self, **base)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def truncated_normal_init(key, shape, scale, dtype):
+    stddev = scale / max(1.0, (shape[-2] if len(shape) > 1 else shape[-1])) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, cfg, *, shape=None, fan_in=None, scale=1.0):
+    shape = shape or (d_in, d_out)
+    fan_in = fan_in or d_in
+    stddev = scale / fan_in**0.5
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev
+    return w.astype(cfg.param_dtype)
+
+
+def residual_out_init(key, d_in, d_out, cfg, *, shape=None, fan_in=None):
+    """GPT-2-style scaled init for projections feeding the residual stream."""
+    scale = 1.0 / (2.0 * max(cfg.n_layers, 1)) ** 0.5
+    return dense_init(key, d_in, d_out, cfg, shape=shape, fan_in=fan_in,
+                      scale=scale)
+
+
+def rmsnorm_init(dim, cfg):
+    return {"scale": jnp.zeros((dim,), cfg.param_dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    out = normed * (1.0 + params["scale"].astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def mlp_init(key, cfg, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, cfg.d_model, d_ff, cfg),
+        "w_up": dense_init(k2, cfg.d_model, d_ff, cfg),
+        "w_down": residual_out_init(k3, d_ff, cfg.d_model, cfg, fan_in=d_ff),
+    }
+
+
+def mlp_apply(params, x, cfg):
+    """Gated MLP (swiglu/geglu). x: (..., d_model)."""
+    gate = x @ params["w_gate"]
+    up = x @ params["w_up"]
+    act = jax.nn.silu(gate) if cfg.act == "silu" else jax.nn.gelu(gate)
+    h = act * up
+    h = shard(h, BATCH, None, MODEL)
+    return h @ params["w_down"]
+
+
+def embedding_init(key, cfg):
+    emb = (jax.random.normal(key, (cfg.vocab, cfg.d_model), jnp.float32)
+           * cfg.d_model**-0.5).astype(cfg.param_dtype)
+    return {"table": emb}
+
+
+def embed(params, tokens, cfg):
+    x = jnp.take(params["table"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)  # gemma-style scale
+    return shard(x, BATCH, None, None)
+
+
+def unembed(params, x, cfg):
+    table = params["table"]
+    logits = x @ table.T.astype(x.dtype)
+    return shard(logits, BATCH, None, MODEL)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE in float32. logits (B,T,V), labels (B,T)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_cross_entropy(feats, table, labels, mask=None):
+    """CE from features without gathering along the (sharded) vocab dim.
+
+    gold logit = <feats, table[labels]> — a row gather from the embedding
+    table (cheap under SPMD) instead of a take_along_axis on the full
+    (B, T, V) logits tensor (which forces an all-gather of f32 logits).
+    logsumexp still runs over the vocab-sharded logits (one small
+    all-reduce of (B, T) partials).
+    """
+    logits = feats @ table.T.astype(feats.dtype)
+    logits = shard(logits, BATCH, None, MODEL)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold_rows = jnp.take(table, labels, axis=0).astype(jnp.float32)  # (B,T,D)
+    gold = jnp.einsum("btd,btd->bt", feats.astype(jnp.float32), gold_rows)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_cross_entropy(features, emb_table, labels, chunk, mask=None):
+    """CE without materializing full (B,T,V) logits: scan over T chunks.
+
+    features (B,T,D) -> per-chunk logits (B,c,V) -> nll, accumulated.
+    """
+    b, t, d = features.shape
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+    feats = features.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    labs = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    msk = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        f, l, mk = xs
+        logits = (f @ emb_table.T.astype(f.dtype)).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mk
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mk)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (feats, labs, msk))
+    return tot / jnp.maximum(cnt, 1.0)

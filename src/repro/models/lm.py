@@ -1,0 +1,909 @@
+"""Unified language-model assembly for every architecture family.
+
+A model is a sequence of *layer groups*; each group is a homogeneous
+stack of units scanned with ``jax.lax.scan`` (compact HLO even at 100
+layers). Heterogeneous patterns become either per-layer metadata arrays
+(gemma3's 5 local : 1 global windows — same params, different mask) or
+super-block units (griffin's (rec, rec, attn); llama-vision's
+(4 self + 1 cross)).
+
+Entry points (all pure):
+  * ``init(key)``                                  -> params
+  * ``loss(params, batch)``                        -> (scalar, metrics)
+  * ``prefill(params, batch)``                     -> (last_logits, state)
+  * ``decode_step(params, state, tokens)``         -> (logits, state)
+  * ``init_decode_state(batch, cache_len)``        -> zeroed state pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models import ssd as ssd_mod
+from repro.models.common import (
+    ModelConfig,
+    chunked_cross_entropy,
+    cross_entropy,
+    lm_cross_entropy,
+    dense_init,
+    embed,
+    embedding_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed,
+)
+from repro.sharding.ctx import BATCH, MODEL, shard
+
+
+def _maybe_seq_shard(x):
+    """EXPERIMENTS §Perf: optional sequence-parallel residual carries.
+
+    Gated by REPRO_SEQ_PARALLEL=1 (measurement flag, off by default):
+    shards the between-layer activations over the model axis so the saved
+    scan carries shrink 16x, at the cost of per-layer all-gathers. The
+    napkin math predicts a net loss on this baseline (no Megatron-style
+    TP gathers to piggyback on) — the dry-run measurement decides.
+    """
+    import os as _os
+
+    if _os.environ.get("REPRO_SEQ_PARALLEL", "0") == "1":
+        return shard(x, BATCH, MODEL, None)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    kind: str  # dense | moe | ssd | rec | griffin | vlm | enc | dec
+    n: int  # scanned units
+    windows: Any = None  # (n,) int32 per-unit window (0 = full attention)
+    thetas: Any = None  # (n,) float32 per-unit rope theta
+
+
+# ---------------------------------------------------------------------------
+# group-plan construction per family
+# ---------------------------------------------------------------------------
+
+def build_groups(cfg: ModelConfig) -> list[GroupSpec]:
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        return [GroupSpec("ssd", L)]
+    if cfg.family == "hybrid":
+        # griffin pattern (rec, rec, attn) repeated; remainder rec-only
+        n_super = L // 3
+        rem = L - 3 * n_super
+        gs = [GroupSpec("griffin", n_super)]
+        if rem:
+            gs.append(GroupSpec("rec", rem))
+        return gs
+    if cfg.family == "vlm":
+        per = cfg.cross_attn_every  # self layers per cross layer
+        assert L % (per + 1) == 0, (L, per)
+        return [GroupSpec("vlm", L // (per + 1))]
+    if cfg.family == "audio":
+        return [GroupSpec("dec", L)]  # decoder; encoder handled separately
+    # dense with local:global pattern + right-sized caches: scan over
+    # (local x per + global) super-blocks so local layers can carry
+    # window-length ring buffers instead of full-context caches
+    # (§Perf hillclimb 2; identical layer order to the meta-array path)
+    if (cfg.local_per_global and cfg.cache_mode == "rightsized"
+            and cfg.family == "dense"):
+        per = cfg.local_per_global + 1
+        n_super = L // per
+        rem = L - n_super * per
+        gs = [GroupSpec("dense_sb", n_super)]
+        if rem:
+            gs.append(GroupSpec(
+                "dense", rem,
+                jnp.full((rem,), cfg.window, jnp.int32),
+                jnp.full((rem,), cfg.rope_theta, jnp.float32),
+            ))
+        return gs
+    # dense / moe with optional local:global window pattern
+    if cfg.local_per_global:
+        pat = cfg.local_per_global
+        win, th = [], []
+        for i in range(L):
+            is_global = (i % (pat + 1)) == pat
+            win.append(0 if is_global else cfg.window)
+            th.append(cfg.rope_theta_global if is_global else cfg.rope_theta)
+        windows = jnp.asarray(win, jnp.int32)
+        thetas = jnp.asarray(th, jnp.float32)
+    else:
+        windows = jnp.full((L,), cfg.window or 0, jnp.int32)
+        thetas = jnp.full((L,), cfg.rope_theta, jnp.float32)
+    if cfg.family == "moe":
+        gs = []
+        if cfg.first_k_dense:
+            k = cfg.first_k_dense
+            gs.append(GroupSpec("dense", k, windows[:k], thetas[:k]))
+        gs.append(
+            GroupSpec("moe", L - cfg.first_k_dense,
+                      windows[cfg.first_k_dense:], thetas[cfg.first_k_dense:])
+        )
+        return gs
+    return [GroupSpec("dense", L, windows, thetas)]
+
+
+# ---------------------------------------------------------------------------
+# per-unit init / apply
+# ---------------------------------------------------------------------------
+
+def _dense_unit_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, cfg),
+        "attn": attn.attention_init(k1, cfg),
+        "ln2": rmsnorm_init(cfg.d_model, cfg),
+        "mlp": mlp_init(k2, cfg),
+    }
+    if cfg.qk_norm:  # gemma3 sandwich norms
+        p["ln1_post"] = rmsnorm_init(cfg.d_model, cfg)
+        p["ln2_post"] = rmsnorm_init(cfg.d_model, cfg)
+    return p
+
+
+def _dense_unit_apply(p, x, cfg, *, window, theta, causal=True):
+    h = attn.attn_full(p["attn"], rmsnorm(p["ln1"], x), cfg,
+                       causal=causal, window=window, theta=theta)
+    if "ln1_post" in p:
+        h = rmsnorm(p["ln1_post"], h)
+    x = x + h
+    h = mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg)
+    if "ln2_post" in p:
+        h = rmsnorm(p["ln2_post"], h)
+    return x + h
+
+
+def _dense_unit_decode(p, x, cache, index, cfg, *, window, theta):
+    h, cache = attn.attn_decode(p["attn"], rmsnorm(p["ln1"], x), cache, index,
+                                cfg, window=window, theta=theta)
+    if "ln1_post" in p:
+        h = rmsnorm(p["ln1_post"], h)
+    x = x + h
+    h = mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg)
+    if "ln2_post" in p:
+        h = rmsnorm(p["ln2_post"], h)
+    return x + h, cache
+
+
+def _moe_unit_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, cfg),
+        "attn": attn.attention_init(k1, cfg),
+        "ln2": rmsnorm_init(cfg.d_model, cfg),
+        "moe": moe_mod.moe_init(k2, cfg),
+    }
+    if cfg.moe_dense_residual:  # arctic: dense FFN in parallel with MoE
+        p["dense_mlp"] = mlp_init(k3, cfg)
+    return p
+
+
+def _moe_unit_apply(p, x, cfg, *, window, theta):
+    h = attn.attn_full(p["attn"], rmsnorm(p["ln1"], x), cfg,
+                       window=window, theta=theta)
+    x = x + h
+    normed = rmsnorm(p["ln2"], x)
+    mo, aux, drop = moe_mod.moe_apply(p["moe"], normed, cfg)
+    if "dense_mlp" in p:
+        mo = mo + mlp_apply(p["dense_mlp"], normed, cfg)
+    return x + mo, aux, drop
+
+
+def _moe_unit_decode(p, x, cache, index, cfg, *, window, theta):
+    h, cache = attn.attn_decode(p["attn"], rmsnorm(p["ln1"], x), cache, index,
+                                cfg, window=window, theta=theta)
+    x = x + h
+    normed = rmsnorm(p["ln2"], x)
+    mo, aux, drop = moe_mod.moe_apply(p["moe"], normed, cfg)
+    if "dense_mlp" in p:
+        mo = mo + mlp_apply(p["dense_mlp"], normed, cfg)
+    return x + mo, cache
+
+
+def _ssd_unit_init(key, cfg):
+    return {"ln1": rmsnorm_init(cfg.d_model, cfg),
+            "ssd": ssd_mod.ssd_init(key, cfg)}
+
+
+def _rec_unit_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, cfg),
+        "rec": rg.rglru_init(k1, cfg),
+        "ln2": rmsnorm_init(cfg.d_model, cfg),
+        "mlp": mlp_init(k2, cfg),
+    }
+
+
+def _rec_unit_apply(p, x, cfg, *, state=None, conv=None, want_state=False):
+    if want_state:
+        h, s, c = rg.rglru_block_apply(p["rec"], rmsnorm(p["ln1"], x), cfg,
+                                       state=state, conv_state=conv,
+                                       return_state=True)
+    else:
+        h = rg.rglru_block_apply(p["rec"], rmsnorm(p["ln1"], x), cfg)
+        s = c = None
+    x = x + h
+    x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x), cfg)
+    return (x, s, c) if want_state else x
+
+
+def _dense_sb_init(key, cfg):
+    """Super-block: cfg.local_per_global local layers + 1 global layer."""
+    per = cfg.local_per_global
+    ks = jax.random.split(key, per + 1)
+    return {
+        "loc": jax.vmap(lambda k: _dense_unit_init(k, cfg))(ks[:per]),
+        "glob": _dense_unit_init(ks[per], cfg),
+    }
+
+
+def _griffin_unit_init(key, cfg):
+    k0, k1, k2 = jax.random.split(key, 3)
+    return {
+        "rec0": _rec_unit_init(k0, cfg),
+        "rec1": _rec_unit_init(k1, cfg),
+        "attn": _dense_unit_init(k2, cfg),
+    }
+
+
+def _vlm_unit_init(key, cfg):
+    per = cfg.cross_attn_every
+    ks = jax.random.split(key, per + 2)
+    self_params = jax.vmap(lambda k: _dense_unit_init(k, cfg))(ks[:per])
+    kc1, kc2 = ks[per], ks[per + 1]
+    cross = {
+        "ln": rmsnorm_init(cfg.d_model, cfg),
+        "attn": attn.attention_init(kc1, cfg, d_kv_in=cfg.d_model),
+        "gate": jnp.zeros((), cfg.param_dtype),  # tanh-gated cross-attn
+        "ln2": rmsnorm_init(cfg.d_model, cfg),
+        "mlp": mlp_init(kc2, cfg),
+        "gate_mlp": jnp.zeros((), cfg.param_dtype),
+    }
+    return {"self": self_params, "cross": cross}
+
+
+def _enc_unit_init(key, cfg):
+    return _dense_unit_init(key, cfg)
+
+
+def _dec_unit_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, cfg),
+        "self_attn": attn.attention_init(k1, cfg),
+        "ln2": rmsnorm_init(cfg.d_model, cfg),
+        "cross_attn": attn.attention_init(k2, cfg, d_kv_in=cfg.d_model),
+        "ln3": rmsnorm_init(cfg.d_model, cfg),
+        "mlp": mlp_init(k3, cfg),
+    }
+
+
+_UNIT_INIT = {
+    "dense": _dense_unit_init,
+    "dense_sb": _dense_sb_init,
+    "moe": _moe_unit_init,
+    "ssd": _ssd_unit_init,
+    "rec": _rec_unit_init,
+    "griffin": _griffin_unit_init,
+    "vlm": _vlm_unit_init,
+    "enc": _enc_unit_init,
+    "dec": _dec_unit_init,
+}
+
+
+def sinusoidal_positions(t: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((t, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d + 1) // 2]))
+    return pe.astype(dtype)
+
+
+class LM:
+    """Unified model wrapper for one ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = build_groups(cfg)
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.groups) + 6)
+        params: dict = {"embed": embedding_init(keys[0], cfg)}
+        params["final_norm"] = rmsnorm_init(cfg.d_model, cfg)
+        if not cfg.tied_embeddings:
+            params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, cfg)
+        if cfg.family == "vlm":
+            params["vision_proj"] = dense_init(
+                keys[2], cfg.vision_dim, cfg.d_model, cfg, fan_in=cfg.vision_dim
+            )
+        if cfg.family == "audio":
+            enc_keys = jax.random.split(keys[3], cfg.encoder_layers)
+            params["encoder"] = jax.vmap(
+                lambda k: _enc_unit_init(k, cfg)
+            )(enc_keys)
+            params["enc_final_norm"] = rmsnorm_init(cfg.d_model, cfg)
+        for gi, g in enumerate(self.groups):
+            gkeys = jax.random.split(keys[4 + gi], g.n)
+            params[f"group{gi}"] = jax.vmap(
+                lambda k: _UNIT_INIT[g.kind](k, cfg)
+            )(gkeys)
+        return params
+
+    # -- shared forward over the groups (training / prefill) ------------------
+    def _backbone(self, params, x, *, memory_kv_builder=None, collect_cache=False,
+                  cache_len: int | None = None):
+        """Run all groups over full sequences.
+
+        memory_kv_builder(unit_params_slice) -> memory KV for cross-attn
+        (already precomputed per group outside the scan).
+        Returns (features, aux_losses, caches_per_group or None).
+        """
+        cfg = self.cfg
+        aux_total = jnp.float32(0.0)
+        caches = []
+        for gi, g in enumerate(self.groups):
+            gp = params[f"group{gi}"]
+            x, aux, cache = self._run_group_full(
+                g, gp, x, params, collect_cache=collect_cache, cache_len=cache_len
+            )
+            aux_total = aux_total + aux
+            caches.append(cache)
+        x = rmsnorm(params["final_norm"], x)
+        return x, aux_total, caches
+
+    def _run_group_full(self, g: GroupSpec, gp, x, params, *,
+                        collect_cache: bool, cache_len):
+        cfg = self.cfg
+        b, t, _ = x.shape
+        s_cache = cache_len or t
+
+        def pad_cache_kv(k_seq, v_seq):
+            """(B,T,Hkv,Dh) -> padded (B,S,Hkv,Dh) + per-row pos (B,S)."""
+            pad = s_cache - t
+            kk = jnp.pad(k_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vv = jnp.pad(v_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            pos = jnp.concatenate([
+                jnp.arange(t, dtype=jnp.int32),
+                jnp.full((pad,), -1, jnp.int32),
+            ])
+            pos = jnp.tile(pos[None], (b, 1))
+            return kk, vv, pos
+
+        def attn_cache_from(p_attn, xin, theta):
+            """Recompute K/V for caching at prefill (cheap vs attention)."""
+            q, k, v = attn._qkv(p_attn, xin, xin, cfg)
+            if theta is not None:
+                k = attn.rope(k, jnp.arange(t), theta)
+            return k, v
+
+        if g.kind in ("dense", "moe"):
+            def body(carry, xs):
+                xc, aux = carry
+                xc = _maybe_seq_shard(xc)
+                if g.kind == "dense":
+                    p, window, theta = xs
+                    xin = rmsnorm(p["ln1"], xc)
+                    xo = _dense_unit_apply(p, xc, cfg, window=window, theta=theta)
+                    daux = jnp.float32(0.0)
+                else:
+                    p, window, theta = xs
+                    xin = rmsnorm(p["ln1"], xc)
+                    xo, daux, _ = _moe_unit_apply(p, xc, cfg, window=window, theta=theta)
+                ys = None
+                if collect_cache:
+                    k, v = attn_cache_from(p["attn"], xin, theta)
+                    ys = pad_cache_kv(k, v)
+                return (xo, aux + daux), ys
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            (x, aux), ys = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                        (gp, g.windows, g.thetas))
+            cache = None
+            if collect_cache:
+                cache = {"k": ys[0], "v": ys[1], "pos": ys[2]}
+            return x, aux, cache
+
+        if g.kind == "dense_sb":
+            per = cfg.local_per_global
+            w_len = min(cfg.window, s_cache)
+            n_keep = min(t, w_len)
+
+            def ring_cache(k_seq, v_seq):
+                """Keep the last n_keep positions in a w_len ring buffer."""
+                pos_keep = jnp.arange(t - n_keep, t, dtype=jnp.int32)
+                slots = jnp.mod(pos_keep, w_len)
+                kk = jnp.zeros((b, w_len) + k_seq.shape[2:], k_seq.dtype)
+                vv = jnp.zeros_like(kk)
+                kk = kk.at[:, slots].set(k_seq[:, t - n_keep:])
+                vv = vv.at[:, slots].set(v_seq[:, t - n_keep:])
+                pos = jnp.full((w_len,), -1, jnp.int32).at[slots].set(pos_keep)
+                pos = jnp.tile(pos[None], (b, 1))
+                return kk, vv, pos
+
+            def body(carry, p):
+                xc = carry
+                loc_ys = []
+                for i in range(per):
+                    pi = jax.tree.map(lambda a: a[i], p["loc"])
+                    xin = rmsnorm(pi["ln1"], xc)
+                    xc = _dense_unit_apply(pi, xc, cfg, window=cfg.window,
+                                           theta=cfg.rope_theta)
+                    if collect_cache:
+                        k, v = attn_cache_from(pi["attn"], xin, cfg.rope_theta)
+                        loc_ys.append(ring_cache(k, v))
+                pg = p["glob"]
+                xin = rmsnorm(pg["ln1"], xc)
+                theta_g = cfg.rope_theta_global or cfg.rope_theta
+                xc = _dense_unit_apply(pg, xc, cfg, window=None, theta=theta_g)
+                ys = None
+                if collect_cache:
+                    k, v = attn_cache_from(pg["attn"], xin, theta_g)
+                    gk, gv, gpos = pad_cache_kv(k, v)
+                    lk = jnp.stack([l[0] for l in loc_ys])
+                    lv = jnp.stack([l[1] for l in loc_ys])
+                    lpos = jnp.stack([l[2] for l in loc_ys])
+                    ys = (lk, lv, lpos, gk, gv, gpos)
+                return xc, ys
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, ys = jax.lax.scan(body, x, gp)
+            cache = None
+            if collect_cache:
+                cache = {"loc": {"k": ys[0], "v": ys[1], "pos": ys[2]},
+                         "glob": {"k": ys[3], "v": ys[4], "pos": ys[5]}}
+            return x, jnp.float32(0.0), cache
+
+        if g.kind == "ssd":
+            def body(carry, p):
+                xc = carry
+                h, s_fin, conv = ssd_mod.ssd_block_apply(
+                    p["ssd"], rmsnorm(p["ln1"], xc), cfg, return_state=True
+                )
+                xo = xc + h
+                ys = (s_fin, conv) if collect_cache else None
+                return xo, ys
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, ys = jax.lax.scan(body, x, gp)
+            cache = {"ssm": ys[0], "conv": ys[1]} if collect_cache else None
+            return x, jnp.float32(0.0), cache
+
+        if g.kind == "rec":
+            def body(carry, p):
+                xc = carry
+                xo, s, c = _rec_unit_apply(p, xc, cfg, want_state=True)
+                ys = (s, c) if collect_cache else None
+                return xo, ys
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, ys = jax.lax.scan(body, x, gp)
+            cache = {"h": ys[0], "conv": ys[1]} if collect_cache else None
+            return x, jnp.float32(0.0), cache
+
+        if g.kind == "griffin":
+            def body(carry, p):
+                xc = carry
+                x1, s0, c0 = _rec_unit_apply(p["rec0"], xc, cfg, want_state=True)
+                x2, s1, c1 = _rec_unit_apply(p["rec1"], x1, cfg, want_state=True)
+                xin = rmsnorm(p["attn"]["ln1"], x2)
+                x3 = _dense_unit_apply(p["attn"], x2, cfg,
+                                       window=cfg.window, theta=cfg.rope_theta)
+                ys = None
+                if collect_cache:
+                    k, v = attn_cache_from(p["attn"]["attn"], xin, cfg.rope_theta)
+                    kk, vv, pos = pad_cache_kv(k, v)
+                    ys = (s0, c0, s1, c1, kk, vv, pos)
+                return x3, ys
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, ys = jax.lax.scan(body, x, gp)
+            cache = None
+            if collect_cache:
+                cache = {
+                    "h0": ys[0], "conv0": ys[1], "h1": ys[2], "conv1": ys[3],
+                    "k": ys[4], "v": ys[5], "pos": ys[6],
+                }
+            return x, jnp.float32(0.0), cache
+
+        if g.kind == "vlm":
+            memory = params["_vision_memory"]  # injected by loss/prefill
+
+            def body(carry, p):
+                xc = carry
+
+                def self_body(c2, ps):
+                    xin = rmsnorm(ps["ln1"], c2)
+                    out = _dense_unit_apply(ps, c2, cfg, window=None,
+                                            theta=cfg.rope_theta)
+                    ys = None
+                    if collect_cache:
+                        k, v = attn_cache_from(ps["attn"], xin, cfg.rope_theta)
+                        ys = pad_cache_kv(k, v)
+                    return out, ys
+
+                xc, self_ys = jax.lax.scan(self_body, xc, p["self"])
+                cr = p["cross"]
+                mkv = attn.cross_kv(cr["attn"], memory, cfg)
+                h = attn.attn_cross(cr["attn"], rmsnorm(cr["ln"], xc), mkv, cfg)
+                xc = xc + jnp.tanh(cr["gate"].astype(jnp.float32)).astype(x.dtype) * h
+                h = mlp_apply(cr["mlp"], rmsnorm(cr["ln2"], xc), cfg)
+                xc = xc + jnp.tanh(cr["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * h
+                ys = (self_ys, mkv["k"], mkv["v"]) if collect_cache else None
+                return xc, ys
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, ys = jax.lax.scan(body, x, gp)
+            cache = None
+            if collect_cache:
+                self_ys, ck, cv = ys
+                cache = {
+                    "k": self_ys[0], "v": self_ys[1], "pos": self_ys[2],
+                    "cross_k": ck, "cross_v": cv,
+                }
+            return x, jnp.float32(0.0), cache
+
+        if g.kind == "dec":
+            memory = params["_encoder_memory"]
+
+            def body(carry, p):
+                xc = carry
+                xin = rmsnorm(p["ln1"], xc)
+                h = attn.attn_full(p["self_attn"], xin, cfg, causal=True,
+                                   theta=cfg.rope_theta)
+                xc = xc + h
+                mkv = attn.cross_kv(p["cross_attn"], memory, cfg)
+                h = attn.attn_cross(p["cross_attn"], rmsnorm(p["ln2"], xc), mkv, cfg)
+                xc = xc + h
+                xc = xc + mlp_apply(p["mlp"], rmsnorm(p["ln3"], xc), cfg)
+                ys = None
+                if collect_cache:
+                    k, v = attn_cache_from(p["self_attn"], xin, cfg.rope_theta)
+                    kk, vv, pos = pad_cache_kv(k, v)
+                    ys = (kk, vv, pos, mkv["k"], mkv["v"])
+                return xc, ys
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, ys = jax.lax.scan(body, x, gp)
+            cache = None
+            if collect_cache:
+                cache = {"k": ys[0], "v": ys[1], "pos": ys[2],
+                         "cross_k": ys[3], "cross_v": ys[4]}
+            return x, jnp.float32(0.0), cache
+
+        raise ValueError(g.kind)
+
+    # -- encoder (whisper) -----------------------------------------------------
+    def _encode_audio(self, params, frames):
+        cfg = self.cfg
+        x = frames + sinusoidal_positions(frames.shape[1], cfg.d_model, frames.dtype)
+
+        def body(carry, p):
+            return _dense_unit_apply(p, carry, cfg, window=None, theta=None,
+                                     causal=False), None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return rmsnorm(params["enc_final_norm"], x)
+
+    # -- embeddings of the non-token modality ----------------------------------
+    def _inject_memory(self, params, batch):
+        cfg = self.cfg
+        params = dict(params)
+        if cfg.family == "vlm":
+            vis = batch["vision"].astype(cfg.dtype) @ params["vision_proj"]
+            params["_vision_memory"] = vis
+        if cfg.family == "audio":
+            params["_encoder_memory"] = self._encode_audio(
+                params, batch["audio_frames"].astype(cfg.dtype)
+            )
+        return params
+
+    # -- training loss ----------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        params = self._inject_memory(params, batch)
+        x = embed(params["embed"], batch["inputs"], cfg)
+        feats, aux, _ = self._backbone(params, x)
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        table = (params["lm_head"].T if "lm_head" in params
+                 else params["embed"]["table"])
+        if cfg.logits_chunk:
+            ce = chunked_cross_entropy(feats, table, labels, cfg.logits_chunk, mask)
+        else:
+            ce = lm_cross_entropy(feats, table, labels, mask)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- prefill ------------------------------------------------------------------
+    def prefill(self, params, batch, *, cache_len: int | None = None):
+        cfg = self.cfg
+        params = self._inject_memory(params, batch)
+        tokens = batch["inputs"]
+        b, t = tokens.shape
+        x = embed(params["embed"], tokens, cfg)
+        feats, _, caches = self._backbone(
+            params, x, collect_cache=True, cache_len=cache_len or t
+        )
+        table = (params["lm_head"].T if "lm_head" in params
+                 else params["embed"]["table"])
+        last = feats[:, -1:, :]
+        logits = last @ table.T.astype(feats.dtype)
+        state = {"groups": caches, "index": jnp.asarray(t, jnp.int32)}
+        return logits[:, 0], state
+
+    # -- zeroed decode state (dry-run decode shapes) ------------------------------
+    def init_decode_state(self, batch: int, cache_len: int, *, index=None):
+        cfg = self.cfg
+        states = []
+        for g in self.groups:
+            n = g.n
+            if g.kind == "dense_sb":
+                per = cfg.local_per_global
+                w_len = min(cfg.window, cache_len)
+                states.append({
+                    "loc": {
+                        "k": jnp.zeros((n, per, batch, w_len, cfg.n_kv_heads,
+                                        cfg.head_dim), cfg.dtype),
+                        "v": jnp.zeros((n, per, batch, w_len, cfg.n_kv_heads,
+                                        cfg.head_dim), cfg.dtype),
+                        "pos": jnp.full((n, per, batch, w_len), -1, jnp.int32),
+                    },
+                    "glob": attn.make_cache(cfg, n, batch, cache_len),
+                })
+            elif g.kind in ("dense", "moe"):
+                length = cache_len
+                if (cfg.cache_mode == "rightsized" and cfg.window
+                        and g.windows is not None):
+                    import numpy as _np
+                    if bool((_np.asarray(g.windows) > 0).all()):
+                        length = min(cfg.window, cache_len)
+                states.append(attn.make_cache(cfg, n, batch, length))
+            elif g.kind == "ssd":
+                states.append({
+                    "ssm": jnp.zeros((n, batch, cfg.ssm_heads, cfg.ssm_state,
+                                      cfg.ssm_head_dim), jnp.float32),
+                    "conv": jnp.zeros((n, batch, cfg.ssm_conv - 1,
+                                       cfg.ssm_d_inner + 2 * cfg.ssm_state),
+                                      cfg.dtype),
+                })
+            elif g.kind == "rec":
+                states.append({
+                    "h": jnp.zeros((n, batch, cfg.d_model), jnp.float32),
+                    "conv": jnp.zeros((n, batch, cfg.rglru_conv - 1, cfg.d_model),
+                                      cfg.dtype),
+                })
+            elif g.kind == "griffin":
+                attn_len = (min(cache_len, cfg.window)
+                            if (cfg.cache_mode == "rightsized" and cfg.window)
+                            else cache_len)
+                c = attn.make_cache(cfg, n, batch, attn_len)
+                states.append({
+                    "h0": jnp.zeros((n, batch, cfg.d_model), jnp.float32),
+                    "conv0": jnp.zeros((n, batch, cfg.rglru_conv - 1, cfg.d_model),
+                                       cfg.dtype),
+                    "h1": jnp.zeros((n, batch, cfg.d_model), jnp.float32),
+                    "conv1": jnp.zeros((n, batch, cfg.rglru_conv - 1, cfg.d_model),
+                                       cfg.dtype),
+                    "k": c["k"], "v": c["v"], "pos": c["pos"],
+                })
+            elif g.kind == "vlm":
+                per = cfg.cross_attn_every
+                c = attn.make_cache(cfg, n, batch, cache_len)
+                states.append({
+                    "k": jnp.zeros((n, per) + c["k"].shape[1:], cfg.dtype),
+                    "v": jnp.zeros((n, per) + c["v"].shape[1:], cfg.dtype),
+                    "pos": jnp.full((n, per, batch, cache_len), -1, jnp.int32),
+                    "cross_k": jnp.zeros((n, batch, cfg.vision_tokens,
+                                          cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+                    "cross_v": jnp.zeros((n, batch, cfg.vision_tokens,
+                                          cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+                })
+            elif g.kind == "dec":
+                c = attn.make_cache(cfg, n, batch, cache_len)
+                states.append({
+                    "k": c["k"], "v": c["v"], "pos": c["pos"],
+                    "cross_k": jnp.zeros((n, batch, cfg.audio_frames,
+                                          cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+                    "cross_v": jnp.zeros((n, batch, cfg.audio_frames,
+                                          cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+                })
+            else:
+                raise ValueError(g.kind)
+        if index is None:
+            index = jnp.asarray(cache_len, jnp.int32)
+        return {"groups": states, "index": jnp.asarray(index, jnp.int32)}
+
+    # -- decode step ----------------------------------------------------------------
+    def decode_step(self, params, state, tokens):
+        """tokens (B, 1) int32 -> (logits (B, vocab), new state)."""
+        cfg = self.cfg
+        index = state["index"]
+        x = embed(params["embed"], tokens, cfg)
+        new_groups = []
+        for gi, g in enumerate(self.groups):
+            gp = params[f"group{gi}"]
+            gc = state["groups"][gi]
+            x, gc_new = self._decode_group(g, gp, gc, x, index)
+            new_groups.append(gc_new)
+        x = rmsnorm(params["final_norm"], x)
+        table = (params["lm_head"].T if "lm_head" in params
+                 else params["embed"]["table"])
+        logits = (x @ table.T.astype(x.dtype))[:, 0]
+        return logits, {"groups": new_groups, "index": index + 1}
+
+    def _decode_group(self, g: GroupSpec, gp, gc, x, index):
+        cfg = self.cfg
+
+        if g.kind in ("dense", "moe"):
+            def body(carry, xs):
+                xc = carry
+                p, window, theta, ck, cv, cpos = xs
+                cache = {"k": ck, "v": cv, "pos": cpos}
+                if g.kind == "dense":
+                    xo, cache = _dense_unit_decode(p, xc, cache, index, cfg,
+                                                   window=window, theta=theta)
+                else:
+                    xo, cache = _moe_unit_decode(p, xc, cache, index, cfg,
+                                                 window=window, theta=theta)
+                return xo, (cache["k"], cache["v"], cache["pos"])
+
+            x, ys = jax.lax.scan(body, x, (gp, g.windows, g.thetas,
+                                           gc["k"], gc["v"], gc["pos"]))
+            return x, {"k": ys[0], "v": ys[1], "pos": ys[2]}
+
+        if g.kind == "dense_sb":
+            per = cfg.local_per_global
+            theta_g = cfg.rope_theta_global or cfg.rope_theta
+
+            def body(carry, xs):
+                xc = carry
+                p, lk, lv, lpos, gk, gv, gpos = xs
+                lk_o, lv_o, lpos_o = [], [], []
+                for i in range(per):
+                    pi = jax.tree.map(lambda a: a[i], p["loc"])
+                    cache = {"k": lk[i], "v": lv[i], "pos": lpos[i]}
+                    xc, cache = _dense_unit_decode(
+                        pi, xc, cache, index, cfg,
+                        window=cfg.window, theta=cfg.rope_theta,
+                    )
+                    lk_o.append(cache["k"])
+                    lv_o.append(cache["v"])
+                    lpos_o.append(cache["pos"])
+                gcache = {"k": gk, "v": gv, "pos": gpos}
+                xc, gcache = _dense_unit_decode(
+                    p["glob"], xc, gcache, index, cfg,
+                    window=None, theta=theta_g,
+                )
+                ys = (jnp.stack(lk_o), jnp.stack(lv_o), jnp.stack(lpos_o),
+                      gcache["k"], gcache["v"], gcache["pos"])
+                return xc, ys
+
+            x, ys = jax.lax.scan(body, x, (
+                gp, gc["loc"]["k"], gc["loc"]["v"], gc["loc"]["pos"],
+                gc["glob"]["k"], gc["glob"]["v"], gc["glob"]["pos"]))
+            return x, {"loc": {"k": ys[0], "v": ys[1], "pos": ys[2]},
+                       "glob": {"k": ys[3], "v": ys[4], "pos": ys[5]}}
+
+        if g.kind == "ssd":
+            def body(carry, xs):
+                xc = carry
+                p, s, c = xs
+                h, s2, c2 = ssd_mod.ssd_decode_step(
+                    p["ssd"], rmsnorm(p["ln1"], xc), cfg, ssm_state=s, conv_state=c
+                )
+                return xc + h, (s2, c2)
+
+            x, ys = jax.lax.scan(body, x, (gp, gc["ssm"], gc["conv"]))
+            return x, {"ssm": ys[0], "conv": ys[1]}
+
+        if g.kind == "rec":
+            def body(carry, xs):
+                xc = carry
+                p, h0, c0 = xs
+                h, h2, c2 = rg.rglru_decode_step(
+                    p["rec"], rmsnorm(p["ln1"], xc), cfg, state=h0, conv_state=c0
+                )
+                xc = xc + h
+                xc = xc + mlp_apply(p["mlp"], rmsnorm(p["ln2"], xc), cfg)
+                return xc, (h2, c2)
+
+            x, ys = jax.lax.scan(body, x, (gp, gc["h"], gc["conv"]))
+            return x, {"h": ys[0], "conv": ys[1]}
+
+        if g.kind == "griffin":
+            def one_rec(p, xc, h0, c0):
+                h, h2, c2 = rg.rglru_decode_step(
+                    p["rec"], rmsnorm(p["ln1"], xc), cfg, state=h0, conv_state=c0
+                )
+                xc = xc + h
+                xc = xc + mlp_apply(p["mlp"], rmsnorm(p["ln2"], xc), cfg)
+                return xc, h2, c2
+
+            def body(carry, xs):
+                xc = carry
+                p, h0, c0, h1, c1, ck, cv, cpos = xs
+                xc, h0n, c0n = one_rec(p["rec0"], xc, h0, c0)
+                xc, h1n, c1n = one_rec(p["rec1"], xc, h1, c1)
+                cache = {"k": ck, "v": cv, "pos": cpos}
+                xc, cache = _dense_unit_decode(
+                    p["attn"], xc, cache, index, cfg,
+                    window=cfg.window, theta=cfg.rope_theta,
+                )
+                return xc, (h0n, c0n, h1n, c1n, cache["k"], cache["v"], cache["pos"])
+
+            x, ys = jax.lax.scan(body, x, (gp, gc["h0"], gc["conv0"],
+                                           gc["h1"], gc["conv1"],
+                                           gc["k"], gc["v"], gc["pos"]))
+            return x, {"h0": ys[0], "conv0": ys[1], "h1": ys[2], "conv1": ys[3],
+                       "k": ys[4], "v": ys[5], "pos": ys[6]}
+
+        if g.kind == "vlm":
+            def body(carry, xs):
+                xc = carry
+                p, ck, cv, cpos, crk, crv = xs
+
+                def self_body(c2, xs2):
+                    ps, k1, v1, p1 = xs2
+                    cache = {"k": k1, "v": v1, "pos": p1}
+                    out, cache = _dense_unit_decode(ps, c2, cache, index, cfg,
+                                                    window=None,
+                                                    theta=cfg.rope_theta)
+                    return out, (cache["k"], cache["v"], cache["pos"])
+
+                xc, sys_ = jax.lax.scan(self_body, xc, (p["self"], ck, cv, cpos))
+                cr = p["cross"]
+                mkv = {"k": crk, "v": crv}
+                h = attn.attn_cross(cr["attn"], rmsnorm(cr["ln"], xc), mkv, cfg)
+                xc = xc + jnp.tanh(cr["gate"].astype(jnp.float32)).astype(xc.dtype) * h
+                h = mlp_apply(cr["mlp"], rmsnorm(cr["ln2"], xc), cfg)
+                xc = xc + jnp.tanh(cr["gate_mlp"].astype(jnp.float32)).astype(xc.dtype) * h
+                return xc, (sys_[0], sys_[1], sys_[2], crk, crv)
+
+            x, ys = jax.lax.scan(body, x, (gp, gc["k"], gc["v"], gc["pos"],
+                                           gc["cross_k"], gc["cross_v"]))
+            return x, {"k": ys[0], "v": ys[1], "pos": ys[2],
+                       "cross_k": ys[3], "cross_v": ys[4]}
+
+        if g.kind == "dec":
+            def body(carry, xs):
+                xc = carry
+                p, ck, cv, cpos, crk, crv = xs
+                cache = {"k": ck, "v": cv, "pos": cpos}
+                h, cache = attn.attn_decode(
+                    p["self_attn"], rmsnorm(p["ln1"], xc), cache, index, cfg,
+                    theta=cfg.rope_theta,
+                )
+                xc = xc + h
+                mkv = {"k": crk, "v": crv}
+                h = attn.attn_cross(p["cross_attn"], rmsnorm(p["ln2"], xc), mkv, cfg)
+                xc = xc + h
+                xc = xc + mlp_apply(p["mlp"], rmsnorm(p["ln3"], xc), cfg)
+                return xc, (cache["k"], cache["v"], cache["pos"], crk, crv)
+
+            x, ys = jax.lax.scan(body, x, (gp, gc["k"], gc["v"], gc["pos"],
+                                           gc["cross_k"], gc["cross_v"]))
+            return x, {"k": ys[0], "v": ys[1], "pos": ys[2],
+                       "cross_k": ys[3], "cross_v": ys[4]}
+
+        raise ValueError(g.kind)

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))   in (0,1),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over T (depth log T); decode is O(1).
+The full residual block is: linear -> causal conv(4) -> RG-LRU on one
+branch, gelu gate on the other, merged by an output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, residual_out_init
+from repro.sharding.ctx import BATCH, MODEL, shard
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, d, cfg),  # input branch
+        "w_gate": dense_init(ks[1], d, d, cfg),  # gelu gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.rglru_conv, d), jnp.float32)
+                   * (3.0 / cfg.rglru_conv) ** 0.5).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((d,), cfg.param_dtype),
+        "w_a": dense_init(ks[3], d, d, cfg),
+        "b_a": jnp.zeros((d,), cfg.param_dtype),
+        "w_i": dense_init(ks[4], d, d, cfg),
+        "b_i": jnp.zeros((d,), cfg.param_dtype),
+        # Lambda init so a^c is roughly in [0.9, 0.999] at r=1
+        "lam": jnp.linspace(0.3, 1.5, d).astype(jnp.float32),
+        "w_out": residual_out_init(ks[5], d, d, cfg),
+    }
+
+
+def _gates(params, x):
+    """a_log (decay log) and gated input for each step. x (B,T,D)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32)
+                       + params["b_i"].astype(jnp.float32))
+    lam = jax.nn.softplus(params["lam"])  # (D,)
+    a_log = -_C * lam[None, None, :] * r  # log a_t  (B,T,D)
+    a = jnp.exp(a_log)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated
+
+
+def rglru_scan(params, x, h0=None):
+    """Linear recurrence via associative scan. x (B,T,D) -> (y, h_T)."""
+    a, b = _gates(params, x)  # (B,T,D) each, float32
+    if h0 is not None:
+        # fold the initial state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    ac, bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = bc  # h_t for every t
+    return y.astype(x.dtype), y[:, -1]
+
+
+def rglru_step(params, x, h):
+    """One-token recurrence. x (B,1,D), h (B,D) float32."""
+    a, b = _gates(params, x)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new[:, None, :].astype(x.dtype), h_new
+
+
+def _causal_conv(x, conv_w, conv_b, conv_state=None):
+    k = conv_w.shape[0]
+    bsz, t, c = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((bsz, k - 1, c), x.dtype)
+    ext = jnp.concatenate([conv_state, x], axis=1)
+    out = jnp.zeros((bsz, t, c), x.dtype)
+    for i in range(k):
+        out = out + ext[:, i : i + t, :] * conv_w[i][None, None, :]
+    out = out + conv_b[None, None, :]
+    new_state = jax.lax.dynamic_slice_in_dim(ext, ext.shape[1] - (k - 1), k - 1, axis=1)
+    return out, new_state
+
+
+def rglru_block_apply(params, u, cfg: ModelConfig, *, state=None,
+                      conv_state=None, return_state: bool = False):
+    """Full Griffin recurrent block. u (B,T,D)."""
+    gate = jax.nn.gelu(u @ params["w_gate"])
+    x = u @ params["w_x"]
+    x = shard(x, BATCH, None, MODEL)
+    x, new_conv = _causal_conv(
+        x, params["conv_w"].astype(u.dtype), params["conv_b"].astype(u.dtype),
+        conv_state,
+    )
+    y, h_last = rglru_scan(params, x, h0=state)
+    out = (gate * y) @ params["w_out"]
+    if return_state:
+        return out, h_last, new_conv
+    return out
+
+
+def rglru_decode_step(params, u, cfg: ModelConfig, *, state, conv_state):
+    gate = jax.nn.gelu(u @ params["w_gate"])
+    x = u @ params["w_x"]
+    x, new_conv = _causal_conv(
+        x, params["conv_w"].astype(u.dtype), params["conv_b"].astype(u.dtype),
+        conv_state,
+    )
+    y, h_new = rglru_step(params, x, state)
+    out = (gate * y) @ params["w_out"]
+    return out, h_new, new_conv

@@ -1,0 +1,215 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked training algorithm (quadratic intra-chunk + linear inter-chunk
+recurrence) and the O(1)-state decode step. Layout follows the paper's
+reference: after the input projection the block carries
+
+  x  (B, T, H, P)   value heads          (P = head dim)
+  dt (B, T, H)      softplus step sizes
+  A  (H,)           negative decay rates
+  B_ (B, T, N)      input maps  (n_groups = 1)
+  C_ (B, T, N)      output maps
+  D  (H,)           skip connection
+
+TPU adaptation: the intra-chunk quadratic term is an MXU-friendly batched
+matmul over (chunk x chunk) tiles; the inter-chunk scan runs over
+T/chunk steps of (H, N, P) states (tiny), so the sequential depth is
+T/chunk instead of T.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, residual_out_init, rmsnorm
+from repro.sharding.ctx import BATCH, MODEL, shard
+
+
+def ssd_init(key, cfg: ModelConfig):
+    d, din = cfg.d_model, cfg.ssm_d_inner
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = din + 2 * n  # conv over [x, B, C]
+    ks = jax.random.split(key, 6)
+    dt_bias = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[4], (h,), jnp.float32) *
+                (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    ))  # inverse-softplus of dt in [1e-3, 1e-1]
+    return {
+        # in_proj -> [z (din), x (din), B (n), C (n), dt (h)]
+        "w_in": dense_init(ks[0], d, 2 * din + 2 * n + h, cfg),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * (3.0 / cfg.ssm_conv) ** 0.5).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": {"scale": jnp.zeros((din,), cfg.param_dtype)},
+        "w_out": residual_out_init(ks[5], din, d, cfg, fan_in=din),
+    }
+
+
+def _split_proj(params, u, cfg: ModelConfig):
+    din, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = u @ params["w_in"]
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din : 2 * din + 2 * n]
+    dt_raw = zxbcdt[..., 2 * din + 2 * n :]
+    return z, xbc, dt_raw
+
+
+def _post_conv(xbc, cfg: ModelConfig):
+    din, n = cfg.ssm_d_inner, cfg.ssm_state
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :din]
+    b_ = xbc[..., din : din + n]
+    c_ = xbc[..., din + n :]
+    return x, b_, c_
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv over time. xbc (B, T, C), conv_w (K, C).
+
+    conv_state (B, K-1, C): trailing inputs from the previous segment
+    (decode). Returns (out (B,T,C), new_state).
+    """
+    k = conv_w.shape[0]
+    b, t, c = xbc.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((b, k - 1, c), xbc.dtype)
+    ext = jnp.concatenate([conv_state, xbc], axis=1)  # (B, T+K-1, C)
+    out = jnp.zeros((b, t, c), xbc.dtype)
+    for i in range(k):
+        out = out + ext[:, i : i + t, :] * conv_w[i][None, None, :]
+    out = out + conv_b[None, None, :]
+    new_state = ext[:, t:, :] if t >= 1 else conv_state
+    new_state = jax.lax.dynamic_slice_in_dim(ext, ext.shape[1] - (k - 1), k - 1, axis=1)
+    return out, new_state
+
+
+def _segsum_decay(dA):  # (..., Q) -> (..., Q, Q) lower-tri decay logs
+    q = dA.shape[-1]
+    cum = jnp.cumsum(dA, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # log decay j -> i
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, a_neg, b_, c_, d_skip, *, chunk: int, init_state=None):
+    """Chunked SSD. x (B,T,H,P), dt (B,T,H), a_neg (H,), b_/c_ (B,T,N).
+
+    Returns (y (B,T,H,P), final_state (B,H,N,P)).
+    """
+    bsz, t, h, p = x.shape
+    n = b_.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = b_.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cf = c_.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    a_neg = a_neg.astype(jnp.float32)
+    d_skip = d_skip.astype(jnp.float32)
+    if init_state is not None:
+        init_state = init_state.astype(jnp.float32)
+
+    dA = dtf * a_neg[None, None, None, :]  # (B,nc,Q,H) log-decay per step
+    dA_hq = dA.transpose(0, 1, 3, 2)  # (B,nc,H,Q)
+    cum = jnp.cumsum(dA_hq, axis=-1)  # (B,nc,H,Q)
+    decay_mat = jnp.exp(_segsum_decay(dA_hq))  # (B,nc,H,Q,Q), lower-tri
+
+    # intra-chunk (diagonal) term
+    scores = jnp.einsum("bcin,bcjn->bcij", cf, bf)  # (B,nc,Q,Q)
+    y_diag = jnp.einsum(
+        "bcij,bchij,bcjh,bcjhp->bcihp", scores, decay_mat, dtf, xf
+    )
+
+    # per-chunk end states: S_c = sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # (B,nc,H,Q)
+    s_chunk = jnp.einsum(
+        "bchj,bcjh,bcjn,bcjhp->bchnp", decay_to_end, dtf, bf, xf
+    )  # (B,nc,H,N,P)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(cum[..., -1])  # (B,nc,H) total decay per chunk
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def body(carry, xs):
+        s_in, dec, s_new = carry, xs[0], xs[1]
+        out = s_in  # state BEFORE this chunk
+        s_next = s_in * dec[:, :, None, None] + s_new
+        return s_next, out
+
+    dec_t = chunk_decay.transpose(1, 0, 2)  # (nc, B, H)
+    s_t = s_chunk.transpose(1, 0, 2, 3, 4)  # (nc, B, H, N, P)
+    final_state, states_before = jax.lax.scan(body, init_state, (dec_t, s_t))
+    states_before = states_before.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
+
+    # off-diagonal (inter-chunk) contribution
+    in_decay = jnp.exp(cum)  # decay from chunk start to position i
+    y_off = jnp.einsum(
+        "bcin,bchi,bchnp->bcihp", cf, in_decay.transpose(0, 1, 2, 3), states_before
+    )
+    y = y_diag + y_off + d_skip[None, None, None, :, None] * xf
+    return y.reshape(bsz, t, h, p), final_state
+
+
+def ssd_block_apply(params, u, cfg: ModelConfig, *, ssm_state=None,
+                    conv_state=None, return_state: bool = False):
+    """Full mamba2 block over a sequence. u (B, T, D)."""
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xbc_raw, dt_raw = _split_proj(params, u, cfg)
+    xbc, new_conv_state = _causal_conv(
+        xbc_raw, params["conv_w"].astype(u.dtype), params["conv_b"].astype(u.dtype),
+        conv_state,
+    )
+    x, b_, c_ = _post_conv(xbc, cfg)
+    bsz, t, _ = u.shape
+    xh = x.reshape(bsz, t, h, p)
+    xh = shard(xh, BATCH, None, MODEL, None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["a_log"])
+    y, final_state = ssd_scan(
+        xh, dt, a_neg, b_, c_, params["d_skip"], chunk=min(cfg.ssm_chunk, t),
+        init_state=ssm_state,
+    )
+    y = y.reshape(bsz, t, h * p).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["w_out"]
+    if return_state:
+        return out, final_state, new_conv_state
+    return out
+
+
+def ssd_decode_step(params, u, cfg: ModelConfig, *, ssm_state, conv_state):
+    """One-token step. u (B, 1, D); states from make_ssd_state/prefill."""
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xbc_raw, dt_raw = _split_proj(params, u, cfg)
+    # conv: use the stored K-1 trailing inputs
+    xbc, new_conv_state = _causal_conv(
+        xbc_raw, params["conv_w"].astype(u.dtype), params["conv_b"].astype(u.dtype),
+        conv_state,
+    )
+    x, b_, c_ = _post_conv(xbc, cfg)
+    bsz = u.shape[0]
+    xh = x.reshape(bsz, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a_neg = -jnp.exp(params["a_log"])
+    dec = jnp.exp(dt * a_neg[None, :])  # (B,H)
+    bf = b_[:, 0].astype(jnp.float32)  # (B,N)
+    cf = c_[:, 0].astype(jnp.float32)
+    new_state = (ssm_state * dec[:, :, None, None]
+                 + jnp.einsum("bh,bn,bhp->bhnp", dt, bf, xh))
+    y = jnp.einsum("bn,bhnp->bhp", cf, new_state) + params["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, h * p).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["w_out"], new_state, new_conv_state
+
+
+def make_ssd_state(cfg: ModelConfig, n_layers: int, batch: int):
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * n
+    return {
+        "ssm": jnp.zeros((n_layers, batch, h, n, p), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim), cfg.dtype),
+    }

@@ -1,0 +1,9 @@
+"""Deep-net optimizers (the convex federated optimizers live in core/)."""
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.flens_head import (
+    extract_features,
+    flens_head_init,
+    flens_head_update,
+    head_problem,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine

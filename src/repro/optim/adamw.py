@@ -1,0 +1,63 @@
+"""AdamW with configurable state dtype (fp32 default; bf16 for the 1T MoE,
+where fp32 moments cannot fit 512 x 16 GB — see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, *, state_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    params,
+    grads,
+    opt_state,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float | None = 1.0,
+):
+    """One AdamW step. lr may be a scalar or a schedule value."""
+    step = opt_state["step"] + 1
+
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+    else:
+        gnorm = jnp.float32(0.0)
+        scale = 1.0
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = (g.astype(jnp.float32) * scale).astype(m.dtype)
+        m2 = b1 * m + (1.0 - b1) * gf
+        v2 = b2 * v + (1.0 - b2) * jnp.square(gf)
+        mhat = m2.astype(jnp.float32) / bc1
+        vhat = v2.astype(jnp.float32) / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm

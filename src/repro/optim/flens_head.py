@@ -1,0 +1,58 @@
+"""FLeNS-head: the paper's optimizer as a first-class trainer feature.
+
+The sound transplant of FLeNS (a convex second-order federated method) to
+deep networks is second-order on the *convex-given-features* head block:
+a logistic readout on frozen/slow backbone features is exactly the
+paper's problem with X := features (DESIGN.md §4.1).
+
+Usage (see examples/federated_llm.py): per round, every client (= data
+mesh slice) extracts features with the shared backbone, forms its local
+gradient + two-sided sketched Hessian of the head objective, and the
+server performs the FLeNS update. This module provides the glue from an
+LM backbone to a ``repro.core`` FederatedProblem.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FLeNS, logistic, make_problem
+from repro.core.federated import FederatedProblem
+
+
+def extract_features(model, params, tokens, *, pool: str = "mean"):
+    """Backbone features for a token batch (no LM head). (B, D) float."""
+    from repro.models.common import embed
+
+    cfg = model.cfg
+    x = embed(params["embed"], tokens, cfg)
+    feats, _, _ = model._backbone(params, x)
+    if pool == "mean":
+        return jnp.mean(feats.astype(jnp.float32), axis=1)
+    if pool == "last":
+        return feats[:, -1].astype(jnp.float32)
+    raise ValueError(pool)
+
+
+def head_problem(features: jax.Array, labels: jax.Array, m_clients: int,
+                 lam: float = 1e-3, heterogeneity: str = "iid",
+                 key=None) -> FederatedProblem:
+    """Build the convex head objective as a federated problem.
+
+    features (N, D) float; labels (N,) in {-1, +1}.
+    """
+    feats = features.astype(jnp.float64)
+    return make_problem(
+        feats, labels.astype(jnp.float64), m=m_clients, lam=lam,
+        objective=logistic, heterogeneity=heterogeneity, key=key,
+    )
+
+
+def flens_head_init(problem: FederatedProblem, *, k: int, **flens_kw):
+    opt = FLeNS(k=k, **flens_kw)
+    w0 = jnp.zeros((problem.dim,), problem.X.dtype)
+    return opt, opt.init(problem, w0)
+
+
+def flens_head_update(opt: FLeNS, problem: FederatedProblem, state, key):
+    return opt.round(problem, state, key)

@@ -1,0 +1,22 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr, total_steps, min_frac=0.1):
+    frac = jnp.clip(step / total_steps, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return base_lr * (min_frac + (1.0 - min_frac) * cos)
+
+
+def linear_warmup_cosine(step, *, base_lr, warmup_steps, total_steps,
+                         min_frac=0.1):
+    warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+    decay = cosine_schedule(
+        jnp.maximum(step - warmup_steps, 0),
+        base_lr=base_lr,
+        total_steps=jnp.maximum(total_steps - warmup_steps, 1),
+        min_frac=min_frac,
+    )
+    return jnp.where(step < warmup_steps, warm, decay)

@@ -1,0 +1,179 @@
+"""Continuous-batching serving engine.
+
+Slot-based scheduler over a fixed decode batch: every sequence in the
+batch sits at its own position (per-slot ``index`` vector — see
+``attention.attn_decode``), so new requests are admitted into free slots
+while others are mid-generation; no generation "waves", no head-of-line
+blocking by the longest sequence.
+
+  * admit: single-request prefill (prompt bucketed to powers of two to
+    bound compile count), state inserted into the batch state at the free
+    slot (batch-dim discovered structurally per leaf);
+  * step: one jitted batched decode for all active slots;
+  * complete: slots free as sequences hit max_new_tokens (or EOS).
+
+Correctness contract (tests/test_serving_engine.py): every request's
+continuous-batched output equals its isolated prefill+greedy-decode
+output exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list  # token ids
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int, minimum: int = 16) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServingEngine:
+    def __init__(self, model: LM, params, *, max_batch: int = 4,
+                 cache_len: int = 512):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * max_batch
+
+        self.state = model.init_decode_state(max_batch, cache_len, index=0)
+        self.state["index"] = jnp.zeros((max_batch,), jnp.int32)
+        self.active = np.zeros(max_batch, dtype=bool)
+        self.last_tokens = np.zeros(max_batch, dtype=np.int32)
+
+        # structural batch-dim discovery per state leaf
+        s1 = jax.eval_shape(lambda: self._mk_state(1))
+        s2 = jax.eval_shape(lambda: self._mk_state(2))
+
+        def bdim(a, b):
+            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return i
+            return None
+
+        self._batch_dims = jax.tree.map(bdim, s1, s2)
+
+        self._decode = jax.jit(model.decode_step)
+        self._insert = jax.jit(self._insert_impl, static_argnums=())
+        self._prefill_cache = {}
+
+    def _mk_state(self, b):
+        st = self.model.init_decode_state(b, self.cache_len, index=0)
+        st["index"] = jnp.zeros((b,), jnp.int32)
+        return st
+
+    # -- state surgery ---------------------------------------------------------
+    def _insert_impl(self, batch_state, single_state, slot):
+        def ins(big, small, bd):
+            if bd is None:
+                return big
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), slot, axis=bd)
+
+        return jax.tree.map(ins, batch_state, single_state, self._batch_dims)
+
+    @staticmethod
+    def _mask_padded_positions(state, true_len: int):
+        """Invalidate cache slots written by right-padding garbage."""
+        def walk(node):
+            if isinstance(node, dict):
+                return {k: (jnp.where(v >= true_len, -1, v) if k == "pos"
+                            else walk(v))
+                        for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            return node
+
+        return walk(state)
+
+    # -- admission ----------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_fn(self, lpad: int):
+        if lpad not in self._prefill_cache:
+            self._prefill_cache[lpad] = jax.jit(
+                lambda p, b: self.model.prefill(p, b, cache_len=self.cache_len)
+            )
+        return self._prefill_cache[lpad]
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            ltrue = len(req.prompt)
+            lpad = min(_bucket(ltrue), self.cache_len)
+            toks = np.zeros((1, lpad), np.int32)
+            toks[0, :ltrue] = req.prompt
+            logits, sstate = self._prefill_fn(lpad)(
+                self.params, {"inputs": jnp.asarray(toks)})
+            # prefill ran over lpad tokens; logits must come from the LAST
+            # REAL token. Re-run decode-style? Cheaper: if padded, the next
+            # token comes from a one-step decode at position ltrue-1 using
+            # the (masked) cache — handled by taking logits only when
+            # lpad == ltrue, else bootstrapping with the last real token.
+            sstate = self._mask_padded_positions(sstate, ltrue)
+            sstate["index"] = jnp.full((1,), ltrue, jnp.int32)
+            self.state = self._insert(self.state, sstate,
+                                      jnp.asarray(slot, jnp.int32))
+            if lpad == ltrue:
+                first = int(jnp.argmax(logits[0]))
+                self.last_tokens[slot] = first
+                req.generated.append(first)
+            else:
+                # replay the last real token through one decode step
+                self.state["index"] = self.state["index"].at[slot].set(ltrue - 1)
+                self.last_tokens[slot] = req.prompt[-1]
+            self.slots[slot] = req
+            self.active[slot] = True
+
+    # -- one engine iteration --------------------------------------------------------
+    def step(self) -> int:
+        """Admit + one batched decode. Returns number of active slots."""
+        self._admit()
+        if not self.active.any():
+            return 0
+        toks = jnp.asarray(self.last_tokens[:, None])
+        logits, self.state = self._decode(self.params, self.state, toks)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for slot in range(self.max_batch):
+            req = self.slots[slot]
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            self.last_tokens[slot] = tok
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if len(req.generated) >= req.max_new_tokens or hit_eos:
+                req.done = True
+                self.slots[slot] = None
+                self.active[slot] = False
+        return int(self.active.sum())
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and not self.active.any():
+                return
+            self.step()
+        raise RuntimeError("serving run() exceeded max_steps")

@@ -1,0 +1,91 @@
+"""Mesh context + activation sharding-constraint helpers.
+
+Models call ``shard(x, *axes)`` with *physical* mesh axis names; when no
+mesh is active (single-device smoke tests) every call is a no-op, so the
+model code is mesh-agnostic. Axis entries that name axes absent from the
+active mesh are dropped, which lets the same model run on the single-pod
+("data","model") and multi-pod ("pod","data","model") meshes unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Mesh | None = None
+
+# Logical batch axis: sharded over every data-parallel mesh axis present.
+BATCH = ("pod", "data")
+MODEL = "model"
+FSDP = "data"  # weight-shard axis for fully-sharded data parallelism
+
+
+def set_mesh(mesh: Mesh | None) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Mesh | None:
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    prev = _MESH
+    set_mesh(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        set_mesh(prev)
+
+
+def _filter_axes(mesh: Mesh, axes):
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        elif isinstance(a, (tuple, list)):
+            sub = tuple(x for x in a if x in mesh.axis_names)
+            out.append(sub if sub else None)
+        else:
+            out.append(a if a in mesh.axis_names else None)
+    # drop trailing Nones (cosmetic)
+    while out and out[-1] is None:
+        out.pop()
+    return tuple(out)
+
+
+def pspec(*axes) -> P:
+    """PartitionSpec with axes filtered to the active mesh (P() if none)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return P()
+    return P(*_filter_axes(mesh, axes))
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op without one)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = P(*_filter_axes(mesh, axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*axes) -> NamedSharding | None:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P(*_filter_axes(mesh, axes)))
+
+
+def axis_size(name: str) -> int:
+    mesh = get_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

@@ -1,0 +1,11 @@
+"""Shared test config.
+
+x64 is enabled for the convex-core tests (Newton convergence to 1e-12
+needs it); model code paths specify dtypes explicitly so they are
+unaffected. NOTE: no XLA_FLAGS device-count forcing here — smoke tests
+and benches must see the single real CPU device; sharding tests spawn
+subprocesses that set the flag themselves.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,140 @@
+"""Behavioural tests for FLeNS and every Table-I baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALGORITHMS,
+    logistic,
+    make_optimizer,
+    make_problem,
+    newton_solve,
+    run_rounds,
+)
+from repro.data import make_classification
+
+
+@pytest.fixture(scope="module")
+def problem():
+    X, y = make_classification(jax.random.PRNGKey(0), 1500, 48)
+    prob = make_problem(X, y, m=6, lam=1e-3, objective=logistic)
+    w0 = jnp.zeros(prob.dim, jnp.float64)
+    w_star = newton_solve(prob, w0, iters=30)
+    return prob, w0, w_star
+
+
+def _kwargs(name, dim):
+    return {
+        "fedavg": dict(lr=2.0, local_steps=5),
+        "fedprox": dict(lr=2.0, local_steps=5, mu_prox=0.01),
+        "fedns": dict(k=32),
+        "flens": dict(k=32),
+        "flens_plus": dict(k=32),
+    }.get(name, {})
+
+
+def test_newton_solve_reaches_stationarity(problem):
+    prob, w0, w_star = problem
+    gnorm = float(jnp.linalg.norm(prob.global_grad(w_star)))
+    assert gnorm < 1e-10
+
+
+@pytest.mark.parametrize("name", ALGORITHMS)
+def test_all_algorithms_decrease_loss(problem, name):
+    prob, w0, w_star = problem
+    opt = make_optimizer(name, **_kwargs(name, prob.dim))
+    hist = run_rounds(opt, prob, w0, w_star, rounds=8)
+    assert np.isfinite(hist.loss).all()
+    assert hist.loss[-1] < hist.loss[0] * 0.9
+    # every method's gap shrinks by >=2x over 8 rounds on this easy problem
+    assert hist.gap[-1] < hist.gap[0] * 0.5
+
+
+def test_fednewton_superlinear(problem):
+    """Exact federated Newton hits ~machine precision in <6 rounds."""
+    prob, w0, w_star = problem
+    hist = run_rounds(make_optimizer("fednewton"), prob, w0, w_star, rounds=6)
+    assert hist.gap[-1] < 1e-12
+
+
+def test_flens_full_sketch_matches_newton(problem):
+    """k = next_pow2(M): the SRHT spans the full space -> Newton behaviour."""
+    prob, w0, w_star = problem
+    opt = make_optimizer("flens", k=64)  # dim=48 pads to 64
+    hist = run_rounds(opt, prob, w0, w_star, rounds=6)
+    assert hist.gap[-1] < 1e-10
+
+
+def test_flens_sketch_floor_monotone_in_k(problem):
+    """Larger sketches converge further (paper Fig. 2 behaviour)."""
+    prob, w0, w_star = problem
+    gaps = {}
+    for k in (12, 24, 64):
+        opt = make_optimizer("flens", k=k, beta=0.0)
+        gaps[k] = run_rounds(opt, prob, w0, w_star, rounds=10, seed=3).gap[-1]
+    assert gaps[64] < gaps[24] < gaps[12]
+
+
+def test_flens_beats_fedavg_in_rounds(problem):
+    """Paper Fig. 1: FLeNS converges in far fewer rounds than FedAvg."""
+    prob, w0, w_star = problem
+    flens = run_rounds(make_optimizer("flens", k=32), prob, w0, w_star, rounds=10)
+    fedavg = run_rounds(
+        make_optimizer("fedavg", lr=2.0, local_steps=5), prob, w0, w_star, rounds=10
+    )
+    assert flens.gap[-1] < fedavg.gap[-1] * 0.5
+
+
+def test_flens_plus_beats_paper_variant_floor(problem):
+    """FLeNS+ (complement gradient step) reaches a lower gap at small k."""
+    prob, w0, w_star = problem
+    base = run_rounds(
+        make_optimizer("flens", k=12, beta=0.0), prob, w0, w_star, rounds=25, seed=1
+    )
+    plus = run_rounds(
+        make_optimizer("flens_plus", k=12, beta=0.0), prob, w0, w_star, rounds=25, seed=1
+    )
+    assert plus.gap[-1] < base.gap[-1]
+
+
+def test_flens_restart_prevents_divergence(problem):
+    """The literal A7 momentum (beta ~ 1) diverges without restart; the
+    restart safeguard keeps it monotone-ish and convergent."""
+    prob, w0, w_star = problem
+    unsafe = make_optimizer("flens", k=24, beta="paper", restart=False)
+    safe = make_optimizer("flens", k=24, beta="paper", restart=True)
+    h_unsafe = run_rounds(unsafe, prob, w0, w_star, rounds=12)
+    h_safe = run_rounds(safe, prob, w0, w_star, rounds=12)
+    assert h_safe.gap[-1] < 1e-2
+    assert h_safe.gap[-1] < h_unsafe.gap[-1]
+
+
+def test_uplink_accounting_matches_table_i(problem):
+    """Communication-per-round formulas (Table I), measured in floats."""
+    prob, _, _ = problem
+    m_dim = prob.dim
+    k = 16
+    assert make_optimizer("fedavg").uplink_floats(prob) == m_dim
+    assert make_optimizer("fednewton").uplink_floats(prob) == m_dim**2 + m_dim
+    assert make_optimizer("fedns", k=k).uplink_floats(prob) == k * m_dim + m_dim
+    fl = make_optimizer("flens", k=k)
+    assert fl.uplink_floats(prob) == k * k + k + 1  # + restart scalar
+    assert fl.uplink_floats(prob) < make_optimizer("fedns", k=k).uplink_floats(prob)
+
+
+def test_heterogeneous_partition_still_converges():
+    """Label-skewed (non-iid) clients: FLeNS still approaches w*."""
+    X, y = make_classification(jax.random.PRNGKey(5), 1500, 32)
+    prob = make_problem(
+        X, y, m=6, lam=1e-3, objective=logistic, heterogeneity="label"
+    )
+    w0 = jnp.zeros(prob.dim, jnp.float64)
+    w_star = newton_solve(prob, w0, iters=30)
+    hist = run_rounds(make_optimizer("flens", k=32), prob, w0, w_star, rounds=10)
+    assert hist.gap[-1] < 1e-6
+
+
+def test_client_weights_sum_to_one(problem):
+    prob, _, _ = problem
+    np.testing.assert_allclose(float(jnp.sum(prob.client_weights)), 1.0, rtol=1e-12)

@@ -1,0 +1,95 @@
+"""Sketch-operator properties (incl. hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.sketch import effective_dimension, make_sketch, sketch_psd
+
+
+@pytest.mark.parametrize("kind", ["srht", "gaussian", "sjlt"])
+@pytest.mark.parametrize("dim", [16, 37, 64])
+def test_apply_matches_dense(kind, dim):
+    """apply / apply_t agree with the materialized (k, dim) matrix."""
+    k = 8
+    s = make_sketch(jax.random.PRNGKey(0), kind, k, dim, dtype=jnp.float64)
+    mat = s.dense()
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, dim), jnp.float64)
+    np.testing.assert_allclose(s.apply(x), x @ mat.T, rtol=1e-10, atol=1e-12)
+    y = jax.random.normal(jax.random.PRNGKey(2), (5, k), jnp.float64)
+    np.testing.assert_allclose(s.apply_t(y), y @ mat, rtol=1e-10, atol=1e-12)
+
+
+def test_srht_rows_orthogonal_when_pow2():
+    """For dim a power of two, S S^T = (dim/k) I exactly."""
+    dim, k = 64, 16
+    s = make_sketch(jax.random.PRNGKey(0), "srht", k, dim, dtype=jnp.float64)
+    mat = s.dense()
+    np.testing.assert_allclose(
+        mat @ mat.T, (dim / k) * jnp.eye(k), rtol=1e-10, atol=1e-10
+    )
+
+
+@pytest.mark.parametrize("kind", ["srht", "gaussian", "sjlt"])
+def test_unbiased_identity(kind):
+    """E[S^T S / scale] ~ I over sketch draws."""
+    dim, k, reps = 32, 16, 400
+    keys = jax.random.split(jax.random.PRNGKey(0), reps)
+
+    def one(key):
+        s = make_sketch(key, kind, k, dim, dtype=jnp.float64)
+        mat = s.dense()
+        return mat.T @ mat
+
+    acc = np.mean([np.asarray(one(k)) for k in keys[:reps]], axis=0)
+    # normalize by the mean diagonal so one tolerance covers all kinds
+    acc = acc / np.mean(np.diag(acc))
+    np.testing.assert_allclose(acc, np.eye(dim), atol=0.25)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([8, 16, 24]),
+    dim=st.sampled_from([24, 32, 50]),
+    seed=st.integers(0, 2**30),
+)
+def test_sketch_psd_is_psd_and_correct(k, dim, seed):
+    """S H S^T is PSD for PSD H and equals the dense computation."""
+    if k > dim:
+        k = dim
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (dim + 4, dim), jnp.float64)
+    h = a.T @ a / dim
+    s = make_sketch(jax.random.fold_in(key, 1), "srht", k, dim, dtype=jnp.float64)
+    shs = sketch_psd(s, h)
+    mat = s.dense()
+    np.testing.assert_allclose(shs, mat @ h @ mat.T, rtol=1e-8, atol=1e-9)
+    evals = np.linalg.eigvalsh(np.asarray(shs))
+    assert evals.min() >= -1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_subspace_embedding_quality(seed):
+    """Sketched PSD spectrum is sandwiched for k comfortably > d_eff."""
+    dim, k = 64, 48
+    key = jax.random.PRNGKey(seed)
+    # low effective dimension: fast-decaying spectrum
+    evals = jnp.concatenate([jnp.ones(4), 1e-3 * jnp.ones(dim - 4)])
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (dim, dim), jnp.float64))
+    h = (q * evals) @ q.T
+    s = make_sketch(jax.random.fold_in(key, 7), "srht", k, dim, dtype=jnp.float64)
+    shs = sketch_psd(s, h)
+    # top eigenvalue of the sketch must be within a constant of the true top
+    top_sk = float(jnp.linalg.eigvalsh(shs)[-1])
+    assert 0.3 <= top_sk / 1.0 <= 3.5
+
+
+def test_effective_dimension():
+    evals = jnp.array([10.0, 1.0, 0.1, 0.001])
+    h = jnp.diag(evals)
+    lam = 0.1
+    expect = float(jnp.sum(evals / (evals + lam)))
+    assert abs(float(effective_dimension(h, lam)) - expect) < 1e-9

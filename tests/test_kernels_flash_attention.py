@@ -1,0 +1,89 @@
+"""Flash-attention Pallas kernel vs naive oracle: sweeps + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _qkv(key, b, tq, tk, h, hkv, d, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, tq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, tk, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, tk, hkv, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("tq,tk", [(64, 64), (100, 100), (32, 96), (1, 128)])
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_oracle(tq, tk, h, hkv, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(tq + h), 2, tq, tk, h, hkv, 32, dtype)
+    qoff = tk - tq  # decode-style offset keeps causal well-defined
+    got = flash_attention_pallas(q, k, v, q_offset=qoff, block_q=32,
+                                 block_k=32, interpret=True)
+    want = ref.mha(q, k, v, q_offset=qoff)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("window", [1, 7, 32, 1000])
+def test_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(window), 2, 96, 96, 4, 2, 16)
+    got = flash_attention_pallas(q, k, v, window=window, block_q=32,
+                                 block_k=32, interpret=True)
+    want = ref.mha(q, k, v, window=window)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 64, 48, 4, 4, 32)
+    got = flash_attention_pallas(q, k, v, causal=False, block_q=32,
+                                 block_k=16, interpret=True)
+    want = ref.mha(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(16, 16), (32, 64), (128, 128)])
+def test_block_shape_invariance(block_q, block_k):
+    """Output must not depend on the BlockSpec tiling."""
+    q, k, v = _qkv(jax.random.PRNGKey(5), 1, 128, 128, 4, 2, 32)
+    got = flash_attention_pallas(q, k, v, block_q=block_q, block_k=block_k,
+                                 interpret=True)
+    want = ref.mha(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tq=st.integers(1, 80),
+    extra=st.integers(0, 64),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**30),
+)
+def test_property_matches_oracle(tq, extra, hkv, group, causal, seed):
+    tk = tq + extra
+    h = hkv * group
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 1, tq, tk, h, hkv, 16)
+    got = flash_attention_pallas(q, k, v, causal=causal, q_offset=extra,
+                                 block_q=32, block_k=32, interpret=True)
+    want = ref.mha(q, k, v, causal=causal, q_offset=extra)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_softmax_rows_sum_to_one_property():
+    """With v = ones, attention output must be exactly ones (prob simplex)."""
+    q, k, _ = _qkv(jax.random.PRNGKey(9), 2, 64, 64, 4, 2, 32)
+    v = jnp.ones((2, 64, 2, 32), jnp.float32)
+    got = flash_attention_pallas(q, k, v, block_q=32, block_k=32,
+                                 interpret=True)
+    np.testing.assert_allclose(got, jnp.ones_like(got), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,122 @@
+"""Per-arch smoke tests: reduced variant, one forward + one train step.
+
+Each assigned architecture is instantiated in its REDUCED form (2-3
+layers, d_model<=256, <=4 experts) and must (a) produce finite logits of
+the right shape, (b) take one SGD step that changes the params and keeps
+the loss finite, and (c) run prefill + a decode step whose logits agree
+with the full forward (KV-cache consistency).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import _ALIASES, get_config
+from repro.models.lm import LM
+
+ARCHS = list(_ALIASES)
+
+
+def _batch(cfg, key, b=2, t=16):
+    kt, kl, kv, ka = jax.random.split(key, 4)
+    batch = {
+        "inputs": jax.random.randint(kt, (b, t), 0, cfg.vocab),
+        "labels": jax.random.randint(kl, (b, t), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            kv, (b, cfg.vision_tokens, cfg.vision_dim), jnp.float32
+        )
+    if cfg.family == "audio":
+        batch["audio_frames"] = jax.random.normal(
+            ka, (b, cfg.audio_frames, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Build (model, params, batch) per arch once."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            # generous MoE capacity: no token drops, so prefill and decode
+            # paths are numerically identical (drop tests live elsewhere)
+            cfg = get_config(arch).reduced(capacity_factor=4.0)
+            model = LM(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            batch = _batch(cfg, jax.random.PRNGKey(1))
+            cache[arch] = (cfg, model, params, batch)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(built, arch):
+    cfg, model, params, batch = built(arch)
+
+    loss_fn = jax.jit(lambda p, b: model.loss(p, b))
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(lambda p: model.loss(p, batch), has_aux=True)
+    )(params)
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    assert float(loss) > 0
+    # rough sanity: CE within a constant of log(vocab) at init (tied-embed
+    # models start with a large logit on the input token, hence the slack)
+    assert float(metrics["ce"]) < np.log(cfg.vocab) + 12.0
+
+    # one SGD step -> params change, loss stays finite
+    lr = 1e-2
+    new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+    loss2, _ = loss_fn(new_params, batch)
+    assert np.isfinite(float(loss2))
+    diffs = jax.tree.leaves(
+        jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), params, new_params)
+    )
+    assert max(diffs) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(built, arch):
+    """decode_step after prefill(T-1 tokens) must match full forward at T."""
+    cfg, model, params, batch = built(arch)
+    b, t = batch["inputs"].shape
+
+    # full forward logits at every position
+    full_batch = dict(batch)
+    prefill_batch = dict(batch)
+    prefill_batch["inputs"] = batch["inputs"][:, : t - 1]
+
+    logits_pre, state = jax.jit(
+        lambda p, bt: model.prefill(p, bt, cache_len=t + 4)
+    )(params, prefill_batch)
+    last_tok = batch["inputs"][:, t - 1 : t]
+    logits_dec, state = jax.jit(model.decode_step)(params, state, last_tok)
+
+    # oracle: prefill on all t tokens gives the logits after token t
+    logits_full, _ = jax.jit(lambda p, bt: model.prefill(p, bt, cache_len=t + 4))(
+        params, full_batch
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_full, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+    assert np.isfinite(np.asarray(logits_dec, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_zeroed_decode_state_step(built, arch):
+    """serve_step runs from a zero-initialized state (dry-run path)."""
+    cfg, model, params, batch = built(arch)
+    b = batch["inputs"].shape[0]
+    state = model.init_decode_state(b, 32, index=7)
+    if cfg.family == "vlm":
+        pass  # cross_k/v zeros are fine for a shape/NaN check
+    tok = batch["inputs"][:, :1]
+    logits, state2 = jax.jit(model.decode_step)(params, state, tok)
+    assert logits.shape == (b, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(state2["index"]) == 8

@@ -1,0 +1,85 @@
+"""MoE dispatch unit tests: routing, capacity drops, dense-oracle match."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models import moe as moe_mod
+from repro.models.common import ModelConfig
+
+
+def _cfg(**kw):
+    base = get_config("arctic-480b").reduced(capacity_factor=8.0)
+    import dataclasses
+
+    return dataclasses.replace(base, moe_dense_residual=False, **kw)
+
+
+def _dense_oracle(params, x, cfg):
+    """No-capacity reference: every token exactly by its top-k experts."""
+    b, t, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    out = jnp.zeros_like(xf)
+    for e in range(cfg.n_experts):
+        h = act(xf @ params["w_gate"][e]) * (xf @ params["w_up"][e])
+        ye = h @ params["w_down"][e]
+        mask = jnp.sum(jnp.where(ids == e, w, 0.0), axis=-1)
+        out = out + ye * mask[:, None].astype(ye.dtype)
+    return out.reshape(b, t, d)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    return cfg, params, x
+
+
+def test_matches_dense_oracle_with_ample_capacity(setup):
+    cfg, params, x = setup
+    out, aux, drop = moe_mod.moe_apply(params, x, cfg, capacity=32)
+    want = _dense_oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(drop) == 0.0
+
+
+def test_capacity_drops_tokens(setup):
+    cfg, params, x = setup
+    out, aux, drop = moe_mod.moe_apply(params, x, cfg, capacity=1)
+    assert 0.0 < float(drop) < 1.0
+    # dropped tokens pass through with zero MoE contribution — output norm
+    # strictly below the no-drop output norm
+    full, _, _ = moe_mod.moe_apply(params, x, cfg, capacity=32)
+    assert float(jnp.linalg.norm(out)) < float(jnp.linalg.norm(full)) + 1e-3
+
+
+def test_aux_loss_near_topk_for_uniform_router(setup):
+    """Switch LB loss ~= top_k under uniform routing: sum_e f_e = top_k and
+    p_e ~= 1/E, so E * sum_e f_e p_e ~= top_k."""
+    cfg, params, x = setup
+    _, aux, _ = moe_mod.moe_apply(params, x, cfg, capacity=32)
+    assert 0.8 * cfg.top_k < float(aux) < 2.0 * cfg.top_k
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), topk=st.sampled_from([1, 2]))
+def test_router_weights_sum_to_one_property(seed, topk):
+    cfg = _cfg(top_k=topk)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (6, cfg.d_model),
+                          jnp.float32)
+    router = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                               (cfg.d_model, cfg.n_experts), jnp.float32)
+    ids, w, aux = moe_mod._route(router, x, cfg)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, axis=-1)), 1.0, rtol=1e-5)
+    assert int(ids.max()) < cfg.n_experts

@@ -1,0 +1,149 @@
+"""SSD (mamba2) and RG-LRU numerics vs naive sequential recurrences."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models import rglru as rg
+from repro.models import ssd as ssd_mod
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked scan == naive per-step recurrence
+# ---------------------------------------------------------------------------
+
+def naive_ssd(x, dt, a_neg, b_, c_, d_skip, init_state=None):
+    """h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t^T ; y_t = C_t h_t + D x_t."""
+    bsz, t, h, p = x.shape
+    n = b_.shape[-1]
+    if init_state is None:
+        state = jnp.zeros((bsz, h, n, p))
+    else:
+        state = init_state
+    ys = []
+    for i in range(t):
+        dec = jnp.exp(dt[:, i] * a_neg[None, :])  # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt[:, i], b_[:, i], x[:, i])
+        state = state * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", c_[:, i], state)
+        y = y + d_skip[None, :, None] * x[:, i]
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state
+
+
+@pytest.mark.parametrize("t,chunk", [(8, 4), (16, 4), (12, 12), (32, 8)])
+def test_ssd_chunked_matches_naive(t, chunk):
+    bsz, h, p, n = 2, 3, 4, 5
+    key = jax.random.PRNGKey(t)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (bsz, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, t, h)))
+    a_neg = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b_ = jax.random.normal(ks[3], (bsz, t, n))
+    c_ = jax.random.normal(ks[4], (bsz, t, n))
+    d_skip = jnp.ones((h,))
+    y, s = ssd_mod.ssd_scan(x, dt, a_neg, b_, c_, d_skip, chunk=chunk)
+    y2, s2 = naive_ssd(x, dt, a_neg, b_, c_, d_skip)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_init_state_continuation():
+    """Scanning [first half] then [second half with carried state] must
+    equal one full scan — the property decode streaming relies on."""
+    bsz, t, h, p, n = 1, 16, 2, 4, 3
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (bsz, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, t, h)))
+    a_neg = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b_ = jax.random.normal(ks[3], (bsz, t, n))
+    c_ = jax.random.normal(ks[4], (bsz, t, n))
+    d_skip = jnp.zeros((h,))
+    y_full, s_full = ssd_mod.ssd_scan(x, dt, a_neg, b_, c_, d_skip, chunk=4)
+    y1, s1 = ssd_mod.ssd_scan(x[:, :8], dt[:, :8], a_neg, b_[:, :8],
+                              c_[:, :8], d_skip, chunk=4)
+    y2, s2 = ssd_mod.ssd_scan(x[:, 8:], dt[:, 8:], a_neg, b_[:, 8:],
+                              c_[:, 8:], d_skip, chunk=4, init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_decode_step_matches_scan_tail():
+    """One ssd_decode_step from the scan's state == the scan's last output."""
+    cfg = get_config("mamba2-780m").reduced()
+    model_params = ssd_mod.ssd_init(jax.random.PRNGKey(0), cfg)
+    t = 12
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, t, cfg.d_model),
+                          jnp.float32) * 0.3
+    out_full, s_full, conv_full = ssd_mod.ssd_block_apply(
+        model_params, u, cfg, return_state=True)
+    out_pre, s_pre, conv_pre = ssd_mod.ssd_block_apply(
+        model_params, u[:, : t - 1], cfg, return_state=True)
+    out_step, s_step, conv_step = ssd_mod.ssd_decode_step(
+        model_params, u[:, t - 1 :], cfg, ssm_state=s_pre, conv_state=conv_pre)
+    np.testing.assert_allclose(np.asarray(out_step[:, 0]),
+                               np.asarray(out_full[:, -1]), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_step), np.asarray(s_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU: associative scan == sequential gate recurrence
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(2, 24), seed=st.integers(0, 2**30))
+def test_rglru_scan_matches_sequential(t, seed):
+    d = 8
+    cfg = get_config("recurrentgemma-2b").reduced()
+    params = rg.rglru_init(jax.random.PRNGKey(seed), cfg)
+    # operate directly on the recurrence inputs
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (2, t, cfg.d_model), jnp.float32) * 0.5
+    y, h_last = rg.rglru_scan(params, x)
+    # sequential oracle
+    a, b = rg._gates(params, x)
+    h = jnp.zeros((2, cfg.d_model))
+    ys = []
+    for i in range(t):
+        h = a[:, i] * h + b[:, i]
+        ys.append(h)
+    y2 = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(y2[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_decay_in_unit_interval():
+    cfg = get_config("recurrentgemma-2b").reduced()
+    params = rg.rglru_init(jax.random.PRNGKey(3), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 10, cfg.d_model)) * 2.0
+    a, b = rg._gates(params, x)
+    assert float(a.min()) >= 0.0
+    assert float(a.max()) <= 1.0
+
+
+def test_rglru_step_continuation():
+    cfg = get_config("recurrentgemma-2b").reduced()
+    params = rg.rglru_init(jax.random.PRNGKey(5), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 9, cfg.d_model)) * 0.5
+    y_full, h_full = rg.rglru_scan(params, x)
+    y_pre, h_pre = rg.rglru_scan(params, x[:, :8])
+    y_step, h_step = rg.rglru_step(params, x[:, 8:], h_pre)
+    np.testing.assert_allclose(np.asarray(h_step), np.asarray(h_full),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y_step[:, 0], np.float32),
+                               np.asarray(y_full[:, -1], np.float32),
+                               rtol=2e-4, atol=2e-4)
