@@ -12,14 +12,16 @@ from repro.core.losses import logistic
 from repro.data.libsvm_like import PAPER_DATASETS, load
 
 
-def build_problem(dataset: str, *, seed: int = 0, n_cap: int | None = None):
+def build_problem(dataset: str, *, seed: int = 0, n_cap: int | None = None,
+                  heterogeneity: str = "iid"):
     """Federated logistic-regression problem per paper Table II."""
     spec, X, y = load(dataset, seed=seed)
     if n_cap and X.shape[0] > n_cap:
         X, y = X[:n_cap], y[:n_cap]
     lam = 1e-3  # paper: lambda = 1e-3 everywhere
     prob = make_problem(X, y, m=spec.m_clients, lam=lam, objective=logistic,
-                        key=jax.random.PRNGKey(seed))
+                        key=jax.random.PRNGKey(seed),
+                        heterogeneity=heterogeneity)
     w0 = jnp.zeros((prob.dim,), jnp.float64)
     w_star = newton_solve(prob, w0, iters=40)
     return spec, prob, w0, w_star

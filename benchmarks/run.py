@@ -134,6 +134,66 @@ def bench_table1_communication(full: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Comm: loss vs transmitted bytes / simulated time through repro.comm
+# ---------------------------------------------------------------------------
+
+def bench_comm(full: bool) -> None:
+    """Loss-vs-bytes and loss-vs-simulated-time for FLeNS under the
+    simulated transport: identity codec vs symmetric-pack + int8 on the
+    sketched Hessian, both under a 10%-dropout full-participation
+    channel. Also asserts the backward-compat contract: identity codec +
+    full participation reproduces the no-comm trajectory exactly."""
+    from benchmarks.paper_common import build_problem, run_method
+    from repro.comm import ChannelModel, CommConfig, summarize
+    from repro.core import make_optimizer, run_rounds
+
+    spec, prob, w0, w_star = build_problem("phishing",
+                                           n_cap=None if full else 20000)
+    rounds = 25 if full else 12
+    k = spec.sketch_k
+
+    # contract check: identity/full-participation == legacy, bit for bit
+    base = run_method("flens", dict(k=k), prob, w0, w_star, rounds)
+    ident = run_rounds(make_optimizer("flens", k=k), prob, w0, w_star,
+                       rounds=rounds, comm=CommConfig())
+    exact = bool(np.array_equal(base.loss, ident.loss))
+    _csv("comm/identity_reproduces_legacy", 0.0, f"exact={exact}")
+    assert exact, "identity-codec comm path diverged from the legacy driver"
+
+    channel = ChannelModel(dropout_prob=0.10, straggler_prob=0.10)
+    variants = [
+        ("identity", CommConfig(channel=channel, seed=1)),
+        ("sympack_qint8", CommConfig(
+            codecs={"h_sk": "sympack+qint8", "sg": "qint8"},
+            channel=channel, seed=1)),
+    ]
+    out = {"dataset": spec.name, "rounds": rounds, "k": k, "variants": {}}
+    for name, comm in variants:
+        hist = run_rounds(make_optimizer("flens", k=k), prob, w0, w_star,
+                          rounds=rounds, comm=comm)
+        stats = summarize(hist.traces)
+        out["variants"][name] = {
+            "gap": hist.gap.tolist(),
+            "cumulative_bytes": hist.cumulative_bytes.tolist(),
+            "sim_time_s": hist.sim_time_s.tolist(),
+            "stats": stats,
+        }
+        _csv(
+            f"comm/flens_{name}",
+            hist.wall_time_s / rounds * 1e6,
+            f"gap_final={hist.gap[-1]:.3e};"
+            f"total_MB={hist.cumulative_bytes[-1] / 1e6:.3f};"
+            f"sim_s={hist.sim_time_s[-1]:.2f}",
+        )
+    ident_b = out["variants"]["identity"]["cumulative_bytes"][-1]
+    packed_b = out["variants"]["sympack_qint8"]["cumulative_bytes"][-1]
+    _csv("comm/bytes_saved_by_sympack_qint8", 0.0,
+         f"ratio={ident_b / max(packed_b, 1):.2f}x")
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "comm.json").write_text(json.dumps(out, indent=1))
+
+
+# ---------------------------------------------------------------------------
 # Kernel micro-benchmarks (CPU timings of the portable paths)
 # ---------------------------------------------------------------------------
 
@@ -240,6 +300,7 @@ BENCHES = {
     "fig2": bench_fig2_sketch_size,
     "fig3": bench_fig3_time_vs_sketch,
     "table1": bench_table1_communication,
+    "comm": bench_comm,
     "sketch_types": bench_sketch_types,
     "ablation": bench_flens_ablation,
     "kernels": bench_kernels,

@@ -1,0 +1,61 @@
+"""Simulated federated transport: codecs, channel, scheduling, accounting.
+
+This package turns the repo's communication story from a float-count
+formula into a measurable simulation: every federated round's uplink
+payloads flow through pluggable codecs (so compression error perturbs
+the optimization), a per-client channel model converts exact encoded
+bytes into simulated wall-clock with stragglers and dropout, and
+participation schedulers reweight server aggregation.
+
+Entry point: build a :class:`CommConfig` and pass it to
+``repro.core.run_rounds(..., comm=cfg)``. See ``examples/edge_clients.py``.
+"""
+from repro.comm.channel import ChannelDraw, ChannelModel
+from repro.comm.codecs import (
+    CastCodec,
+    Codec,
+    IdentityCodec,
+    QInt8Codec,
+    SymPackCodec,
+    TopKCodec,
+    make_codec,
+)
+from repro.comm.config import NULL_COMM, CommConfig, CommRound, CommSession
+from repro.comm.metrics import (
+    RoundTrace,
+    cumulative_bytes,
+    cumulative_time,
+    summarize,
+)
+from repro.comm.scheduler import (
+    BandwidthAware,
+    FullParticipation,
+    Scheduler,
+    UniformSampler,
+    make_scheduler,
+)
+
+__all__ = [
+    "BandwidthAware",
+    "CastCodec",
+    "ChannelDraw",
+    "ChannelModel",
+    "Codec",
+    "CommConfig",
+    "CommRound",
+    "CommSession",
+    "FullParticipation",
+    "IdentityCodec",
+    "NULL_COMM",
+    "QInt8Codec",
+    "RoundTrace",
+    "Scheduler",
+    "SymPackCodec",
+    "TopKCodec",
+    "UniformSampler",
+    "cumulative_bytes",
+    "cumulative_time",
+    "make_codec",
+    "make_scheduler",
+    "summarize",
+]

@@ -1,0 +1,84 @@
+"""Per-client link model: bandwidth, latency, stragglers, dropout.
+
+The channel is a *driver-side* (host, numpy) model: per round it draws
+which scheduled clients straggle (slowed by ``straggler_slowdown``) and
+which drop out entirely (their payload never reaches the server), then
+converts per-client byte counts into a simulated round wall-clock —
+the server waits for the slowest delivering client (synchronous FL).
+
+All draws are deterministic functions of a PRNG key, so a trajectory is
+exactly reproducible from ``(CommConfig.seed, round index)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+def _per_client(x, m: int) -> np.ndarray:
+    """Broadcast a scalar or (m,) array-like to a float64 (m,) vector."""
+    arr = np.asarray(x, dtype=np.float64)
+    if arr.ndim == 0:
+        return np.full((m,), float(arr))
+    if arr.shape != (m,):
+        raise ValueError(f"per-client value has shape {arr.shape}, want ({m},)")
+    return arr
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelDraw:
+    """One round's channel randomness for the scheduled cohort."""
+
+    straggler: np.ndarray  # (m,) bool
+    dropout: np.ndarray  # (m,) bool
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    """Synchronous-round link model.
+
+    ``uplink_bytes_per_s`` / ``downlink_bytes_per_s`` may be scalars or
+    per-client (m,) arrays (heterogeneous edge links).
+    """
+
+    uplink_bytes_per_s: "float | np.ndarray" = 1.25e6  # ~10 Mbit/s edge uplink
+    downlink_bytes_per_s: "float | np.ndarray" = 1.25e7  # ~100 Mbit/s down
+    latency_s: float = 0.05
+    straggler_prob: float = 0.0
+    straggler_slowdown: float = 10.0
+    dropout_prob: float = 0.0
+
+    def uplink_rates(self, m: int) -> np.ndarray:
+        return _per_client(self.uplink_bytes_per_s, m)
+
+    def downlink_rates(self, m: int) -> np.ndarray:
+        return _per_client(self.downlink_bytes_per_s, m)
+
+    def draw(self, key: jax.Array, m: int) -> ChannelDraw:
+        """Deterministic straggler/dropout coin flips for one round."""
+        k_straggle, k_drop = jax.random.split(key)
+        straggler = np.asarray(
+            jax.random.bernoulli(k_straggle, self.straggler_prob, (m,)))
+        dropout = np.asarray(
+            jax.random.bernoulli(k_drop, self.dropout_prob, (m,)))
+        return ChannelDraw(straggler=straggler, dropout=dropout)
+
+    def round_time(
+        self,
+        draw: ChannelDraw,
+        scheduled: np.ndarray,  # (m,) bool — chosen by the scheduler
+        delivered: np.ndarray,  # (m,) bool — scheduled & not dropped
+        bytes_up: np.ndarray,  # (m,) uplink bytes for delivering clients
+        bytes_down: np.ndarray,  # (m,) broadcast bytes for scheduled clients
+    ) -> float:
+        """Simulated wall-clock: slowest delivering client closes the round."""
+        m = scheduled.shape[0]
+        up = self.uplink_rates(m)
+        down = self.downlink_rates(m)
+        t = self.latency_s + bytes_down / down + bytes_up / up
+        t = np.where(draw.straggler, t * self.straggler_slowdown, t)
+        if not delivered.any():
+            return float(self.latency_s)
+        return float(np.max(t[delivered]))

@@ -1,0 +1,223 @@
+"""CommConfig + the per-round runtime objects the driver threads through.
+
+Three layers:
+
+  * ``CommConfig``  — user-facing description: which codec per payload
+      name, which participation scheduler, which channel model, seed.
+  * ``CommSession`` — driver-side (host) state for one trajectory: draws
+      cohorts/channel randomness per round, accumulates ``RoundTrace``s,
+      and owns the *payload plan* (exact encoded bytes per payload name,
+      recorded once at jit-trace time — payload shapes are static).
+  * ``CommRound``   — the view optimizers see *inside* the jitted round:
+      ``uplink(name, x)`` routes a stacked per-client payload through its
+      codec (so compression error perturbs the optimization), and
+      ``weights(p)`` masks + renormalizes aggregation weights for the
+      delivering cohort.
+
+Bit-exactness contract: with the identity codec and full participation
+(no dropout), ``CommRound.uplink`` returns its input object unchanged
+and ``weights`` returns ``p`` unchanged — the round's jaxpr is identical
+to the no-comm path, so trajectories match today's bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.channel import ChannelModel
+from repro.comm.codecs import Codec, IdentityCodec, make_codec
+from repro.comm.metrics import RoundTrace
+from repro.comm.scheduler import Scheduler, make_scheduler
+
+# control-plane payloads default to lossless regardless of the default
+# codec (compressing a 1-scalar guard loss saves nothing and can poison
+# the accept/reject logic)
+_LOSSLESS_BY_DEFAULT = ("loss",)
+
+
+@dataclasses.dataclass
+class CommConfig:
+    """Transport description for one federated run.
+
+    ``codecs`` maps payload names (``"h_sk"``, ``"sg"``, ``"grad"``,
+    ``"w_local"``, ...) to codec specs; the ``"default"`` entry covers
+    unnamed payloads. A bare string/Codec is shorthand for
+    ``{"default": ...}``.
+    """
+
+    codecs: "Dict[str, Any] | str | Codec" = "identity"
+    scheduler: "str | Scheduler" = "full"
+    channel: ChannelModel = dataclasses.field(default_factory=ChannelModel)
+    seed: int = 0
+
+    def __post_init__(self):
+        if not isinstance(self.codecs, dict):
+            self.codecs = {"default": self.codecs}
+        self._codec_cache: Dict[str, Codec] = {}
+        self.scheduler = make_scheduler(self.scheduler)
+
+    def codec_for(self, payload: str) -> Codec:
+        if payload not in self._codec_cache:
+            if payload in self.codecs:
+                spec = self.codecs[payload]
+            elif payload in _LOSSLESS_BY_DEFAULT:
+                spec = "identity"
+            else:
+                spec = self.codecs.get("default", "identity")
+            self._codec_cache[payload] = make_codec(spec)
+        return self._codec_cache[payload]
+
+
+class CommRound:
+    """In-jit view of one round's transport. Constructed inside the
+    traced round function; ``mask``/``key`` are traced arrays, the codec
+    table and byte plan are static Python closed over by the trace."""
+
+    def __init__(
+        self,
+        config: CommConfig,
+        plan: Dict[str, int],
+        mask: "jax.Array | None",
+        key: "jax.Array | None",
+    ):
+        self._config = config
+        self._plan = plan
+        self.mask = mask
+        self._key = key
+        self._n_payloads = 0
+
+    def uplink(self, name: str, x: jax.Array,
+               wire_shape: "tuple | None" = None) -> jax.Array:
+        """Route a stacked per-client payload ``x: (m, ...)`` through its
+        codec's simulated encode→decode; records exact encoded bytes.
+
+        ``wire_shape`` overrides the shape billed for payloads whose
+        algorithm already defines a native wire format (e.g. FedNL
+        transmits a rank-1 ``(M+1,)`` eigenpair, not the materialized
+        (M, M) difference); the codec still prices that shape, so codec
+        compression stays reflected in the byte accounting."""
+        codec = self._config.codec_for(name)
+        self._plan[name] = codec.nbytes(
+            tuple(wire_shape) if wire_shape is not None
+            else tuple(x.shape[1:]), x.dtype)
+        self._n_payloads += 1
+        if isinstance(codec, IdentityCodec):
+            return x  # same object: zero jaxpr change
+        if codec.deterministic:
+            keys = jnp.zeros((x.shape[0], 2), jnp.uint32)  # unused by codec
+        else:
+            base = jax.random.fold_in(self._key, self._n_payloads)
+            keys = jax.random.split(base, x.shape[0])
+        return jax.vmap(codec.roundtrip)(keys, x)
+
+    def weights(self, p: jax.Array) -> jax.Array:
+        """Aggregation weights restricted to the delivering cohort."""
+        if self.mask is None:
+            return p
+        pm = p * self.mask
+        return pm / jnp.sum(pm)
+
+    def where_delivered(self, new: jax.Array, old: jax.Array) -> jax.Array:
+        """Per-client state update gate: non-delivering clients keep
+        ``old`` (e.g. FedNew duals). Leading axis must be the client axis."""
+        if self.mask is None:
+            return new
+        shape = (-1,) + (1,) * (new.ndim - 1)
+        return jnp.where(self.mask.reshape(shape) > 0, new, old)
+
+
+class _NullComm:
+    """No-transport stand-in: every optimizer routes through this when
+    ``comm=None`` so the comm-aware code path is the only code path."""
+
+    mask = None
+
+    def uplink(self, name, x, wire_shape=None):
+        return x
+
+    def weights(self, p):
+        return p
+
+    def where_delivered(self, new, old):
+        return new
+
+
+NULL_COMM = _NullComm()
+
+
+class CommSession:
+    """Host-side per-trajectory comm state (cohorts, randomness, traces)."""
+
+    def __init__(
+        self,
+        config: CommConfig,
+        m: int,
+        downlink_bytes: int,
+        mask_dtype=jnp.float64,
+    ):
+        self.config = config
+        self.m = m
+        self.downlink_bytes = int(downlink_bytes)
+        self.plan: Dict[str, int] = {}
+        self.traces: "list[RoundTrace]" = []
+        self._root = jax.random.PRNGKey(config.seed)
+        self._mask_dtype = mask_dtype
+        # static decision: identical jit trace structure for every round
+        self._always_full = (
+            config.scheduler.is_full and config.channel.dropout_prob == 0.0)
+        self._pending = None
+
+    @property
+    def bytes_up_per_client(self) -> int:
+        """Exact encoded uplink bytes per delivering client per round
+        (valid after the first round has been traced)."""
+        return int(sum(self.plan.values()))
+
+    def begin_round(self, t: int):
+        """Draw this round's cohort + channel randomness.
+
+        Returns ``(mask, codec_key)`` to pass into the jitted round:
+        ``mask`` is None on the statically-full path (bit-exactness) or a
+        float (m,) delivery mask otherwise.
+        """
+        k = jax.random.fold_in(self._root, t)
+        k_sched, k_chan, k_codec = jax.random.split(k, 3)
+        scheduled = self.config.scheduler.participants(
+            k_sched, t, self.m, self.config.channel)
+        draw = self.config.channel.draw(k_chan, self.m)
+        delivered = scheduled & ~draw.dropout
+        if scheduled.any() and not delivered.any():
+            # every scheduled client dropped: the server re-polls one
+            # (deterministically the lowest-index scheduled client) so
+            # aggregation weights stay well-defined
+            delivered = np.zeros_like(scheduled)
+            delivered[int(np.argmax(scheduled))] = True
+        self._pending = (t, scheduled, delivered, draw)
+        if self._always_full:
+            return None, k_codec
+        return jnp.asarray(delivered, dtype=self._mask_dtype), k_codec
+
+    def end_round(self) -> RoundTrace:
+        """Account the round just executed (reads the traced byte plan)."""
+        t, scheduled, delivered, draw = self._pending
+        per_client = float(self.bytes_up_per_client)
+        bytes_up = per_client * delivered.astype(np.float64)
+        bytes_down = float(self.downlink_bytes) * scheduled.astype(np.float64)
+        sim = self.config.channel.round_time(
+            draw, scheduled, delivered, bytes_up, bytes_down)
+        trace = RoundTrace(
+            round=t,
+            scheduled=scheduled,
+            delivered=delivered,
+            straggler=draw.straggler & delivered,
+            bytes_up=bytes_up,
+            bytes_down=bytes_down,
+            sim_time_s=sim,
+        )
+        self.traces.append(trace)
+        self._pending = None
+        return trace

@@ -1,0 +1,113 @@
+"""Client participation policies.
+
+A scheduler decides, per round, which of the ``m`` clients are asked to
+participate. The mask it returns reweights server aggregation (masked,
+renormalized ``client_weights``) — partial participation is therefore an
+*optimization* perturbation, not just an accounting one.
+
+Policies:
+  * ``FullParticipation``      — every client, every round.
+  * ``UniformSampler(q)``      — uniform sample of ceil(q·m) clients
+                                 without replacement (FedAvg-style).
+  * ``BandwidthAware(q)``      — sample ceil(q·m) clients with probability
+                                 proportional to uplink bandwidth (prefer
+                                 fast links; Gumbel top-k trick, so the
+                                 draw is a pure function of the key).
+
+All draws are deterministic from the PRNG key: the same
+``(seed, round)`` always yields the same cohort.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.channel import ChannelModel
+
+
+class Scheduler:
+    name: str = "scheduler"
+
+    def participants(
+        self, key: jax.Array, round_idx: int, m: int, channel: ChannelModel
+    ) -> np.ndarray:
+        """(m,) bool mask of clients scheduled this round."""
+        raise NotImplementedError
+
+    @property
+    def is_full(self) -> bool:
+        return False
+
+
+class FullParticipation(Scheduler):
+    name = "full"
+
+    def participants(self, key, round_idx, m, channel):
+        return np.ones((m,), dtype=bool)
+
+    @property
+    def is_full(self):
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSampler(Scheduler):
+    """Uniform-without-replacement sample of a q-fraction each round."""
+
+    q: float = 0.5
+
+    @property
+    def name(self):
+        return f"uniform:{self.q}"
+
+    def _count(self, m: int) -> int:
+        return max(1, min(m, int(math.ceil(self.q * m))))
+
+    def participants(self, key, round_idx, m, channel):
+        chosen = jax.random.choice(
+            key, m, shape=(self._count(m),), replace=False)
+        mask = np.zeros((m,), dtype=bool)
+        mask[np.asarray(chosen)] = True
+        return mask
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthAware(UniformSampler):
+    """Bandwidth-proportional sampling: fast uplinks participate more.
+
+    Uses the Gumbel top-k trick over log-bandwidth scores so selection is
+    a deterministic function of the key and degrades to uniform when all
+    clients share one link speed.
+    """
+
+    q: float = 0.5
+
+    @property
+    def name(self):
+        return f"bandwidth:{self.q}"
+
+    def participants(self, key, round_idx, m, channel):
+        rates = channel.uplink_rates(m)
+        scores = jnp.log(jnp.asarray(rates)) + jax.random.gumbel(key, (m,))
+        _, top = jax.lax.top_k(scores, self._count(m))
+        mask = np.zeros((m,), dtype=bool)
+        mask[np.asarray(top)] = True
+        return mask
+
+
+def make_scheduler(spec: "str | Scheduler") -> Scheduler:
+    """``"full" | "uniform:<q>" | "bandwidth:<q>"`` or a Scheduler."""
+    if isinstance(spec, Scheduler):
+        return spec
+    if spec == "full":
+        return FullParticipation()
+    kind, _, arg = spec.partition(":")
+    if kind == "uniform":
+        return UniformSampler(q=float(arg or 0.5))
+    if kind == "bandwidth":
+        return BandwidthAware(q=float(arg or 0.5))
+    raise ValueError(f"unknown scheduler spec {spec!r}")

@@ -1,0 +1,36 @@
+"""Version-skew shims for the installed JAX.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the ``jax``
+top level, and its replication-check kwarg was renamed
+(``check_rep`` → ``check_vma``) along the way. Import it from here and
+pass either spelling; the shim translates to whatever the installed JAX
+accepts.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # new-style top-level export
+    from jax import shard_map as _shard_map
+except ImportError:  # older JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with check_vma/check_rep kwarg translation."""
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every JAX version
+    (older releases return a one-element list of per-program dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

@@ -3,23 +3,35 @@
 Every algorithm implements:
 
   * ``init(problem, w0) -> state``          (state is a pytree dict)
-  * ``round(problem, state, key) -> state`` (pure, jittable; one comm round)
+  * ``round(problem, state, key, comm=None) -> state``
+      (pure, jittable; one comm round — client payloads are routed
+      through ``comm.uplink`` and aggregation weights through
+      ``comm.weights`` so codecs / partial participation perturb the
+      optimization; ``comm=None`` is the exact legacy path)
   * ``uplink_floats(problem)`` / ``downlink_floats(problem)``
       static per-client-per-round communication formulas (floats), used to
       reproduce Table I empirically.
 
 ``state`` always carries the current iterate under key ``"w"``.
+
+``run_rounds(..., comm=CommConfig(...))`` threads a simulated transport
+(``repro.comm``) through every round: codecs give exact encoded bytes,
+the channel model gives simulated wall-clock with stragglers/dropout,
+and the scheduler picks the per-round cohort. The resulting ``History``
+carries byte-accurate ``cumulative_bytes`` / ``sim_time_s`` axes next to
+the legacy float-count formulas.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import CommConfig, CommRound, CommSession, cumulative_bytes, cumulative_time
 from repro.core.federated import FederatedProblem
 
 OptState = Dict[str, Any]
@@ -32,7 +44,8 @@ class FederatedOptimizer:
         return {"w": w0}
 
     def round(
-        self, problem: FederatedProblem, state: OptState, key: jax.Array
+        self, problem: FederatedProblem, state: OptState, key: jax.Array,
+        comm=None,
     ) -> OptState:
         raise NotImplementedError
 
@@ -57,6 +70,12 @@ class History:
     downlink_floats: int
     wall_time_s: float
     rounds: int
+    # byte-accurate transport axes (repro.comm). Without a CommConfig the
+    # bytes curve is derived from the float formulas (all clients, raw
+    # dtype width) and sim time is zero.
+    cumulative_bytes: Optional[np.ndarray] = None  # (T+1,) up+down, all clients
+    sim_time_s: Optional[np.ndarray] = None  # (T+1,) cumulative simulated s
+    traces: Optional[list] = None  # per-round RoundTrace records (comm runs)
 
     @property
     def cumulative_uplink(self) -> np.ndarray:
@@ -70,11 +89,35 @@ def run_rounds(
     w_star: jax.Array,
     rounds: int,
     seed: int = 0,
+    comm: Optional[CommConfig] = None,
 ) -> History:
-    """Drive ``rounds`` communication rounds and record the trajectory."""
+    """Drive ``rounds`` communication rounds and record the trajectory.
+
+    With ``comm=None`` this is the exact legacy path (identical jaxprs,
+    bit-identical trajectories). With a ``CommConfig`` every round flows
+    through the simulated transport and the returned ``History`` carries
+    per-round ``RoundTrace`` records.
+    """
     loss_fn = jax.jit(problem.global_value)
     grad_fn = jax.jit(problem.global_grad)
-    round_fn = jax.jit(lambda s, k: opt.round(problem, s, k))
+
+    itemsize = jnp.dtype(problem.X.dtype).itemsize
+    session = None
+    if comm is None:
+        round_fn = jax.jit(lambda s, k: opt.round(problem, s, k))
+    else:
+        session = CommSession(
+            comm,
+            m=problem.m,
+            downlink_bytes=opt.downlink_floats(problem) * itemsize,
+            mask_dtype=problem.X.dtype,
+        )
+
+        def _round(s, k, mask, ck):
+            cr = CommRound(comm, session.plan, mask, ck)
+            return opt.round(problem, s, k, comm=cr)
+
+        round_fn = jax.jit(_round)
 
     loss_star = float(loss_fn(w_star))
     state = opt.init(problem, w0)
@@ -84,10 +127,26 @@ def run_rounds(
     gnorms = [float(jnp.linalg.norm(grad_fn(state["w"])))]
     t0 = time.perf_counter()
     for t in range(rounds):
-        state = round_fn(state, keys[t])
+        if session is None:
+            state = round_fn(state, keys[t])
+        else:
+            mask, ck = session.begin_round(t)
+            state = round_fn(state, keys[t], mask, ck)
+            session.end_round()
         losses.append(float(loss_fn(state["w"])))
         gnorms.append(float(jnp.linalg.norm(grad_fn(state["w"]))))
     wall = time.perf_counter() - t0
+
+    if session is None:
+        per_round = (opt.uplink_floats(problem)
+                     + opt.downlink_floats(problem)) * itemsize * problem.m
+        cum_bytes = np.arange(rounds + 1, dtype=np.float64) * float(per_round)
+        sim_time = np.zeros(rounds + 1)
+        traces = None
+    else:
+        cum_bytes = cumulative_bytes(session.traces)
+        sim_time = cumulative_time(session.traces)
+        traces = session.traces
 
     losses = np.asarray(losses)
     return History(
@@ -99,4 +158,7 @@ def run_rounds(
         downlink_floats=opt.downlink_floats(problem),
         wall_time_s=wall,
         rounds=rounds,
+        cumulative_bytes=cum_bytes,
+        sim_time_s=sim_time,
+        traces=traces,
     )

@@ -18,8 +18,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core.losses import Objective
 from repro.core.sketch import Sketch, make_sketch

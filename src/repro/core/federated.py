@@ -19,6 +19,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.losses import Objective
 
@@ -149,25 +150,57 @@ def make_problem(
     heterogeneity:
       * "iid"       — random permutation, equal shards
       * "label"     — sort by label before sharding (pathological non-iid)
-      * "dirichlet" — per-client label mixture ~ Dir(alpha) (approximated
-                      by a label-sorted assignment with Dirichlet sizes)
+      * "dirichlet" — label-sorted rows split into contiguous chunks whose
+                      sizes are n · Dir(alpha) (largest-remainder rounded,
+                      every client gets ≥ 1 row): clients see both skewed
+                      label mixtures AND skewed sample counts, so
+                      ``client_weights`` p_j = n_j / N genuinely varies.
+                      NOTE: shards are padded to the LARGEST chunk, so
+                      memory is m · max_j(n_j) · M — with small alpha the
+                      largest chunk can approach n, inflating the stacked
+                      arrays by up to ~m×. Fine at this repo's dataset
+                      sizes; cap the draw before going paper-scale non-iid.
     """
     n = X.shape[0]
     if key is None:
         key = jax.random.PRNGKey(0)
+    if heterogeneity == "dirichlet":
+        if n < m:
+            raise ValueError(f"dirichlet split needs n >= m, got n={n} m={m}")
+        perm = jnp.argsort(y)
+        props = np.asarray(
+            jax.random.dirichlet(key, jnp.full((m,), dirichlet_alpha)),
+            dtype=np.float64,
+        )
+        raw = props * n
+        sizes = np.floor(raw).astype(np.int64)
+        # largest-remainder rounding so sizes sum exactly to n
+        short = n - int(sizes.sum())
+        order = np.argsort(-(raw - sizes))
+        sizes[order[:short]] += 1
+        # every client holds at least one real row (p_j = 0 breaks the
+        # weighted aggregation and the local 1/n_j normalizations)
+        while (sizes == 0).any():
+            sizes[int(np.argmax(sizes))] -= 1
+            sizes[int(np.argmin(sizes))] += 1
+        n_shard = int(sizes.max())
+        starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        idx = np.minimum(starts[:, None] + np.arange(n_shard)[None, :], n - 1)
+        valid = np.arange(n_shard)[None, :] < sizes[:, None]
+        Xp = jnp.asarray(np.asarray(X[perm])[idx])  # (m, n_shard, M)
+        yp = jnp.asarray(np.asarray(y[perm])[idx])
+        mask = jnp.asarray(valid, X.dtype)
+        return FederatedProblem(
+            X=Xp * mask[..., None],
+            y=yp * mask.astype(y.dtype),
+            mask=mask,
+            lam=lam,
+            objective=objective,
+        )
     if heterogeneity == "iid":
         perm = jax.random.permutation(key, n)
     elif heterogeneity == "label":
         perm = jnp.argsort(y)
-    elif heterogeneity == "dirichlet":
-        # sort by label, then slice with Dirichlet-proportioned contiguous
-        # chunks per client: simple, deterministic-size approximation.
-        perm = jnp.argsort(y)
-        props = jax.random.dirichlet(key, jnp.full((m,), dirichlet_alpha))
-        # convert to a permutation of shard assignment by rotating chunks
-        order = jnp.argsort(props)
-        perm = jnp.roll(perm, int(jnp.argmax(props)))
-        del order
     else:
         raise ValueError(heterogeneity)
     Xp, yp = X[perm], y[perm]

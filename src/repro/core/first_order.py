@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.comm import NULL_COMM
 from repro.core.base import FederatedOptimizer, OptState
 from repro.core.federated import FederatedProblem
 
@@ -32,7 +33,8 @@ class FedAvg(FederatedOptimizer):
         self.lr = lr
         self.local_steps = local_steps
 
-    def round(self, problem, state: OptState, key) -> OptState:
+    def round(self, problem, state: OptState, key, comm=None) -> OptState:
+        comm = NULL_COMM if comm is None else comm
         w = state["w"]
 
         def client(Xj, yj, mj):
@@ -44,7 +46,8 @@ class FedAvg(FederatedOptimizer):
             return wl
 
         w_locals = jax.vmap(client)(problem.X, problem.y, problem.mask)
-        p = problem.client_weights
+        w_locals = comm.uplink("w_local", w_locals)
+        p = comm.weights(problem.client_weights)
         return {"w": jnp.einsum("j,jm->m", p, w_locals)}
 
     def uplink_floats(self, problem) -> int:
@@ -60,7 +63,8 @@ class FedProx(FedAvg):
         super().__init__(lr=lr, local_steps=local_steps)
         self.mu_prox = mu_prox
 
-    def round(self, problem, state: OptState, key) -> OptState:
+    def round(self, problem, state: OptState, key, comm=None) -> OptState:
+        comm = NULL_COMM if comm is None else comm
         w = state["w"]
 
         def client(Xj, yj, mj):
@@ -73,5 +77,6 @@ class FedProx(FedAvg):
             return wl
 
         w_locals = jax.vmap(client)(problem.X, problem.y, problem.mask)
-        p = problem.client_weights
+        w_locals = comm.uplink("w_local", w_locals)
+        p = comm.weights(problem.client_weights)
         return {"w": jnp.einsum("j,jm->m", p, w_locals)}

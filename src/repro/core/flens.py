@@ -27,6 +27,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.comm import NULL_COMM
 from repro.core.base import FederatedOptimizer, OptState
 from repro.core.federated import FederatedProblem
 from repro.core.sketch import Sketch, make_sketch
@@ -76,22 +77,28 @@ class FLeNS(FederatedOptimizer):
 
     def init(self, problem, w0):
         beta = self._beta_value(problem, w0)
-        if self.eta is None:
-            h = problem.global_hessian(w0)
-            l1 = float(jnp.linalg.eigvalsh(h)[-1])
-            self._eta = 1.0 / l1
-        else:
-            self._eta = float(self.eta)
-        return {
+        state = {
             "w": w0,
             "w_prev": w0,
             "beta": jnp.asarray(beta, w0.dtype),
             "loss": problem.global_value(w0),
             "scale": jnp.asarray(1.0, w0.dtype),
         }
+        if self.variant == "plus":
+            # eta lives in the state dict (NOT on the optimizer instance):
+            # one optimizer object stays reusable across problems
+            if self.eta is None:
+                h = problem.global_hessian(w0)
+                l1 = float(jnp.linalg.eigvalsh(h)[-1])
+                eta = 1.0 / l1
+            else:
+                eta = float(self.eta)
+            state["eta"] = jnp.asarray(eta, w0.dtype)
+        return state
 
     # -- one communication round ----------------------------------------------
-    def round(self, problem, state: OptState, key) -> OptState:
+    def round(self, problem, state: OptState, key, comm=None) -> OptState:
+        comm = NULL_COMM if comm is None else comm
         w, w_prev, beta = state["w"], state["w_prev"], state["beta"]
         dim = problem.dim
         dtype = w.dtype
@@ -114,8 +121,13 @@ class FLeNS(FederatedOptimizer):
         h_sk = jax.vmap(client_sketch)(a)  # (m, k, k)
         sg = jax.vmap(s.apply)(gs)  # (m, k)
 
+        # uplink: the k×k sketched Hessian (symmetric — sympack applies)
+        # and the sketched gradient flow through the transport codecs
+        h_sk = comm.uplink("h_sk", h_sk)
+        sg = comm.uplink("sg", sg)
+
         # (3)+(4) server aggregation and sketched-subspace Newton step
-        p = problem.client_weights
+        p = comm.weights(problem.client_weights)
         h_tilde = jnp.einsum("j,jab->ab", p, h_sk) + problem.lam * sst
         g_sk = jnp.einsum("j,jk->k", p, sg)
         eye_k = jnp.eye(self.k, dtype=dtype)
@@ -127,9 +139,10 @@ class FLeNS(FederatedOptimizer):
         w_next = base - scale * self.mu * delta
 
         if self.variant == "plus":
-            g = jnp.einsum("j,jm->m", p, gs)  # full gradient (O(M) uplink)
+            gs_hat = comm.uplink("grad", gs)  # full gradient (O(M) uplink)
+            g = jnp.einsum("j,jm->m", p, gs_hat)
             proj = s.apply_t(jnp.linalg.solve(sst, s.apply(g)))  # P_S g
-            w_next = w_next - scale * self._eta * (g - proj)
+            w_next = w_next - scale * state["eta"] * (g - proj)
 
         # Guarded step + adaptive momentum restart (O'Donoghue & Candes
         # flavour): clients piggyback their local loss (1 scalar of uplink),
@@ -137,7 +150,10 @@ class FLeNS(FederatedOptimizer):
         # rejected and the momentum killed for the next round — this is what
         # keeps the literal Assumption-A7 momentum (beta ~ 1) stable; see
         # EXPERIMENTS.md §Paper for the unguarded divergence measurement.
-        loss_next = problem.global_value(w_next)
+        lv = problem.local_value(w_next)
+        if self.restart:
+            lv = comm.uplink("loss", lv)  # the piggybacked scalar
+        loss_next = jnp.sum(p * lv)
         if self.restart:
             # NaN-safe acceptance: a NaN loss is a rejected step, and the
             # stored loss must never become NaN (jnp.minimum would poison it)
@@ -152,8 +168,11 @@ class FLeNS(FederatedOptimizer):
         else:
             w_out, w_prev_out, loss_out = w_next, w, loss_next
             scale_out = scale
-        return {"w": w_out, "w_prev": w_prev_out, "beta": beta,
-                "loss": loss_out, "scale": scale_out}
+        out = {"w": w_out, "w_prev": w_prev_out, "beta": beta,
+               "loss": loss_out, "scale": scale_out}
+        if self.variant == "plus":
+            out["eta"] = state["eta"]
+        return out
 
     # Evaluated at the look-ahead point v (Algorithm 1 step 2 updates the
     # gradient/Hessian at v_t before communication).

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.comm import NULL_COMM
 from repro.core.base import FederatedOptimizer, OptState
 from repro.core.federated import FederatedProblem
 
@@ -23,10 +24,14 @@ class FedNewton(FederatedOptimizer):
     def __init__(self, mu: float = 1.0):
         self.mu = mu
 
-    def round(self, problem, state: OptState, key) -> OptState:
+    def round(self, problem, state: OptState, key, comm=None) -> OptState:
+        comm = NULL_COMM if comm is None else comm
         w = state["w"]
-        g = problem.global_grad(w)
-        h = problem.global_hessian(w)
+        gs = comm.uplink("grad", problem.local_grad(w))
+        hs = comm.uplink("hess", problem.local_hessian(w))
+        p = comm.weights(problem.client_weights)
+        g = jnp.einsum("j,jm->m", p, gs)
+        h = jnp.einsum("j,jab->ab", p, hs)
         return {"w": w - self.mu * jnp.linalg.solve(h, g)}
 
     def uplink_floats(self, problem) -> int:
@@ -46,12 +51,17 @@ class DistributedNewton(FederatedOptimizer):
     def __init__(self, mu: float = 1.0):
         self.mu = mu
 
-    def round(self, problem, state: OptState, key) -> OptState:
+    def round(self, problem, state: OptState, key, comm=None) -> OptState:
+        comm = NULL_COMM if comm is None else comm
         w = state["w"]
-        g = problem.global_grad(w)
+        p = comm.weights(problem.client_weights)
+        # phase 1: gradients up, global gradient broadcast back
+        gs = comm.uplink("grad", problem.local_grad(w))
+        g = jnp.einsum("j,jm->m", p, gs)
+        # phase 2: local-Newton directions up
         hs = problem.local_hessian(w)  # (m, M, M)
         dirs = jax.vmap(lambda h: jnp.linalg.solve(h, g))(hs)
-        p = problem.client_weights
+        dirs = comm.uplink("dir", dirs)
         d = jnp.einsum("j,jm->m", p, dirs)
         return {"w": w - self.mu * d}
 
@@ -68,7 +78,8 @@ class LocalNewton(FederatedOptimizer):
         self.mu = mu
         self.local_iters = local_iters
 
-    def round(self, problem, state: OptState, key) -> OptState:
+    def round(self, problem, state: OptState, key, comm=None) -> OptState:
+        comm = NULL_COMM if comm is None else comm
         w = state["w"]
         eye = jnp.eye(problem.dim, dtype=problem.X.dtype)
 
@@ -100,7 +111,8 @@ class LocalNewton(FederatedOptimizer):
             return wl
 
         w_locals = jax.vmap(client)(problem.X, problem.y, problem.mask)
-        p = problem.client_weights
+        w_locals = comm.uplink("w_local", w_locals)
+        p = comm.weights(problem.client_weights)
         return {"w": jnp.einsum("j,jm->m", p, w_locals)}
 
     def uplink_floats(self, problem) -> int:
@@ -133,7 +145,8 @@ class FedNew(FederatedOptimizer):
             "duals": jnp.zeros((m, dim), w0.dtype),
         }
 
-    def round(self, problem, state: OptState, key) -> OptState:
+    def round(self, problem, state: OptState, key, comm=None) -> OptState:
+        comm = NULL_COMM if comm is None else comm
         w, d_bar, duals = state["w"], state["d_bar"], state["duals"]
         gs = problem.local_grad(w)  # (m, M)
         hs = problem.local_hessian(w)  # (m, M, M)
@@ -144,9 +157,13 @@ class FedNew(FederatedOptimizer):
             return jnp.linalg.solve(hj + self.rho * eye, rhs)
 
         ds = jax.vmap(client)(hs, gs, duals)
-        p = problem.client_weights
-        d_new = jnp.einsum("j,jm->m", p, ds)
-        duals = duals + self.alpha * (ds - d_new[None])
+        ds_wire = comm.uplink("dir", ds)  # server sees the decoded copy...
+        p = comm.weights(problem.client_weights)
+        d_new = jnp.einsum("j,jm->m", p, ds_wire)
+        # ...but each client advances its dual from its own EXACT d_j —
+        # only delivering clients observe d_bar and update at all
+        duals = comm.where_delivered(
+            duals + self.alpha * (ds - d_new[None]), duals)
         return {"w": w - self.mu * d_new, "d_bar": d_new, "duals": duals}
 
     def uplink_floats(self, problem) -> int:
@@ -187,13 +204,19 @@ class FedNL(FederatedOptimizer):
         lam = v @ (delta @ v)
         return lam * jnp.outer(v, v)
 
-    def round(self, problem, state: OptState, key) -> OptState:
+    def round(self, problem, state: OptState, key, comm=None) -> OptState:
+        comm = NULL_COMM if comm is None else comm
         w, B = state["w"], state["B"]
-        g = problem.global_grad(w)
+        p = comm.weights(problem.client_weights)
+        gs = comm.uplink("grad", problem.local_grad(w))
+        g = jnp.einsum("j,jm->m", p, gs)
         hs = problem.local_hessian(w)  # (m, M, M)
         keys = jax.random.split(key, problem.m)
         comps = jax.vmap(lambda h, k: self._rank1_compress(h - B, k))(hs, keys)
-        p = problem.client_weights
+        # native wire format: one (value, vector) eigenpair per client,
+        # not the materialized (M, M) outer product
+        comps = comm.uplink("hess_delta", comps,
+                            wire_shape=(problem.dim + 1,))
         B = B + jnp.einsum("j,jab->ab", p, comps)
         # PSD safeguard: project to symmetric + ridge
         B = 0.5 * (B + B.T)

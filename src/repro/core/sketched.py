@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.comm import NULL_COMM
 from repro.core.base import FederatedOptimizer, OptState
 from repro.core.federated import FederatedProblem
 from repro.core.sketch import effective_dimension, make_sketch
@@ -28,9 +29,12 @@ class FedNS(FederatedOptimizer):
         self.mu = mu
         self.sketch = sketch
 
-    def round(self, problem, state: OptState, key) -> OptState:
+    def round(self, problem, state: OptState, key, comm=None) -> OptState:
+        comm = NULL_COMM if comm is None else comm
         w = state["w"]
-        g = problem.global_grad(w)
+        p = comm.weights(problem.client_weights)
+        gs = comm.uplink("grad", problem.local_grad(w))
+        g = jnp.einsum("j,jm->m", p, gs)
         a = problem.local_hess_sqrt(w)  # (m, n_shard, M)
         n_shard = a.shape[1]
         keys = jax.random.split(key, problem.m)
@@ -41,7 +45,7 @@ class FedNS(FederatedOptimizer):
             return s.apply(aj.T).T
 
         sa = jax.vmap(client)(a, keys)  # (m, k, M)
-        p = problem.client_weights
+        sa = comm.uplink("sa", sa)
         h_tilde = jnp.einsum("j,jka,jkb->ab", p, sa, sa)
         h_tilde = h_tilde + problem.lam * jnp.eye(problem.dim, dtype=w.dtype)
         return {"w": w - self.mu * jnp.linalg.solve(h_tilde, g)}

@@ -12,6 +12,7 @@ are jax.random with fixed seeds — runs are exactly reproducible.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +75,10 @@ def make_classification(
 def load(name: str, *, dtype=jnp.float64, seed: int = 0):
     """Load one of the paper's datasets (synthetic twin). Returns spec, X, y."""
     spec = PAPER_DATASETS[name]
-    key = jax.random.PRNGKey(hash(name) % (2**31) + seed)
+    # deterministic name hash: builtin hash() is salted per process
+    # (PYTHONHASHSEED), which silently broke cross-run reproducibility
+    name_h = zlib.crc32(name.encode()) % (2**31)
+    key = jax.random.PRNGKey(name_h + seed)
     X, y = make_classification(
         key,
         spec.n,

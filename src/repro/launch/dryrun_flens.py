@@ -33,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import cost_analysis, shard_map
+
 
 def build_round(method: str, dim: int, k: int, n_per_client: int, lam: float):
     """Returns fn(X, y, w, seed_signs, rows) -> w_next for one round."""
@@ -146,7 +148,7 @@ def lower_method(method: str, mesh, dim: int, k: int, n_per_client: int,
         NamedSharding(mesh, P()),
     )
 
-    wrapped = jax.shard_map(
+    wrapped = shard_map(
         lambda X, y, w, signs, rows: fn(X, y, w[0], signs[0], rows[0])[None],
         mesh=mesh,
         in_specs=(P(("pod", "data"), None), P(("pod", "data")), P(None),
@@ -167,7 +169,7 @@ def lower_method(method: str, mesh, dim: int, k: int, n_per_client: int,
         "theory_wire_floats_per_client": wire,
         "collective_bytes_per_device": coll["total_bytes"],
         "collectives": coll["per_kind"],
-        "flops_per_device": float(compiled.cost_analysis().get("flops", 0.0)),
+        "flops_per_device": float(cost_analysis(compiled).get("flops", 0.0)),
     }
 
 

@@ -25,9 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.common import ModelConfig, dense_init, residual_out_init
 from repro.sharding.ctx import get_mesh
-from jax import shard_map
 
 
 def moe_init(key, cfg: ModelConfig):

@@ -1,0 +1,42 @@
+"""Degrade gracefully when ``hypothesis`` is not installed.
+
+Property tests import ``given/settings/st`` from here instead of from
+``hypothesis`` directly. With hypothesis present this module is a pure
+re-export; without it, ``@given``-decorated tests become individual
+skips while every other test in the module still collects and runs.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every strategy factory
+        exists and returns None (never drawn from — tests skip first)."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def _skip():
+                pytest.skip("hypothesis not installed")
+
+            _skip.__name__ = fn.__name__
+            _skip.__doc__ = fn.__doc__
+            return _skip
+
+        return deco

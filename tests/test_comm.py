@@ -1,0 +1,335 @@
+"""Transport-layer tests: codecs, scheduling, accounting, bit-exactness.
+
+Covers the `repro.comm` contract:
+  * codec round-trips — exact for lossless codecs, bounded error for
+    qint8/top-k, symmetric output for sympack;
+  * byte counts match the encoded wire format, not float counts;
+  * scheduler/channel draws are exactly reproducible from a key;
+  * FLeNS through identity-codec/full-participation comm is bit-identical
+    to the no-comm path (the PR's backward-compatibility guarantee).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (
+    ChannelModel,
+    CommConfig,
+    CommSession,
+    make_codec,
+    make_scheduler,
+    summarize,
+)
+from repro.core import make_optimizer, make_problem, newton_solve, run_rounds
+from repro.core.losses import logistic
+from repro.data import make_classification
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+def _payload(shape, seed=0, dtype=jnp.float64):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+@pytest.mark.parametrize("spec", ["identity", "sympack"])
+def test_lossless_codecs_roundtrip_exact(spec):
+    codec = make_codec(spec)
+    x = _payload((12, 12))
+    x = 0.5 * (x + x.T)  # sympack requires symmetric payloads
+    out = codec.roundtrip(jax.random.PRNGKey(1), x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_identity_roundtrip_returns_same_object():
+    """The bit-exactness guarantee hinges on identity being a no-op."""
+    codec = make_codec("identity")
+    x = _payload((7, 3))
+    assert codec.roundtrip(jax.random.PRNGKey(0), x) is x
+
+
+@pytest.mark.parametrize("spec,rtol", [("fp16", 1e-3), ("bf16", 1e-2)])
+def test_cast_codecs_bounded_error(spec, rtol):
+    codec = make_codec(spec)
+    x = _payload((64,))
+    out = codec.roundtrip(jax.random.PRNGKey(1), x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=rtol)
+
+
+def test_qint8_bounded_and_unbiased():
+    codec = make_codec("qint8")
+    x = _payload((256,))
+    step = float(jnp.max(jnp.abs(x))) / 127.0
+    outs = np.stack([
+        np.asarray(codec.roundtrip(jax.random.PRNGKey(s), x))
+        for s in range(200)
+    ])
+    # per-draw error bounded by one quantization step
+    assert np.abs(outs - np.asarray(x)).max() <= step + 1e-12
+    # stochastic rounding is unbiased: the mean over draws converges on x
+    np.testing.assert_allclose(outs.mean(0), np.asarray(x), atol=0.2 * step)
+
+
+def test_topk_keeps_largest_magnitudes():
+    codec = make_codec("topk0.25")
+    x = _payload((64,))
+    out = np.asarray(codec.roundtrip(jax.random.PRNGKey(1), x))
+    kept = np.nonzero(out)[0]
+    assert len(kept) == 16
+    cutoff = np.sort(np.abs(np.asarray(x)))[-16]
+    assert (np.abs(np.asarray(x)[kept]) >= cutoff).all()
+    np.testing.assert_array_equal(out[kept], np.asarray(x)[kept])
+
+
+def test_sympack_output_symmetric_even_with_lossy_inner():
+    codec = make_codec("sympack+qint8")
+    x = _payload((16, 16))
+    x = 0.5 * (x + x.T)
+    out = np.asarray(codec.roundtrip(jax.random.PRNGKey(1), x))
+    np.testing.assert_array_equal(out, out.T)
+    step = np.abs(x).max() / 127.0
+    assert np.abs(out - np.asarray(x)).max() <= step + 1e-12
+
+
+def test_codec_byte_counts_match_wire_format():
+    f64 = jnp.float64
+    assert make_codec("identity").nbytes((17, 3), f64) == 17 * 3 * 8
+    assert make_codec("fp16").nbytes((100,), f64) == 200
+    assert make_codec("bf16").nbytes((100,), f64) == 200
+    # int8 payload + one fp32 scale
+    assert make_codec("qint8").nbytes((100,), f64) == 100 + 4
+    # 25% of 64 = 16 kept: int32 index + raw value each
+    assert make_codec("topk0.25").nbytes((64,), f64) == 16 * (4 + 8)
+    assert make_codec("topk@5").nbytes((64,), f64) == 5 * (4 + 8)
+    # upper triangle of 16x16 = 136 entries
+    assert make_codec("sympack").nbytes((16, 16), f64) == 136 * 8
+    assert make_codec("sympack+qint8").nbytes((16, 16), f64) == 136 + 4
+    # k x k sympack halves the dominant FLeNS uplink term
+    k = 64
+    assert make_codec("sympack").nbytes((k, k), f64) <= (
+        make_codec("identity").nbytes((k, k), f64) // 2 + k * 8)
+
+
+def test_sympack_rejects_non_square():
+    with pytest.raises(ValueError):
+        make_codec("sympack").nbytes((3, 4), jnp.float64)
+
+
+def test_codec_specs_parse_and_unknown_rejected():
+    assert make_codec("topk0.1+qint8").name.startswith("topk0.1")
+    with pytest.raises(ValueError):
+        make_codec("zstd")
+    with pytest.raises(ValueError):
+        make_codec("qint8+fp16")  # qint8 is terminal, cannot wrap
+
+
+# ---------------------------------------------------------------------------
+# scheduler + channel
+# ---------------------------------------------------------------------------
+
+def test_scheduler_masks_reproducible_from_key():
+    chan = ChannelModel()
+    for spec in ("full", "uniform:0.4", "bandwidth:0.4"):
+        sched = make_scheduler(spec)
+        key = jax.random.PRNGKey(7)
+        a = sched.participants(key, 0, 20, chan)
+        b = sched.participants(key, 0, 20, chan)
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == bool and a.shape == (20,)
+
+
+def test_uniform_sampler_counts():
+    sched = make_scheduler("uniform:0.3")
+    mask = sched.participants(jax.random.PRNGKey(0), 0, 10, ChannelModel())
+    assert mask.sum() == 3
+
+
+def test_bandwidth_aware_prefers_fast_links():
+    m = 40
+    rates = np.ones(m)
+    rates[: m // 2] = 1e9  # first half has vastly faster uplinks
+    chan = ChannelModel(uplink_bytes_per_s=rates)
+    sched = make_scheduler("bandwidth:0.25")
+    picks = np.zeros(m)
+    for t in range(20):
+        picks += sched.participants(jax.random.PRNGKey(t), t, m, chan)
+    assert picks[: m // 2].sum() > 0.95 * picks.sum()
+
+
+def test_session_trajectory_reproducible():
+    cfg = dict(codecs="qint8", scheduler="uniform:0.5",
+               channel=ChannelModel(dropout_prob=0.2, straggler_prob=0.2),
+               seed=3)
+    s1, s2 = CommSession(CommConfig(**cfg), m=16, downlink_bytes=800), \
+        CommSession(CommConfig(**cfg), m=16, downlink_bytes=800)
+    for t in range(5):
+        m1, _ = s1.begin_round(t)
+        m2, _ = s2.begin_round(t)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+        s1.plan["x"] = s2.plan["x"] = 100
+        t1, t2 = s1.end_round(), s2.end_round()
+        np.testing.assert_array_equal(t1.bytes_up, t2.bytes_up)
+        assert t1.sim_time_s == t2.sim_time_s
+
+
+def test_straggler_slows_round_and_dropout_zeroes_bytes():
+    m = 8
+    chan = ChannelModel(uplink_bytes_per_s=1e3, downlink_bytes_per_s=1e6,
+                        latency_s=0.0, straggler_prob=0.0,
+                        straggler_slowdown=25.0)
+    cfg = CommConfig(channel=chan)
+    sess = CommSession(cfg, m=m, downlink_bytes=0)
+    sess.begin_round(0)
+    sess.plan["x"] = 1000  # 1s per client at 1e3 B/s
+    base = sess.end_round().sim_time_s
+    slow = CommSession(
+        CommConfig(channel=ChannelModel(
+            uplink_bytes_per_s=1e3, downlink_bytes_per_s=1e6, latency_s=0.0,
+            straggler_prob=1.0, straggler_slowdown=25.0)), m=m,
+        downlink_bytes=0)
+    slow.begin_round(0)
+    slow.plan["x"] = 1000
+    assert slow.end_round().sim_time_s == pytest.approx(25.0 * base)
+    # dropped clients transmit nothing
+    drop = CommSession(
+        CommConfig(scheduler="full",
+                   channel=ChannelModel(dropout_prob=0.5)), m=64,
+        downlink_bytes=0)
+    drop.begin_round(0)
+    drop.plan["x"] = 10
+    tr = drop.end_round()
+    assert (tr.bytes_up[~tr.delivered] == 0).all()
+    assert (tr.bytes_up[tr.delivered] == 10).all()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end through the round driver
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_problem():
+    X, y = make_classification(jax.random.PRNGKey(2), 600, 24)
+    prob = make_problem(X, y, m=6, lam=1e-3, objective=logistic)
+    w0 = jnp.zeros(prob.dim, jnp.float64)
+    w_star = newton_solve(prob, w0, iters=30)
+    return prob, w0, w_star
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("flens", dict(k=8)), ("flens_plus", dict(k=8)), ("fedavg", {}),
+    ("fednewton", {}), ("fednew", {}), ("fednl", {}), ("fedns", dict(k=8)),
+])
+def test_identity_full_participation_bit_identical(small_problem, name, kw):
+    prob, w0, w_star = small_problem
+    h0 = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=4)
+    h1 = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=4,
+                    comm=CommConfig())
+    np.testing.assert_array_equal(h0.loss, h1.loss)
+    np.testing.assert_array_equal(h0.grad_norm, h1.grad_norm)
+
+
+def test_flens_byte_accounting_matches_payload_shapes(small_problem):
+    prob, w0, w_star = small_problem
+    k = 8
+    hist = run_rounds(make_optimizer("flens", k=k), prob, w0, w_star,
+                      rounds=3, comm=CommConfig())
+    # identity codec: h_sk (k,k) + sg (k,) + guard loss scalar, 8B floats
+    per_client = (k * k + k + 1) * 8
+    tr = hist.traces[0]
+    assert (tr.bytes_up == per_client).all()
+    # downlink: model + sketch seed
+    assert (tr.bytes_down == (prob.dim + 1) * 8).all()
+    np.testing.assert_allclose(
+        hist.cumulative_bytes[-1],
+        3 * prob.m * (per_client + (prob.dim + 1) * 8))
+
+
+def test_fednl_billed_at_native_wire_format(small_problem):
+    """FedNL transmits a rank-1 eigenpair, not the (M, M) difference it
+    materializes in simulation — and codecs price that wire shape."""
+    prob, w0, w_star = small_problem
+    M = prob.dim
+    ident = run_rounds(make_optimizer("fednl"), prob, w0, w_star, rounds=2,
+                       comm=CommConfig())
+    # grad (M,) + eigenpair (M+1,), 8-byte floats — matches uplink_floats
+    assert (ident.traces[0].bytes_up == (2 * M + 1) * 8).all()
+    quant = run_rounds(make_optimizer("fednl"), prob, w0, w_star, rounds=2,
+                       comm=CommConfig(codecs="qint8"))
+    # qint8 prices the SAME wire shapes: 1 byte/entry + fp32 scale each
+    assert (quant.traces[0].bytes_up == (M + 4) + (M + 1 + 4)).all()
+
+
+def test_sympack_halves_flens_hessian_uplink(small_problem):
+    prob, w0, w_star = small_problem
+    k = 16
+    h_raw = run_rounds(make_optimizer("flens", k=k), prob, w0, w_star,
+                       rounds=2, comm=CommConfig())
+    h_packed = run_rounds(make_optimizer("flens", k=k), prob, w0, w_star,
+                          rounds=2,
+                          comm=CommConfig(codecs={"h_sk": "sympack"}))
+    # sympack is lossless -> identical trajectory, ~2x fewer Hessian bytes
+    np.testing.assert_array_equal(h_raw.loss, h_packed.loss)
+    raw_h = k * k * 8
+    packed_h = k * (k + 1) // 2 * 8
+    assert (h_raw.traces[0].bytes_up - h_packed.traces[0].bytes_up
+            == raw_h - packed_h).all()
+
+
+def test_lossy_partial_run_still_converges(small_problem):
+    prob, w0, w_star = small_problem
+    comm = CommConfig(
+        codecs={"h_sk": "sympack+qint8", "default": "qint8"},
+        scheduler="uniform:0.7",
+        channel=ChannelModel(dropout_prob=0.1, straggler_prob=0.2),
+        seed=1,
+    )
+    hist = run_rounds(make_optimizer("flens", k=12), prob, w0, w_star,
+                      rounds=8, comm=comm)
+    assert np.isfinite(hist.loss).all()
+    assert hist.gap[-1] < hist.gap[0] * 0.5
+    stats = summarize(hist.traces)
+    assert stats["rounds"] == 8
+    # uniform:0.7 of 6 clients schedules ceil(4.2) = 5 per round, and
+    # dropout can only reduce delivery below that
+    assert 0.0 < stats["mean_participation"] <= 5.0 / 6.0 + 1e-9
+    assert stats["sim_time_s"] > 0.0
+    assert (np.diff(hist.sim_time_s) > 0).all()
+
+
+def test_flens_state_has_no_hidden_instance_state(small_problem):
+    """FLeNS+ eta lives in the state dict; one optimizer object can be
+    reused across problems without leaking per-problem values."""
+    prob, w0, w_star = small_problem
+    opt = make_optimizer("flens_plus", k=8)
+    state = opt.init(prob, w0)
+    assert "eta" in state
+    assert not any(a.startswith("_eta") for a in vars(opt))
+    # a second, differently-scaled problem gets its own eta
+    X, y = make_classification(jax.random.PRNGKey(9), 500, 24)
+    prob2 = make_problem(10.0 * X, y, m=5, lam=1e-3, objective=logistic)
+    state2 = opt.init(prob2, jnp.zeros(prob2.dim, jnp.float64))
+    assert float(state2["eta"]) != float(state["eta"])
+
+
+def test_dirichlet_partition_sizes_follow_draw(small_problem):
+    """make_problem heterogeneity='dirichlet' produces genuinely unequal,
+    Dirichlet-proportioned shard sizes that sum to n."""
+    X, y = make_classification(jax.random.PRNGKey(4), 999, 16)
+    m = 8
+    prob = make_problem(X, y, m=m, lam=1e-3, objective=logistic,
+                        key=jax.random.PRNGKey(11),
+                        heterogeneity="dirichlet", dirichlet_alpha=0.3)
+    sizes = np.asarray(prob.mask.sum(axis=1)).astype(int)
+    assert sizes.sum() == 999
+    assert (sizes >= 1).all()
+    assert sizes.std() > 0  # alpha=0.3 draws are never uniform
+    props = np.asarray(jax.random.dirichlet(
+        jax.random.PRNGKey(11), jnp.full((m,), 0.3)))
+    # largest-remainder rounding keeps every shard within 1 of n*p_j,
+    # except rows moved by the every-client-gets-one-row guarantee
+    floor_fixups = int((props * 999 < 1).sum())
+    assert np.abs(sizes - props * 999).max() <= 1.0 + floor_fixups + 1e-6
+    np.testing.assert_allclose(float(prob.client_weights.sum()), 1.0,
+                               rtol=1e-12)
