@@ -54,3 +54,23 @@ def spec_alpha(spec):
 def run_method(name, kwargs, prob, w0, w_star, rounds, seed=0):
     opt = make_optimizer(name, **kwargs)
     return run_rounds(opt, prob, w0, w_star, rounds=rounds, seed=seed)
+
+
+def ef_gap_shrink(loss_base: float, loss_off: float, loss_on: float) -> dict:
+    """Error-feedback headline record: final-loss gap to the
+    no-compression baseline with EF off vs on. ``ratio`` is ``None``
+    (JSON null — json.dumps would otherwise emit the invalid token
+    ``Infinity``) when the EF run lands at or below the baseline."""
+    d_off = float(loss_off) - float(loss_base)
+    d_on = float(loss_on) - float(loss_base)
+    ratio = d_off / d_on if d_on > 0 else None
+    return {"ef_off": d_off, "ef_on": d_on, "ratio": ratio}
+
+
+def ef_ratio_label(shrink: dict) -> str:
+    """Render ``ef_gap_shrink``'s ratio for reports: ``inf`` only when
+    EF-off genuinely had a gap to close; ``n/a`` when both runs already
+    sit at or below the baseline."""
+    if shrink["ratio"] is not None:
+        return f"{shrink['ratio']:.2f}"
+    return "inf" if shrink["ef_off"] > 0 else "n/a"

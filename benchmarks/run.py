@@ -141,9 +141,13 @@ def bench_comm(full: bool) -> None:
     """Loss-vs-bytes and loss-vs-simulated-time for FLeNS under the
     simulated transport: identity codec vs symmetric-pack + int8 on the
     sketched Hessian, both under a 10%-dropout full-participation
-    channel. Also asserts the backward-compat contract: identity codec +
-    full participation reproduces the no-comm trajectory exactly."""
-    from benchmarks.paper_common import build_problem, run_method
+    channel; plus error-feedback on/off curves for a top-k-crushed O(M)
+    uplink (fedavg), whose ``ef_gap_shrink`` ratio records how much of
+    the compression floor EF21 memory recovers at identical byte cost.
+    Also asserts the backward-compat contract: identity codec + full
+    participation reproduces the no-comm trajectory exactly."""
+    from benchmarks.paper_common import (
+        build_problem, ef_gap_shrink, ef_ratio_label, run_method)
     from repro.comm import ChannelModel, CommConfig, summarize
     from repro.core import make_optimizer, run_rounds
 
@@ -160,35 +164,74 @@ def bench_comm(full: bool) -> None:
     _csv("comm/identity_reproduces_legacy", 0.0, f"exact={exact}")
     assert exact, "identity-codec comm path diverged from the legacy driver"
 
+    # accounting cross-check: the formula-derived uplink byte curve
+    # (History.cumulative_uplink — per-client floats × itemsize × m)
+    # must equal the traced per-round uplink bytes on the identity/full
+    # path, where every client delivers the raw wire format
+    traced_up = sum(float(t.bytes_up.sum()) for t in ident.traces)
+    formula_up = float(ident.cumulative_uplink[-1])
+    _csv("comm/uplink_formula_matches_traced", 0.0,
+         f"formula={formula_up:.0f};traced={traced_up:.0f};"
+         f"match={bool(abs(formula_up - traced_up) < 0.5)}")
+    assert abs(formula_up - traced_up) < 0.5, (
+        f"cumulative_uplink formula ({formula_up}) disagrees with traced "
+        f"bytes ({traced_up})")
+
     channel = ChannelModel(dropout_prob=0.10, straggler_prob=0.10)
     variants = [
-        ("identity", CommConfig(channel=channel, seed=1)),
-        ("sympack_qint8", CommConfig(
+        ("flens_identity", "flens", dict(k=k),
+         CommConfig(channel=channel, seed=1)),
+        ("flens_sympack_qint8", "flens", dict(k=k), CommConfig(
             codecs={"h_sk": "sympack+qint8", "sg": "qint8"},
             channel=channel, seed=1)),
+        # EF on/off under a biased codec that actually bites: fedavg's
+        # O(M) model uplink at topk0.05 (5% of coordinates per round)
+        ("fedavg_identity", "fedavg", dict(lr=2.0, local_steps=5),
+         CommConfig(channel=channel, seed=1)),
+        ("fedavg_topk_ef_off", "fedavg", dict(lr=2.0, local_steps=5),
+         CommConfig(codecs="topk0.05", channel=channel, seed=1)),
+        ("fedavg_topk_ef_on", "fedavg", dict(lr=2.0, local_steps=5),
+         CommConfig(codecs="topk0.05", error_feedback=True,
+                    channel=channel, seed=1)),
     ]
     out = {"dataset": spec.name, "rounds": rounds, "k": k, "variants": {}}
-    for name, comm in variants:
-        hist = run_rounds(make_optimizer("flens", k=k), prob, w0, w_star,
-                          rounds=rounds, comm=comm)
+    finals = {}
+    for name, opt_name, opt_kw, comm in variants:
+        hist = run_rounds(make_optimizer(opt_name, **opt_kw), prob, w0,
+                          w_star, rounds=rounds, comm=comm)
         stats = summarize(hist.traces)
+        finals[name] = float(hist.loss[-1])
         out["variants"][name] = {
             "gap": hist.gap.tolist(),
+            "loss_final": float(hist.loss[-1]),
             "cumulative_bytes": hist.cumulative_bytes.tolist(),
             "sim_time_s": hist.sim_time_s.tolist(),
             "stats": stats,
+            "ef_residuals": hist.ef_residuals,
         }
         _csv(
-            f"comm/flens_{name}",
+            f"comm/{name}",
             hist.wall_time_s / rounds * 1e6,
             f"gap_final={hist.gap[-1]:.3e};"
             f"total_MB={hist.cumulative_bytes[-1] / 1e6:.3f};"
             f"sim_s={hist.sim_time_s[-1]:.2f}",
         )
-    ident_b = out["variants"]["identity"]["cumulative_bytes"][-1]
-    packed_b = out["variants"]["sympack_qint8"]["cumulative_bytes"][-1]
+    ident_b = out["variants"]["flens_identity"]["cumulative_bytes"][-1]
+    packed_b = out["variants"]["flens_sympack_qint8"]["cumulative_bytes"][-1]
     _csv("comm/bytes_saved_by_sympack_qint8", 0.0,
          f"ratio={ident_b / max(packed_b, 1):.2f}x")
+    # EF's headline number: how much of the loss gap to the
+    # no-compression baseline the memory recovers (same encoded bytes)
+    shrink = ef_gap_shrink(finals["fedavg_identity"],
+                           finals["fedavg_topk_ef_off"],
+                           finals["fedavg_topk_ef_on"])
+    out["ef_gap_shrink"] = shrink
+    off_b = out["variants"]["fedavg_topk_ef_off"]["cumulative_bytes"][-1]
+    on_b = out["variants"]["fedavg_topk_ef_on"]["cumulative_bytes"][-1]
+    _csv("comm/ef_gap_shrink", 0.0,
+         f"ratio={ef_ratio_label(shrink)}x;ef_off_gap={shrink['ef_off']:.3e};"
+         f"ef_on_gap={shrink['ef_on']:.3e};"
+         f"same_bytes={bool(off_b == on_b)}")
     RESULTS.mkdir(exist_ok=True)
     (RESULTS / "comm.json").write_text(json.dumps(out, indent=1))
 

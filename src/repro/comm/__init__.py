@@ -5,7 +5,9 @@ formula into a measurable simulation: every federated round's uplink
 payloads flow through pluggable codecs (so compression error perturbs
 the optimization), a per-client channel model converts exact encoded
 bytes into simulated wall-clock with stragglers and dropout, and
-participation schedulers reweight server aggregation.
+participation schedulers reweight server aggregation. Lossy codecs can
+carry client-side EF21 error-feedback memory (``repro.comm.feedback``)
+so biased compression keeps the uncompressed fixed point.
 
 Entry point: build a :class:`CommConfig` and pass it to
 ``repro.core.run_rounds(..., comm=cfg)``. See ``examples/edge_clients.py``.
@@ -21,6 +23,11 @@ from repro.comm.codecs import (
     make_codec,
 )
 from repro.comm.config import NULL_COMM, CommConfig, CommRound, CommSession
+from repro.comm.feedback import (
+    compensate,
+    init_memory,
+    residual_norms,
+)
 from repro.comm.metrics import (
     RoundTrace,
     cumulative_bytes,
@@ -53,9 +60,12 @@ __all__ = [
     "SymPackCodec",
     "TopKCodec",
     "UniformSampler",
+    "compensate",
     "cumulative_bytes",
     "cumulative_time",
+    "init_memory",
     "make_codec",
     "make_scheduler",
+    "residual_norms",
     "summarize",
 ]

@@ -37,10 +37,13 @@ def _size(shape) -> int:
 
 
 class Codec:
-    """Base codec. ``deterministic`` codecs ignore the PRNG key."""
+    """Base codec. ``deterministic`` codecs ignore the PRNG key.
+    ``lossless`` codecs decode bit-exactly — error feedback skips them
+    (their residual is identically zero)."""
 
     name: str = "codec"
     deterministic: bool = True
+    lossless: bool = False
 
     def roundtrip(self, key: jax.Array, x: jax.Array) -> jax.Array:
         raise NotImplementedError
@@ -61,6 +64,7 @@ class IdentityCodec(Codec):
     """
 
     name = "identity"
+    lossless = True
 
     def roundtrip(self, key, x):
         return x
@@ -99,7 +103,10 @@ class QInt8Codec(Codec):
     deterministic = False
 
     def roundtrip(self, key, x):
-        scale = jnp.maximum(jnp.max(jnp.abs(x)), jnp.finfo(x.dtype).tiny) / 127.0
+        # clamp AFTER the /127: tiny/127 is subnormal and XLA flushes it
+        # to zero on CPU, turning an all-zero payload into 0/0 = NaN
+        scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0,
+                            jnp.finfo(x.dtype).tiny)
         u = jax.random.uniform(key, x.shape, x.dtype)
         q = jnp.clip(jnp.floor(x / scale + u), -127, 127)
         return (q * scale).astype(x.dtype)
@@ -136,6 +143,11 @@ class TopKCodec(Codec):
     def deterministic(self):
         return self.inner.deterministic
 
+    @property
+    def lossless(self):
+        # keeping every entry degenerates to the inner codec
+        return self.fraction == 1.0 and self.inner.lossless
+
     def _kept(self, n: int) -> int:
         if self.k is not None:
             return max(1, min(int(self.k), n))
@@ -171,6 +183,10 @@ class SymPackCodec(Codec):
     @property
     def deterministic(self):
         return self.inner.deterministic
+
+    @property
+    def lossless(self):
+        return self.inner.lossless
 
     def roundtrip(self, key, x):
         if x.ndim != 2 or x.shape[0] != x.shape[1]:

@@ -14,6 +14,16 @@ Three layers:
       ``weights(p)`` masks + renormalizes aggregation weights for the
       delivering cohort.
 
+With ``CommConfig(error_feedback=...)`` lossy payloads additionally
+carry client-side error-feedback memory (``repro.comm.feedback``): the
+driver threads the memory pytree through the jitted round and ``uplink``
+emits the updated memory via ``CommRound.memory_out``. Under the default
+``ef_variant="ef21"`` the memory is the payload *estimate* ``g`` — the
+wire carries the compressed innovation ``C(x - g)`` and the server
+consumes the advanced estimate ``g + C(x - g)``; under ``"ef14"`` it is
+the accumulated residual ``e`` and the wire carries the compensated
+payload ``C(x + e)``.
+
 Bit-exactness contract: with the identity codec and full participation
 (no dropout), ``CommRound.uplink`` returns its input object unchanged
 and ``weights`` returns ``p`` unchanged — the round's jaxpr is identical
@@ -28,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import feedback
 from repro.comm.channel import ChannelModel
 from repro.comm.codecs import Codec, IdentityCodec, make_codec
 from repro.comm.metrics import RoundTrace
@@ -47,16 +58,33 @@ class CommConfig:
     ``"w_local"``, ...) to codec specs; the ``"default"`` entry covers
     unnamed payloads. A bare string/Codec is shorthand for
     ``{"default": ...}``.
+
+    ``error_feedback`` gates client-side error-feedback memory per
+    payload (see ``repro.comm.feedback``): ``True`` enables it for every
+    *eligible* payload with a *lossy* codec, a collection of names
+    enables those payloads only, and a ``{name: bool}`` dict (optional
+    ``"default"`` entry) gives full control. Lossless payloads never
+    allocate memory regardless, and call sites can opt a payload out
+    entirely with ``uplink(..., ef_eligible=False)`` (per-round random
+    sketch bases). ``ef_variant`` picks the recursion: ``"ef21"``
+    (compressed-estimate tracking, default) or ``"ef14"`` (classic
+    residual compensation).
     """
 
     codecs: "Dict[str, Any] | str | Codec" = "identity"
     scheduler: "str | Scheduler" = "full"
     channel: ChannelModel = dataclasses.field(default_factory=ChannelModel)
     seed: int = 0
+    error_feedback: "bool | str | Dict[str, bool] | tuple | frozenset" = False
+    ef_variant: str = "ef21"
 
     def __post_init__(self):
         if not isinstance(self.codecs, dict):
             self.codecs = {"default": self.codecs}
+        if self.ef_variant not in feedback.EF_VARIANTS:
+            raise ValueError(
+                f"unknown ef_variant {self.ef_variant!r}; "
+                f"want one of {feedback.EF_VARIANTS}")
         self._codec_cache: Dict[str, Codec] = {}
         self.scheduler = make_scheduler(self.scheduler)
 
@@ -71,11 +99,29 @@ class CommConfig:
             self._codec_cache[payload] = make_codec(spec)
         return self._codec_cache[payload]
 
+    def ef_for(self, payload: str) -> bool:
+        """EF is folded in only where it can matter: requested AND lossy."""
+        return (feedback.ef_requested(self.error_feedback, payload)
+                and not self.codec_for(payload).lossless)
+
+    @property
+    def has_error_feedback(self) -> bool:
+        return feedback.any_ef_requested(self.error_feedback)
+
 
 class CommRound:
     """In-jit view of one round's transport. Constructed inside the
-    traced round function; ``mask``/``key`` are traced arrays, the codec
-    table and byte plan are static Python closed over by the trace."""
+    traced round function; ``mask``/``key``/``memory`` are traced
+    arrays, the codec table and byte plan are static Python closed over
+    by the trace.
+
+    ``memory`` is the EF21 residual pytree threaded through the jitted
+    round by the driver (``{payload_key: (m, ...)}``); ``uplink`` folds
+    the matching residual into EF-enabled lossy payloads and writes the
+    updated residual to ``memory_out``. ``ef_record`` switches the
+    object into the shape-discovery mode ``CommSession.
+    init_error_feedback`` uses under ``jax.eval_shape``.
+    """
 
     def __init__(
         self,
@@ -83,15 +129,30 @@ class CommRound:
         plan: Dict[str, int],
         mask: "jax.Array | None",
         key: "jax.Array | None",
+        memory: "Dict[str, jax.Array] | None" = None,
+        ef_record: "Dict[str, jax.ShapeDtypeStruct] | None" = None,
     ):
         self._config = config
         self._plan = plan
         self.mask = mask
         self._key = key
         self._n_payloads = 0
+        self._occurrences: Dict[str, int] = {}
+        self._ef_record = ef_record
+        # memory_out starts as a same-structure copy so payloads a round
+        # happens to skip still thread their residual through unchanged
+        self.memory_out: Dict[str, jax.Array] = dict(memory or {})
+
+    def _payload_key(self, name: str) -> str:
+        """Stable per-round key for the i-th uplink of ``name`` — a round
+        calling ``uplink("g", ...)`` twice bills (and remembers) both."""
+        occ = self._occurrences.get(name, 0)
+        self._occurrences[name] = occ + 1
+        return name if occ == 0 else f"{name}#{occ}"
 
     def uplink(self, name: str, x: jax.Array,
-               wire_shape: "tuple | None" = None) -> jax.Array:
+               wire_shape: "tuple | None" = None,
+               ef_eligible: bool = True) -> jax.Array:
         """Route a stacked per-client payload ``x: (m, ...)`` through its
         codec's simulated encode→decode; records exact encoded bytes.
 
@@ -99,19 +160,37 @@ class CommRound:
         algorithm already defines a native wire format (e.g. FedNL
         transmits a rank-1 ``(M+1,)`` eigenpair, not the materialized
         (M, M) difference); the codec still prices that shape, so codec
-        compression stays reflected in the byte accounting."""
+        compression stays reflected in the byte accounting.
+
+        ``ef_eligible=False`` declares that this payload's coordinate
+        system is redrawn every round (two-sided sketches): cross-round
+        error-feedback memory would mix incompatible bases, so EF is
+        skipped for it even when ``CommConfig.error_feedback`` asks."""
         codec = self._config.codec_for(name)
-        self._plan[name] = codec.nbytes(
+        pkey = self._payload_key(name)
+        self._plan[pkey] = codec.nbytes(
             tuple(wire_shape) if wire_shape is not None
             else tuple(x.shape[1:]), x.dtype)
         self._n_payloads += 1
         if isinstance(codec, IdentityCodec):
             return x  # same object: zero jaxpr change
+        ef = ef_eligible and self._config.ef_for(name)
+        if ef and self._ef_record is not None:
+            self._ef_record[pkey] = jax.ShapeDtypeStruct(x.shape, x.dtype)
         if codec.deterministic:
             keys = jnp.zeros((x.shape[0], 2), jnp.uint32)  # unused by codec
         else:
             base = jax.random.fold_in(self._key, self._n_payloads)
             keys = jax.random.split(base, x.shape[0])
+        if ef and pkey in self.memory_out:
+            decoded, mem_new = feedback.compensate(
+                codec, keys, x, self.memory_out[pkey],
+                variant=self._config.ef_variant)
+            # dropped clients never ran the round: freeze their memory
+            # rows with the same gate that protects optimizer state
+            self.memory_out[pkey] = self.where_delivered(
+                mem_new, self.memory_out[pkey])
+            return decoded
         return jax.vmap(codec.roundtrip)(keys, x)
 
     def weights(self, p: jax.Array) -> jax.Array:
@@ -136,7 +215,7 @@ class _NullComm:
 
     mask = None
 
-    def uplink(self, name, x, wire_shape=None):
+    def uplink(self, name, x, wire_shape=None, ef_eligible=True):
         return x
 
     def weights(self, p):
@@ -162,8 +241,12 @@ class CommSession:
         self.config = config
         self.m = m
         self.downlink_bytes = int(downlink_bytes)
+        # keyed by payload occurrence (``name`` / ``name#i``): a round
+        # uplinking the same name twice accumulates both, it does not
+        # overwrite the first entry
         self.plan: Dict[str, int] = {}
         self.traces: "list[RoundTrace]" = []
+        self.ef_memory: Dict[str, jax.Array] = {}
         self._root = jax.random.PRNGKey(config.seed)
         self._mask_dtype = mask_dtype
         # static decision: identical jit trace structure for every round
@@ -173,9 +256,38 @@ class CommSession:
 
     @property
     def bytes_up_per_client(self) -> int:
-        """Exact encoded uplink bytes per delivering client per round
-        (valid after the first round has been traced)."""
+        """Exact encoded uplink bytes per delivering client per round,
+        summed over every payload occurrence (valid after the first
+        round has been traced)."""
         return int(sum(self.plan.values()))
+
+    def init_error_feedback(self, trace_round) -> "Dict[str, jax.Array]":
+        """Discover EF payload shapes and zero-init the memory pytree.
+
+        ``trace_round(comm_round)`` must invoke the optimizer's round
+        exactly as the driver will; it is traced abstractly once (via
+        ``jax.eval_shape`` — nothing executes) with a recording
+        ``CommRound``, which notes the shape/dtype of every EF-enabled
+        lossy payload. Payload shapes are static, so one probe suffices.
+        With no EF-eligible payloads the memory stays an empty pytree and
+        the jitted round's jaxpr is unchanged.
+        """
+        spec: Dict[str, jax.ShapeDtypeStruct] = {}
+        mask = (None if self._always_full
+                else jnp.zeros((self.m,), self._mask_dtype))
+        ck = jax.random.PRNGKey(0)
+
+        def probe(mask, ck):
+            cr = CommRound(self.config, {}, mask, ck, ef_record=spec)
+            return trace_round(cr)
+
+        jax.eval_shape(probe, mask, ck)
+        self.ef_memory = feedback.init_memory(spec)
+        return self.ef_memory
+
+    def ef_residual_norms(self) -> "Dict[str, float]":
+        """Per-payload Frobenius norm of the current EF residuals."""
+        return feedback.residual_norms(self.ef_memory)
 
     def begin_round(self, t: int):
         """Draw this round's cohort + channel randomness.

@@ -1,0 +1,152 @@
+"""Client-side error-feedback memory for lossy uplink codecs.
+
+Biased compressors (top-k above all, but also quantizers) break the
+fixed point of federated aggregation: every round throws away payload
+mass, the discarded part never reaches the server, and the iterates
+stall at a compression floor — the convergence gap
+``examples/edge_clients.py`` measures under lossy codecs + partial
+participation. Error feedback fixes this by making each client
+*remember* what the codec dropped and re-offer it in later rounds. Two
+standard recursions are implemented, per payload name and per client,
+both with zero-initialized memory and identical wire formats (EF never
+changes the encoded byte count — only which values ride in it):
+
+``ef21`` (default) — compressed-estimate tracking, Richtárik et al.
+(2021); the compressed-Hessian learning of FedNL (Safaryan et al.,
+2022) is the same mechanism specialized to Hessians. The memory ``g_t``
+is the client's current payload estimate (mirrored by the server in a
+real deployment); the wire carries only the compressed *innovation*:
+
+    transmit   c_t     = C(x_t - g_t)
+    estimate   g_{t+1} = g_t + c_t          (what the server now holds)
+
+On a fixed payload stream the residual ``x - g_t`` contracts
+geometrically under any contractive ``C`` (``g_t -> x``), so the
+server-side payload converges to the uncompressed one — and because the
+server consumes the smooth estimate ``g_{t+1}`` rather than a raw
+compressed payload, per-round noise is far lower than ``ef14``.
+
+``ef14`` — classic error compensation (Seide et al. 2014; Stich et al.
+2018), the ``e_{t+1} = e_t + x - C(x + e_t)`` recursion:
+
+    transmit   m_t     = C(x_t + e_t)       (the compensated payload)
+    remember   e_{t+1} = (x_t + e_t) - m_t  (what C dropped this time)
+
+The residual stays bounded (not contracting) and the *time-averaged*
+transmitted payload converges to the time-averaged true payload; the
+per-round decode is spikier than ``ef21``'s, which matters for
+Newton-type methods whose guards reject noisy steps.
+
+Traced-memory design
+--------------------
+``CommRound.uplink`` runs inside the jitted round, so the memories
+cannot live on a Python object that mutates per round — they form a
+pytree of ``(m, ...)`` arrays (one leaf per EF-active payload
+occurrence, stacked over clients) that the round driver threads through
+the jitted step alongside the optimizer state:
+
+  * payload shapes are discovered at trace time: ``CommSession.
+    init_error_feedback`` runs one ``jax.eval_shape`` probe of the round
+    with a recording ``CommRound``, then zero-initializes one ``(m, ...)``
+    leaf per EF-active payload;
+  * ``CommRound`` receives the memory pytree, ``uplink`` applies the
+    selected recursion and writes the new memory into
+    ``CommRound.memory_out``; ``run_rounds`` carries the updated pytree
+    into the next round;
+  * dropped clients never observe the round, so their memory rows are
+    frozen via the delivery mask (``CommRound.where_delivered``, the
+    same gate that protects per-client optimizer state and zeroes their
+    aggregation weight);
+  * payloads whose codec is lossless (identity, bare sympack) allocate
+    no memory at all, so the identity-codec path keeps a bit-identical
+    jaxpr: the memory pytree is empty and ``uplink`` is unchanged.
+
+Eligibility: EF memory only makes sense for payloads expressed in a
+coordinate system that persists across rounds. Sketch-basis payloads
+(FLeNS's ``h_sk``/``sg``, FedNS's ``sa``) are re-expressed in a fresh
+random basis every round — cross-round memory would mix incompatible
+bases and actively corrupt the estimate — so those call sites pass
+``uplink(..., ef_eligible=False)`` and are skipped, exactly like
+``wire_shape`` this is algorithm knowledge declared at the uplink.
+
+Enable with ``CommConfig(error_feedback=True)`` (all eligible lossy
+payloads), a collection of payload names, or a ``{name: bool}`` dict
+with an optional ``"default"`` entry; pick the recursion with
+``CommConfig(ef_variant="ef21"|"ef14")``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.codecs import Codec
+
+EF_VARIANTS = ("ef21", "ef14")
+
+
+def ef_requested(error_feedback: Any, payload: str) -> bool:
+    """Resolve the per-payload gate from a ``CommConfig.error_feedback``
+    spec: ``bool`` (all/none), a collection of payload names, or a
+    ``{name: bool}`` dict with an optional ``"default"`` fallback."""
+    if isinstance(error_feedback, bool):
+        return error_feedback
+    if isinstance(error_feedback, str):  # one payload name, not chars
+        return payload == error_feedback
+    if isinstance(error_feedback, dict):
+        return bool(error_feedback.get(
+            payload, error_feedback.get("default", False)))
+    return payload in error_feedback
+
+
+def any_ef_requested(error_feedback: Any) -> bool:
+    """Whether the spec can enable EF for at least one payload name."""
+    if isinstance(error_feedback, bool):
+        return error_feedback
+    if isinstance(error_feedback, str):
+        return bool(error_feedback)
+    if isinstance(error_feedback, dict):
+        return any(bool(v) for v in error_feedback.values())
+    return len(tuple(error_feedback)) > 0
+
+
+def compensate(
+    codec: Codec, keys: jax.Array, x: jax.Array, mem: jax.Array,
+    variant: str = "ef21",
+) -> "tuple[jax.Array, jax.Array]":
+    """One error-feedback step on a stacked ``(m, ...)`` payload.
+
+    Returns ``(decoded, new_mem)``: what the server reconstructs this
+    round and the client memory to carry into the next round. ``keys``
+    is ``(m, 2)`` per-client codec randomness (ignored by deterministic
+    codecs).
+
+    * ``ef21``: ``mem`` is the payload estimate ``g``; the wire carries
+      ``C(x - g)`` and both sides advance to ``g + C(x - g)`` — decoded
+      payload and new memory coincide.
+    * ``ef14``: ``mem`` is the residual ``e``; the wire carries
+      ``C(x + e)`` and the client keeps ``(x + e) - C(x + e)``.
+    """
+    if variant == "ef21":
+        innovation = jax.vmap(codec.roundtrip)(keys, x - mem)
+        estimate = mem + innovation
+        return estimate, estimate
+    if variant == "ef14":
+        compensated = x + mem
+        decoded = jax.vmap(codec.roundtrip)(keys, compensated)
+        return decoded, compensated - decoded
+    raise ValueError(
+        f"unknown error-feedback variant {variant!r}; want one of {EF_VARIANTS}")
+
+
+def init_memory(spec: "Dict[str, jax.ShapeDtypeStruct]") -> "Dict[str, jax.Array]":
+    """Zero memories from a discovered ``{payload_key: ShapeDtypeStruct}``."""
+    return {name: jnp.zeros(s.shape, s.dtype) for name, s in spec.items()}
+
+
+def residual_norms(memory: "Dict[str, jax.Array]") -> "Dict[str, float]":
+    """Host-side diagnostic: per-payload Frobenius norm of the stacked
+    memory (summed over clients). For ``ef21`` this is the estimate
+    magnitude; for ``ef14`` the accumulated residual."""
+    return {name: float(jnp.linalg.norm(e)) for name, e in memory.items()}

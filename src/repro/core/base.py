@@ -19,7 +19,10 @@ Every algorithm implements:
 the channel model gives simulated wall-clock with stragglers/dropout,
 and the scheduler picks the per-round cohort. The resulting ``History``
 carries byte-accurate ``cumulative_bytes`` / ``sim_time_s`` axes next to
-the legacy float-count formulas.
+the legacy float-count formulas. With ``CommConfig(error_feedback=...)``
+the driver additionally threads the EF21 residual-memory pytree
+(``repro.comm.feedback``) through the jitted round next to the
+optimizer state.
 """
 from __future__ import annotations
 
@@ -76,10 +79,21 @@ class History:
     cumulative_bytes: Optional[np.ndarray] = None  # (T+1,) up+down, all clients
     sim_time_s: Optional[np.ndarray] = None  # (T+1,) cumulative simulated s
     traces: Optional[list] = None  # per-round RoundTrace records (comm runs)
+    clients: int = 1  # m — scales the per-client float formulas to totals
+    itemsize: int = 8  # bytes per float of the problem dtype
+    # final error-feedback memory norms per payload (comm runs with EF;
+    # empty dict when EF is off or nothing was eligible)
+    ef_residuals: Optional[dict] = None
 
     @property
     def cumulative_uplink(self) -> np.ndarray:
-        return np.arange(len(self.loss)) * float(self.uplink_floats)
+        """(T+1,) cumulative uplink BYTES summed across all clients —
+        the formula-derived counterpart of the uplink share of
+        ``cumulative_bytes`` (same axis and units, so the two are
+        directly comparable on identity-codec full-participation runs).
+        """
+        per_round = float(self.uplink_floats) * self.itemsize * self.clients
+        return np.arange(len(self.loss)) * per_round
 
 
 def run_rounds(
@@ -113,15 +127,29 @@ def run_rounds(
             mask_dtype=problem.X.dtype,
         )
 
-        def _round(s, k, mask, ck):
-            cr = CommRound(comm, session.plan, mask, ck)
-            return opt.round(problem, s, k, comm=cr)
+        # EF21 memory rides through the jitted round as a pytree next to
+        # the optimizer state. Without error feedback (or with only
+        # lossless codecs) it is an EMPTY pytree — zero extra jaxpr
+        # inputs, so the identity-codec path stays bit-identical.
+        def _round(s, mem, k, mask, ck):
+            cr = CommRound(comm, session.plan, mask, ck, memory=mem)
+            s_next = opt.round(problem, s, k, comm=cr)
+            return s_next, cr.memory_out
 
         round_fn = jax.jit(_round)
 
     loss_star = float(loss_fn(w_star))
     state = opt.init(problem, w0)
     keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
+
+    ef_memory = {}
+    if session is not None and comm.has_error_feedback:
+        # one abstract probe of the round discovers every EF payload's
+        # (m, ...) shape; nothing executes here (any key works — shapes
+        # don't depend on it, and keys may be empty when rounds=0)
+        probe_key = jax.random.PRNGKey(seed)
+        ef_memory = session.init_error_feedback(
+            lambda cr: opt.round(problem, state, probe_key, comm=cr))
 
     losses = [float(loss_fn(state["w"]))]
     gnorms = [float(jnp.linalg.norm(grad_fn(state["w"])))]
@@ -131,7 +159,8 @@ def run_rounds(
             state = round_fn(state, keys[t])
         else:
             mask, ck = session.begin_round(t)
-            state = round_fn(state, keys[t], mask, ck)
+            state, ef_memory = round_fn(state, ef_memory, keys[t], mask, ck)
+            session.ef_memory = ef_memory
             session.end_round()
         losses.append(float(loss_fn(state["w"])))
         gnorms.append(float(jnp.linalg.norm(grad_fn(state["w"]))))
@@ -161,4 +190,7 @@ def run_rounds(
         cumulative_bytes=cum_bytes,
         sim_time_s=sim_time,
         traces=traces,
+        clients=problem.m,
+        itemsize=itemsize,
+        ef_residuals=session.ef_residual_norms() if session else None,
     )

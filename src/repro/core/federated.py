@@ -53,11 +53,6 @@ class FederatedProblem:
         nj = jnp.sum(self.mask, axis=1)
         return nj / jnp.sum(nj)
 
-    # -- masked per-client views -------------------------------------------
-    def _masked(self, j_X, j_y, j_mask):
-        # zero-out padded rows; losses divide by n_j via the mask sum
-        return j_X * j_mask[:, None], j_y, j_mask
-
     # -- local (per-client) quantities, all vmappable -----------------------
     def local_value(self, w: jax.Array) -> jax.Array:
         """(m,) local losses (each on its own n_j)."""
@@ -224,14 +219,25 @@ def make_problem(
 def newton_solve(
     problem: FederatedProblem, w0: jax.Array, iters: int = 50, tol: float = 1e-12
 ) -> jax.Array:
-    """Reference optimum w* via exact (global) damped Newton."""
+    """Reference optimum w* via exact (global) damped Newton.
 
-    def body(w, _):
+    Halts at the first iterate with ``‖∇F(w)‖ ≤ tol``: the scan still
+    runs ``iters`` steps (static shape), but once converged every later
+    update is masked out, so the returned ``w`` is the halting iterate.
+    ``tol=0.0`` disables the check and reproduces the full-``iters``
+    trajectory exactly.
+    """
+
+    def body(carry, _):
+        w, done = carry
         g = problem.global_grad(w)
+        gnorm = jnp.linalg.norm(g)
+        done = done | (gnorm <= tol)
         h = problem.global_hessian(w)
         step = jnp.linalg.solve(h, g)
         # backtracking-free damped step: full Newton is fine for GLM + ridge
-        return w - step, jnp.linalg.norm(g)
+        return (jnp.where(done, w, w - step), done), gnorm
 
-    w, _ = jax.lax.scan(body, w0, None, length=iters)
+    (w, _), _ = jax.lax.scan(
+        body, (w0, jnp.asarray(False)), None, length=iters)
     return w

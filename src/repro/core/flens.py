@@ -122,9 +122,11 @@ class FLeNS(FederatedOptimizer):
         sg = jax.vmap(s.apply)(gs)  # (m, k)
 
         # uplink: the k×k sketched Hessian (symmetric — sympack applies)
-        # and the sketched gradient flow through the transport codecs
-        h_sk = comm.uplink("h_sk", h_sk)
-        sg = comm.uplink("sg", sg)
+        # and the sketched gradient flow through the transport codecs.
+        # Both live in the per-round sketch basis S_t, so they are not
+        # EF-eligible: cross-round memory would mix incompatible bases.
+        h_sk = comm.uplink("h_sk", h_sk, ef_eligible=False)
+        sg = comm.uplink("sg", sg, ef_eligible=False)
 
         # (3)+(4) server aggregation and sketched-subspace Newton step
         p = comm.weights(problem.client_weights)

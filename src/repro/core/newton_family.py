@@ -214,9 +214,14 @@ class FedNL(FederatedOptimizer):
         keys = jax.random.split(key, problem.m)
         comps = jax.vmap(lambda h, k: self._rank1_compress(h - B, k))(hs, keys)
         # native wire format: one (value, vector) eigenpair per client,
-        # not the materialized (M, M) outer product
+        # not the materialized (M, M) outer product. Not EF-eligible:
+        # a compensated decode would not be rank-1 (breaking that wire
+        # format), and the B update below IS Hessian-space error
+        # feedback already — stacking generic EF on top would silently
+        # change the algorithm.
         comps = comm.uplink("hess_delta", comps,
-                            wire_shape=(problem.dim + 1,))
+                            wire_shape=(problem.dim + 1,),
+                            ef_eligible=False)
         B = B + jnp.einsum("j,jab->ab", p, comps)
         # PSD safeguard: project to symmetric + ridge
         B = 0.5 * (B + B.T)

@@ -45,7 +45,9 @@ class FedNS(FederatedOptimizer):
             return s.apply(aj.T).T
 
         sa = jax.vmap(client)(a, keys)  # (m, k, M)
-        sa = comm.uplink("sa", sa)
+        # per-round data-axis sketch basis: not EF-eligible (memory
+        # across rounds would mix incompatible sketch draws)
+        sa = comm.uplink("sa", sa, ef_eligible=False)
         h_tilde = jnp.einsum("j,jka,jkb->ab", p, sa, sa)
         h_tilde = h_tilde + problem.lam * jnp.eye(problem.dim, dtype=w.dtype)
         return {"w": w - self.mu * jnp.linalg.solve(h_tilde, g)}

@@ -16,7 +16,9 @@ import pytest
 from repro.comm import (
     ChannelModel,
     CommConfig,
+    CommRound,
     CommSession,
+    compensate,
     make_codec,
     make_scheduler,
     summarize,
@@ -228,6 +230,12 @@ def test_identity_full_participation_bit_identical(small_problem, name, kw):
                     comm=CommConfig())
     np.testing.assert_array_equal(h0.loss, h1.loss)
     np.testing.assert_array_equal(h0.grad_norm, h1.grad_norm)
+    # error feedback + lossless codecs allocates no memory and leaves the
+    # round's jaxpr untouched: still bit-identical to the no-comm path
+    h2 = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=4,
+                    comm=CommConfig(error_feedback=True))
+    np.testing.assert_array_equal(h0.loss, h2.loss)
+    np.testing.assert_array_equal(h0.grad_norm, h2.grad_norm)
 
 
 def test_flens_byte_accounting_matches_payload_shapes(small_problem):
@@ -333,3 +341,238 @@ def test_dirichlet_partition_sizes_follow_draw(small_problem):
     assert np.abs(sizes - props * 999).max() <= 1.0 + floor_fixups + 1e-6
     np.testing.assert_allclose(float(prob.client_weights.sum()), 1.0,
                                rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# byte-accounting bugfixes
+# ---------------------------------------------------------------------------
+
+def test_repeated_payload_name_bytes_accumulate():
+    """An optimizer uplinking the same payload name twice in one round
+    must be billed for both occurrences, not just the last one."""
+    plan = {}
+    cr = CommRound(CommConfig(), plan, None, None)
+    x = _payload((3, 10))
+    cr.uplink("g", x)
+    cr.uplink("g", x)
+    cr.uplink("h", x)
+    assert set(plan) == {"g", "g#1", "h"}
+    assert sum(plan.values()) == 3 * 10 * 8
+
+    sess = CommSession(CommConfig(), m=3, downlink_bytes=0)
+    sess.plan.update(plan)
+    assert sess.bytes_up_per_client == 3 * 10 * 8
+
+
+def test_cumulative_uplink_in_bytes_matches_traced(small_problem):
+    """History.cumulative_uplink is total uplink BYTES across all
+    clients — the same units as cumulative_bytes — and on the
+    identity/full-participation path it equals the traced wire bytes."""
+    prob, w0, w_star = small_problem
+    hist = run_rounds(make_optimizer("flens", k=8), prob, w0, w_star,
+                      rounds=3, comm=CommConfig())
+    per_round = hist.uplink_floats * 8 * prob.m
+    np.testing.assert_allclose(hist.cumulative_uplink,
+                               np.arange(4) * float(per_round))
+    traced = sum(float(t.bytes_up.sum()) for t in hist.traces)
+    assert float(hist.cumulative_uplink[-1]) == traced
+
+
+# ---------------------------------------------------------------------------
+# error feedback (repro.comm.feedback)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["topk0.25", "qint8", "topk0.25+qint8"])
+def test_ef21_residual_contracts_on_fixed_stream(spec):
+    """EF21 estimate tracking: on a constant payload stream the residual
+    ``x - g_t`` contracts toward zero under any contractive codec."""
+    codec = make_codec(spec)
+    x = _payload((3, 32))
+    mem = jnp.zeros_like(x)
+    x_norm = float(jnp.linalg.norm(x))
+    norms = []
+    for t in range(30):
+        keys = jax.random.split(jax.random.PRNGKey(t), 3)
+        decoded, mem = compensate(codec, keys, x, mem, variant="ef21")
+        norms.append(float(jnp.linalg.norm(x - mem)))
+        # the decoded payload IS the estimate the server holds
+        np.testing.assert_array_equal(np.asarray(decoded), np.asarray(mem))
+    assert norms[0] < x_norm  # one step already removes energy
+    assert norms[-1] < 0.02 * x_norm  # ~geometric contraction
+    assert norms[-1] < 0.1 * norms[0]
+
+
+@pytest.mark.parametrize("spec", ["topk0.25", "qint8"])
+def test_ef14_residual_bounded_and_time_average_converges(spec):
+    """EF14 compensation: the residual stays bounded (it does not blow
+    up) and the time-averaged decoded payload converges to x, while a
+    single memoryless decode keeps a fixed bias."""
+    codec = make_codec(spec)
+    x = _payload((3, 32))
+    mem = jnp.zeros_like(x)
+    acc = jnp.zeros_like(x)
+    T = 40
+    norms = []
+    for t in range(T):
+        keys = jax.random.split(jax.random.PRNGKey(t), 3)
+        decoded, mem = compensate(codec, keys, x, mem, variant="ef14")
+        acc = acc + decoded
+        norms.append(float(jnp.linalg.norm(mem)))
+    single = jax.vmap(codec.roundtrip)(
+        jax.random.split(jax.random.PRNGKey(99), 3), x)
+    err_avg = float(jnp.linalg.norm(acc / T - x))
+    err_single = float(jnp.linalg.norm(single - x))
+    assert max(norms) < 5.0 * float(jnp.linalg.norm(x))  # bounded memory
+    assert err_avg < 0.25 * err_single  # EF beats the memoryless bias
+
+
+def test_ef_unknown_variant_rejected():
+    with pytest.raises(ValueError):
+        CommConfig(codecs="topk0.1", error_feedback=True, ef_variant="ef99")
+    with pytest.raises(ValueError):
+        compensate(make_codec("qint8"),
+                   jnp.zeros((1, 2), jnp.uint32),
+                   jnp.ones((1, 4)), jnp.zeros((1, 4)), variant="ef99")
+
+
+def test_ef_memory_frozen_for_dropped_clients():
+    """Non-delivering clients never ran the round: their memory rows must
+    not move, while delivered rows advance."""
+    cfg = CommConfig(codecs="topk0.25", error_feedback=True)
+    m, d = 4, 16
+    x = _payload((m, d))
+    stale = 0.5 * jnp.ones((m, d), x.dtype)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    cr = CommRound(cfg, {}, mask, jax.random.PRNGKey(0),
+                   memory={"g": stale})
+    cr.uplink("g", x)
+    new = np.asarray(cr.memory_out["g"])
+    np.testing.assert_array_equal(new[1], 0.5)  # frozen
+    np.testing.assert_array_equal(new[3], 0.5)  # frozen
+    assert not np.allclose(new[0], 0.5)  # delivered: memory advanced
+    assert not np.allclose(new[2], 0.5)
+
+
+def test_ef_memory_allocation_per_payload(small_problem):
+    """Shape discovery allocates memory only for lossy, EF-enabled,
+    EF-eligible payloads: flens_plus's fixed-basis ``grad`` qualifies;
+    the per-round sketch-basis ``h_sk``/``sg`` and the lossless ``loss``
+    never do; identity codecs allocate nothing at all."""
+    prob, w0, w_star = small_problem
+    key = jax.random.PRNGKey(0)
+
+    def discover(cfg, name, **kw):
+        opt = make_optimizer(name, **kw)
+        state = opt.init(prob, w0)
+        sess = CommSession(cfg, m=prob.m, downlink_bytes=0)
+        return sess.init_error_feedback(
+            lambda cr: opt.round(prob, state, key, comm=cr))
+
+    mem = discover(CommConfig(codecs="topk0.1", error_feedback=True),
+                   "flens_plus", k=8)
+    assert set(mem) == {"grad"}
+    assert mem["grad"].shape == (prob.m, prob.dim)
+    assert not np.asarray(mem["grad"]).any()  # zero-initialized
+
+    assert discover(CommConfig(codecs="topk0.1", error_feedback=True),
+                    "flens", k=8) == {}  # only sketch-basis payloads
+    assert discover(CommConfig(error_feedback=True),
+                    "flens_plus", k=8) == {}  # lossless: no memory
+    mem = discover(CommConfig(codecs="topk0.1", error_feedback=True),
+                   "fedavg")
+    assert set(mem) == {"w_local"}
+    # fednl's hess_delta has a native rank-1 wire format and does its own
+    # Hessian-space error feedback (the B update): never EF'd
+    mem = discover(CommConfig(codecs="qint8", error_feedback=True), "fednl")
+    assert set(mem) == {"grad"}
+    # a bare string means ONE payload name, not a character collection
+    assert discover(CommConfig(codecs="topk0.1", error_feedback="w"),
+                    "fedavg") == {}
+    mem = discover(CommConfig(codecs="topk0.1", error_feedback="w_local"),
+                   "fedavg")
+    assert set(mem) == {"w_local"}
+
+
+@pytest.mark.parametrize("variant", ["ef21", "ef14"])
+def test_ef_improves_topk_convergence_same_bytes(small_problem, variant):
+    """End-to-end through run_rounds: error feedback shrinks the top-k
+    convergence gap without changing a single encoded byte."""
+    prob, w0, w_star = small_problem
+
+    def fedavg():
+        return make_optimizer("fedavg", lr=2.0, local_steps=5)
+
+    off = run_rounds(fedavg(), prob, w0, w_star, rounds=12,
+                     comm=CommConfig(codecs="topk0.1", seed=1))
+    on = run_rounds(fedavg(), prob, w0, w_star, rounds=12,
+                    comm=CommConfig(codecs="topk0.1", error_feedback=True,
+                                    ef_variant=variant, seed=1))
+    assert on.gap[-1] < off.gap[-1]
+    np.testing.assert_array_equal(on.cumulative_bytes, off.cumulative_bytes)
+    # the History surfaces the final memory norms for diagnostics
+    assert off.ef_residuals == {}
+    assert set(on.ef_residuals) == {"w_local"}
+    assert np.isfinite(on.ef_residuals["w_local"])
+    assert on.ef_residuals["w_local"] > 0
+
+
+def test_ef_zero_rounds_still_valid(small_problem):
+    """The EF shape probe must not depend on per-round keys: rounds=0
+    with EF enabled returns the initial-point History like always."""
+    prob, w0, w_star = small_problem
+    hist = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=0,
+                      comm=CommConfig(codecs="topk0.1", error_feedback=True))
+    assert len(hist.loss) == 1 and np.isfinite(hist.loss).all()
+
+
+def test_ef_composes_with_dropout_and_scheduler(small_problem):
+    """EF memory threads through the masked (partial-participation)
+    round path and the run stays finite and converging."""
+    prob, w0, w_star = small_problem
+    comm = CommConfig(
+        codecs="topk0.2+qint8",
+        scheduler="uniform:0.7",
+        channel=ChannelModel(dropout_prob=0.15),
+        error_feedback=True,
+        seed=3,
+    )
+    hist = run_rounds(make_optimizer("fedavg", lr=2.0, local_steps=5),
+                      prob, w0, w_star, rounds=10, comm=comm)
+    assert np.isfinite(hist.loss).all()
+    assert hist.gap[-1] < hist.gap[0] * 0.5
+
+
+@pytest.mark.slow
+def test_ef_closes_topk_gap_on_edge_clients_problem():
+    """Acceptance: on the edge_clients problem (phishing twin, dirichlet
+    shards, heterogeneous edge channel), topk0.05 + EF shrinks the final
+    loss gap to the no-compression baseline by >= 2x vs EF off."""
+    from repro.data.libsvm_like import load
+
+    spec, X, y = load("phishing")
+    X, y = X[:8000], y[:8000]
+    prob = make_problem(X, y, m=spec.m_clients, lam=1e-3, objective=logistic,
+                        key=jax.random.PRNGKey(0), heterogeneity="dirichlet")
+    w0 = jnp.zeros(prob.dim, jnp.float64)
+    w_star = newton_solve(prob, w0, iters=40)
+    rates = np.logspace(np.log10(3e4), np.log10(3e6), prob.m)
+    chan = ChannelModel(
+        uplink_bytes_per_s=rates, downlink_bytes_per_s=10.0 * rates,
+        latency_s=0.08, straggler_prob=0.20, straggler_slowdown=10.0,
+        dropout_prob=0.10)
+
+    def run(comm):
+        return run_rounds(make_optimizer("fedavg", lr=2.0, local_steps=5),
+                          prob, w0, w_star, rounds=30, comm=comm)
+
+    base = run(CommConfig(channel=chan, seed=1))
+    off = run(CommConfig(codecs="topk0.05", channel=chan, seed=1))
+    on = run(CommConfig(codecs="topk0.05", error_feedback=True,
+                        channel=chan, seed=1))
+    d_off = float(off.loss[-1] - base.loss[-1])
+    d_on = float(on.loss[-1] - base.loss[-1])
+    assert d_off > 0  # the compression floor is real
+    assert d_on > 0
+    assert d_off / d_on >= 2.0  # EF recovers >= half the gap (meas. ~4x)
+    # identical wire cost: EF changes which values ride, not how many bytes
+    np.testing.assert_array_equal(on.cumulative_bytes, off.cumulative_bytes)

@@ -40,6 +40,54 @@ def test_newton_solve_reaches_stationarity(problem):
     assert gnorm < 1e-10
 
 
+def _legacy_newton(prob, w0, iters):
+    """The seed's newton_solve, verbatim: fixed-iteration scan, no tol."""
+
+    def body(w, _):
+        g = prob.global_grad(w)
+        h = prob.global_hessian(w)
+        return w - jnp.linalg.solve(h, g), jnp.linalg.norm(g)
+
+    w, gnorms = jax.lax.scan(body, w0, None, length=iters)
+    return w, np.asarray(gnorms)
+
+
+def test_newton_solve_tol_zero_matches_legacy(problem):
+    """tol=0 disables the halt and reproduces the seed's fixed-iteration
+    recursion bit for bit."""
+    prob, w0, _ = problem
+    legacy, _ = _legacy_newton(prob, w0, 8)
+    out = newton_solve(prob, w0, iters=8, tol=0.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(legacy))
+
+
+def test_newton_solve_loose_tol_halts_early(problem):
+    """A loose tol freezes the iterate at the FIRST point that satisfies
+    ||grad|| <= tol — extra iterations change nothing — while tol=0 keeps
+    refining past it."""
+    prob, w0, _ = problem
+    tol = 1e-4
+    # gnorms[i] = ||grad|| at iterate i (measured before step i is taken)
+    _, gnorms = _legacy_newton(prob, w0, 30)
+    hit = next(i for i, gn in enumerate(gnorms) if gn <= tol)
+    assert 0 < hit < 30  # the threshold is crossed strictly inside the run
+    out = newton_solve(prob, w0, iters=30, tol=tol)
+    assert float(jnp.linalg.norm(prob.global_grad(out))) <= tol
+    # the halting iterate is the hit-step one, not the fully-refined one
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(newton_solve(prob, w0, iters=hit, tol=0.0)),
+        rtol=0, atol=0)
+    # once halted, more iterations are an exact no-op (same jaxpr, the
+    # masked update copies w through)
+    np.testing.assert_array_equal(
+        np.asarray(newton_solve(prob, w0, iters=hit + 7, tol=tol)),
+        np.asarray(out))
+    # whereas the unhalted run keeps moving past the loose iterate
+    exact = newton_solve(prob, w0, iters=30, tol=0.0)
+    assert not np.array_equal(np.asarray(exact), np.asarray(out))
+    assert float(jnp.linalg.norm(prob.global_grad(exact))) < gnorms[hit]
+
+
 @pytest.mark.parametrize("name", ALGORITHMS)
 def test_all_algorithms_decrease_loss(problem, name):
     prob, w0, w_star = problem
