@@ -1,0 +1,116 @@
+"""CI benchmark regression gate: compare a fresh comm benchmark run
+against the committed baseline.
+
+The comm benchmark (``python -m benchmarks.run --only comm``) is fully
+seeded — channel draws, cohorts, and codec randomness are all pure
+functions of ``CommConfig.seed`` — so on a pinned environment any drift
+in its record is a regression, not noise:
+
+  * ``cumulative_bytes`` is derived from static payload shapes and codec
+    wire formats; it must match the baseline EXACTLY (a byte-accounting
+    change is either an intentional codec change or a bug);
+  * final losses may move by float-level jitter across jax/BLAS builds,
+    so they get a small relative tolerance instead of equality.
+
+Usage (exit code 1 on any violation):
+
+  python benchmarks/compare.py results/comm.json results/comm_baseline.json
+  python benchmarks/compare.py CURRENT BASELINE --loss-rtol 5e-3
+
+Refreshing the baseline after an INTENTIONAL change:
+
+  PYTHONPATH=src python -m benchmarks.run --only comm
+  cp results/comm.json results/comm_baseline.json   # and commit it
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+
+def _rel_err(a: float, b: float) -> float:
+    denom = max(abs(a), abs(b), 1e-30)
+    return abs(a - b) / denom
+
+
+def compare(current: dict, baseline: dict, loss_rtol: float) -> list[str]:
+    """Return a list of human-readable violations (empty = gate passes)."""
+    violations = []
+    cur_vars = current.get("variants", {})
+    base_vars = baseline.get("variants", {})
+    missing = sorted(set(base_vars) - set(cur_vars))
+    if missing:
+        violations.append(f"variants missing from current run: {missing}")
+    added = sorted(set(cur_vars) - set(base_vars))
+    if added:
+        violations.append(
+            f"variants not in the baseline (refresh it to gate them): {added}"
+        )
+    for name in sorted(set(base_vars) & set(cur_vars)):
+        cur, base = cur_vars[name], base_vars[name]
+        # --- byte accounting: exact ------------------------------------
+        cb, bb = cur["cumulative_bytes"][-1], base["cumulative_bytes"][-1]
+        if cb != bb:
+            violations.append(
+                f"{name}: total bytes drifted {bb} -> {cb} "
+                f"(byte accounting must match the baseline exactly)"
+            )
+        for key in ("total_bytes_up", "total_bytes_down"):
+            if cur["stats"][key] != base["stats"][key]:
+                violations.append(
+                    f"{name}: stats.{key} drifted "
+                    f"{base['stats'][key]} -> {cur['stats'][key]}"
+                )
+        # --- final loss: small relative tolerance ----------------------
+        cl, bl = float(cur["loss_final"]), float(base["loss_final"])
+        if not (math.isfinite(cl) and math.isfinite(bl)):
+            violations.append(f"{name}: non-finite loss (cur={cl} base={bl})")
+        elif _rel_err(cl, bl) > loss_rtol:
+            violations.append(
+                f"{name}: final loss drifted {bl:.9g} -> {cl:.9g} "
+                f"(rel err {_rel_err(cl, bl):.2e} > rtol {loss_rtol:.0e})"
+            )
+    return violations
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail when the comm benchmark drifts from its baseline."
+    )
+    ap.add_argument("current", type=pathlib.Path)
+    ap.add_argument("baseline", type=pathlib.Path)
+    ap.add_argument(
+        "--loss-rtol",
+        type=float,
+        default=5e-3,
+        help="relative tolerance on final losses "
+        "(absorbs BLAS/jax build jitter; default 5e-3)",
+    )
+    args = ap.parse_args(argv)
+
+    current = json.loads(args.current.read_text())
+    baseline = json.loads(args.baseline.read_text())
+    violations = compare(current, baseline, args.loss_rtol)
+    if violations:
+        print(f"BENCHMARK REGRESSION GATE FAILED ({len(violations)} violation(s)):")
+        for v in violations:
+            print(f"  - {v}")
+        print(
+            "If the change is intentional, refresh the baseline: "
+            "cp results/comm.json results/comm_baseline.json"
+        )
+        return 1
+    n = len(baseline.get("variants", {}))
+    print(
+        f"benchmark gate OK: {n} variants match the baseline "
+        f"(bytes exact, loss rtol {args.loss_rtol:g})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,15 +1,32 @@
 """Shared setup for the paper-figure benchmarks (Fig 1-3, Table I)."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import ChannelModel
 from repro.core import make_optimizer, make_problem, newton_solve, run_rounds
 from repro.core.losses import logistic
-from repro.data.libsvm_like import PAPER_DATASETS, load
+from repro.data.libsvm_like import load
+
+
+def straggler_edge_channel(m: int) -> ChannelModel:
+    """The canonical heterogeneous straggler scenario the sync-vs-async
+    comparisons share (``--only async`` bench, ``examples/async_edge.py``,
+    ``tests/test_async.py``): log-spaced uplinks across two decades, 10x
+    faster downlinks, 30% stragglers at 10x slowdown — and NO dropout,
+    which keeps the full-quorum async anchor on the lock-step-equivalent
+    (bit-identical) path. Tune it here and every consumer moves together.
+    """
+    rates = np.logspace(np.log10(3e4), np.log10(3e6), m)
+    return ChannelModel(
+        uplink_bytes_per_s=rates,
+        downlink_bytes_per_s=10.0 * rates,
+        latency_s=0.05,
+        straggler_prob=0.30,
+        straggler_slowdown=10.0,
+    )
 
 
 def build_problem(dataset: str, *, seed: int = 0, n_cap: int | None = None,

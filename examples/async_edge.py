@@ -1,0 +1,156 @@
+"""Asynchronous FL on straggler-heavy edge links — sync vs async drivers.
+
+The synchronous driver waits for the slowest delivering client every
+round, so with 30% stragglers at 10x slowdown the round clock is owned
+by the unluckiest device. The async driver (``repro.comm.async_driver``)
+lets every client run its own download -> compute -> upload cycle against
+a persistent clock and commits a server step once a quorum of uploads
+has arrived, weighting stale contributions by 1/(1+tau).
+
+Semantics in one line: sync = one global round clock, everyone's payload
+lands in the step it was computed for; async = per-client clocks, a
+payload computed on model version v may land at version t > v and is
+staleness-weighted accordingly. With a full quorum (``async_quantile=1.0``,
+full participation, no dropout) the async driver is lock-step-equivalent
+and reproduces the synchronous trajectory bit-for-bit — which this demo
+checks before printing the comparison.
+
+  PYTHONPATH=src python examples/async_edge.py
+  PYTHONPATH=src python examples/async_edge.py --rounds 16 --buffer 8
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.paper_common import build_problem, straggler_edge_channel
+from repro.comm import CommConfig, summarize
+from repro.core import make_optimizer, run_rounds
+
+
+def loss_at(hist, t: float) -> float:
+    return float(np.interp(t, hist.sim_time_s, hist.loss))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="phishing")
+    ap.add_argument("--rounds", type=int, default=10, help="sync server rounds")
+    ap.add_argument(
+        "--buffer", type=int, default=None, help="async buffer K (default m//4)"
+    )
+    ap.add_argument("--n-cap", type=int, default=20000)
+    args = ap.parse_args()
+
+    spec, prob, w0, w_star = build_problem(args.dataset, n_cap=args.n_cap)
+    m = prob.m
+    chan = straggler_edge_channel(m)
+    buffer = args.buffer if args.buffer is not None else max(2, m // 4)
+
+    def fedavg():
+        return make_optimizer("fedavg", lr=2.0, local_steps=5)
+
+    # --- anchor: full-quorum async == sync, bit for bit -------------------
+    sync_a = run_rounds(
+        fedavg(), prob, w0, w_star, rounds=3, comm=CommConfig(channel=chan, seed=1)
+    )
+    async_a = run_rounds(
+        fedavg(),
+        prob,
+        w0,
+        w_star,
+        rounds=3,
+        comm=CommConfig(channel=chan, seed=1, async_mode=True),
+    )
+    anchored = bool(np.array_equal(sync_a.loss, async_a.loss))
+    print(f"full-quorum async reproduces sync bit-identically: {anchored}")
+    assert anchored
+
+    # --- the race: same channel, same seed, three drivers ------------------
+    runs = [
+        ("sync", args.rounds, CommConfig(channel=chan, seed=1)),
+        (
+            f"async buf K={buffer}",
+            4 * args.rounds,
+            CommConfig(
+                channel=chan,
+                seed=1,
+                async_mode=True,
+                buffer_size=buffer,
+                staleness="inverse",
+            ),
+        ),
+        (
+            "async q=0.5",
+            3 * args.rounds,
+            CommConfig(
+                channel=chan,
+                seed=1,
+                async_mode=True,
+                async_quantile=0.5,
+                staleness="inverse",
+            ),
+        ),
+    ]
+    print(
+        f"\n=== {spec.name}: M={prob.dim} m={m} | 30% stragglers x10, "
+        f"log-spaced uplinks ==="
+    )
+    print(
+        f"{'driver':>16} {'commits':>7} {'sim_s':>7} {'s/commit':>8} "
+        f"{'loss_final':>10} {'mean_tau':>8}"
+    )
+    out = {}
+    hists = {}
+    for name, r, comm in runs:
+        hist = run_rounds(fedavg(), prob, w0, w_star, rounds=r, comm=comm)
+        hists[name] = hist
+        tau = float(np.nanmean(hist.staleness)) if hist.staleness is not None else 0.0
+        print(
+            f"{name:>16} {r:>7d} {hist.sim_time_s[-1]:>7.2f} "
+            f"{hist.sim_time_s[-1] / r:>8.3f} {hist.loss[-1]:>10.6f} {tau:>8.2f}"
+        )
+        out[name] = {
+            "loss": hist.loss.tolist(),
+            "sim_time_s": hist.sim_time_s.tolist(),
+            "cumulative_bytes": hist.cumulative_bytes.tolist(),
+            "staleness": (
+                hist.staleness.tolist() if hist.staleness is not None else None
+            ),
+            "stats": summarize(hist.traces),
+        }
+
+    sync_h = hists["sync"]
+    print("\n--- loss at common simulated-time points ---")
+    for frac in (0.25, 0.5, 1.0):
+        t = frac * min(h.sim_time_s[-1] for h in hists.values())
+        row = "  ".join(f"{n}={loss_at(h, t):.6f}" for n, h in hists.items())
+        print(f"t={t:6.2f}s  {row}")
+    t_final = min(h.sim_time_s[-1] for h in hists.values())
+    best = min(hists, key=lambda n: loss_at(hists[n], t_final))
+    margin = loss_at(sync_h, t_final) - loss_at(hists[best], t_final)
+    if best == "sync":
+        print(f"\nat t={t_final:.2f}s sync still leads on this channel/seed")
+    else:
+        print(
+            f"\nat t={t_final:.2f}s the async drivers sit below sync by "
+            f"{margin:.2e} loss (best: {best})"
+        )
+
+    dest = pathlib.Path("results/examples")
+    dest.mkdir(parents=True, exist_ok=True)
+    (dest / "async_edge.json").write_text(json.dumps(out, indent=1))
+    print("wrote results/examples/async_edge.json")
+
+
+if __name__ == "__main__":
+    main()

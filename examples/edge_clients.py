@@ -148,7 +148,7 @@ def main() -> None:
     dest = pathlib.Path("results/examples")
     dest.mkdir(parents=True, exist_ok=True)
     (dest / "edge_clients.json").write_text(json.dumps(out, indent=1))
-    print(f"\nwrote results/examples/edge_clients.json")
+    print("\nwrote results/examples/edge_clients.json")
 
 
 if __name__ == "__main__":

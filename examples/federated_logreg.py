@@ -17,7 +17,6 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import make_optimizer, make_problem, newton_solve, run_rounds
 from repro.core.losses import logistic

@@ -9,9 +9,17 @@ participation schedulers reweight server aggregation. Lossy codecs can
 carry client-side EF21 error-feedback memory (``repro.comm.feedback``)
 so biased compression keeps the uncompressed fixed point.
 
+Rounds are driven either synchronously (lock-step, the server waits for
+the slowest delivering client) or asynchronously
+(``CommConfig(async_mode=True)`` — event-driven per-client clocks with
+quorum commits and staleness-weighted aggregation, see
+``repro.comm.async_driver``).
+
 Entry point: build a :class:`CommConfig` and pass it to
-``repro.core.run_rounds(..., comm=cfg)``. See ``examples/edge_clients.py``.
+``repro.core.run_rounds(..., comm=cfg)``. See ``examples/edge_clients.py``
+and ``examples/async_edge.py``.
 """
+from repro.comm.async_driver import AsyncSession, make_staleness
 from repro.comm.channel import ChannelDraw, ChannelModel
 from repro.comm.codecs import (
     CastCodec,
@@ -43,6 +51,7 @@ from repro.comm.scheduler import (
 )
 
 __all__ = [
+    "AsyncSession",
     "BandwidthAware",
     "CastCodec",
     "ChannelDraw",
@@ -66,6 +75,7 @@ __all__ = [
     "init_memory",
     "make_codec",
     "make_scheduler",
+    "make_staleness",
     "residual_norms",
     "summarize",
 ]

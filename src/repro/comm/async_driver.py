@@ -1,0 +1,384 @@
+"""Event-driven asynchronous federated round driver.
+
+The synchronous driver (``CommSession``) makes the server wait for the
+slowest delivering client every round, so a single straggler inflates
+``sim_time_s`` for everyone — exactly the device-heterogeneity problem
+FedNL (Safaryan et al., 2021) and FLECS (Agafonov et al., 2022) motivate
+second-order FL with. This module replaces the lock-step clock with an
+event simulation built on the per-client delivery times the channel
+model already produces (``ChannelModel.client_times``):
+
+  * every client runs its own download -> compute -> upload cycle on a
+    persistent clock, computing on the model *version it last received*;
+  * uploads arrive at the server when the client's simulated link
+    finishes; dropped uploads trigger a deterministic re-dispatch (the
+    client re-fetches the current model and retries);
+  * the server commits an aggregation step as soon as a quorum of
+    uploads has buffered — a FedBuff-style buffer of ``K = buffer_size``
+    arrivals, or ``ceil(async_quantile * m)`` when no buffer size is
+    set — instead of waiting for the full cohort;
+  * contributions based on version ``v`` at server version ``t`` carry
+    staleness ``tau = t - v`` and are weighted by a pluggable staleness
+    rule (``constant``, ``inverse`` = 1/(1+tau), ``poly:a`` =
+    (1+tau)^-a) on top of the existing participation weights.
+
+Aggregation semantics
+---------------------
+Buffered arrivals are grouped by base model version. Each group re-runs
+the optimizer's (jitted) round from the snapshot of its base version
+with the group's delivery mask — so partial cohorts perturb the
+optimization through the exact machinery the sync driver uses
+(``CommRound.weights`` / ``where_delivered``) — and contributes the
+model *delta* it would have produced. The server combines deltas:
+
+    w_{t+1} = w_t + sum_g c_g (w'_g - w_{v_g}),
+    c_g  =  staleness(tau_g) * P_g / sum_h P_h
+
+(P_g = group participation mass). Participation is renormalized over the
+commit — the same renormalization the sync driver applies to partial
+cohorts — while the staleness factor *damps* the applied step, so a
+fully-stale commit under ``inverse`` moves the model by 1/(1+tau) of its
+delta instead of being silently renormalized back to a full step.
+
+Auxiliary optimizer state (momentum, guards, duals) advances along the
+*freshest* group's round; stale groups contribute model deltas only.
+When a commit consists of a single group based on the current version
+(always the case in lock-step-equivalent configs), the combined state
+IS that round's output — no delta arithmetic — which is what makes the
+``async_quantile=1.0`` / full-participation path bit-identical to the
+synchronous driver: same key schedule, same jaxpr, same floats.
+
+Error-feedback memory (``repro.comm.feedback``) is threaded through
+every group round and gated by that group's delivery mask, so memory
+rows advance exactly when a client's payload is actually consumed by a
+server commit — delivery-keyed updates that now span server steps.
+
+Determinism: channel randomness for the cohort dispatched after commit
+``t`` comes from the same ``(seed, t)`` key schedule the sync driver
+uses; retries after a dropped upload fold the retry count in. A
+trajectory is exactly reproducible from ``CommConfig.seed``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import warnings
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import feedback
+from repro.comm.metrics import RoundTrace
+
+# a dropped upload is retried with fresh channel coins; after this many
+# consecutive drops the delivery is forced so the simulation cannot spin
+# forever under dropout_prob -> 1.0
+MAX_RETRIES = 8
+
+
+def make_staleness(spec: "str | Callable[[float], float]"):
+    """Resolve a staleness-weighting spec to a ``tau -> weight`` callable.
+
+    ``"constant"`` — every contribution weighs 1 regardless of lag;
+    ``"inverse"`` — 1/(1+tau), the FedAsync polynomial special case;
+    ``"poly:a"`` — (1+tau)^-a (``a`` defaults to 0.5).
+    A callable is passed through unchanged.
+    """
+    if callable(spec):
+        return spec
+    if spec == "constant":
+        return lambda tau: 1.0
+    if spec == "inverse":
+        return lambda tau: 1.0 / (1.0 + tau)
+    kind, _, arg = str(spec).partition(":")
+    if kind in ("poly", "polynomial"):
+        a = float(arg or 0.5)
+        return lambda tau: (1.0 + tau) ** (-a)
+    raise ValueError(
+        f"unknown staleness spec {spec!r}; want 'constant', 'inverse', "
+        f"'poly:<a>', or a callable")
+
+
+@dataclasses.dataclass
+class _Flight:
+    """One client upload cycle in the air."""
+
+    client: int
+    version: int  # model version the client computed on
+    straggler: bool
+    dropped: bool  # upload lost in transit: re-dispatch on landing
+    retry: int = 0
+
+
+class AsyncSession:
+    """Host-side event-driven driver state for one trajectory.
+
+    Owns the per-client clocks, the arrival event heap, the server
+    buffer, per-version state snapshots, the EF memory pytree, and the
+    per-commit ``RoundTrace`` records. The jitted round function is
+    injected per step so the session stays optimizer-agnostic — it has
+    the same ``(state, memory, key, mask, codec_key)`` signature the
+    synchronous driver jits.
+    """
+
+    def __init__(
+        self,
+        config,
+        m: int,
+        downlink_bytes: int,
+        client_weights: np.ndarray,
+        keys: jax.Array,  # (rounds, 2) per-version optimizer round keys
+        mask_dtype=jnp.float64,
+    ):
+        self.config = config
+        self.m = m
+        self.downlink_bytes = int(downlink_bytes)
+        self.client_weights = np.asarray(client_weights, dtype=np.float64)
+        self.keys = keys
+        self.plan: Dict[str, int] = {}
+        self.traces: List[RoundTrace] = []
+        self.ef_memory: Dict[str, jax.Array] = {}
+        self._mask_dtype = mask_dtype
+        self._root = jax.random.PRNGKey(config.seed)
+        self._staleness = make_staleness(config.staleness)
+        if config.buffer_size is not None:
+            self.quorum = min(m, int(config.buffer_size))
+        else:
+            self.quorum = max(1, min(m, int(math.ceil(
+                config.async_quantile * m))))
+        # lock-step-equivalent: full scheduler, no dropout, full quorum.
+        # Every commit then aggregates exactly the fresh full cohort, so
+        # the round runs with mask=None — the identical jaxpr (and key
+        # schedule) the sync driver uses, hence bit-identical.
+        self.lockstep = (config.scheduler.is_full
+                         and config.channel.dropout_prob == 0.0
+                         and self.quorum == m)
+
+        self.version = 0
+        self.server_clock = 0.0
+        self._snapshots: Dict[int, Any] = {}
+        self._heap: list = []  # (time, seq, _Flight)
+        self._seq = 0
+        self._buffer: List[tuple] = []  # (client, version, straggler)
+        self._idle: set = set()
+        self._quorum_capped = False
+        self._pending_down = np.zeros(m, dtype=np.float64)
+        self._pending_dropped = np.zeros(m, dtype=bool)
+
+    # -- key schedule (matches CommSession.begin_round exactly) -------------
+    def _round_keys(self, version: int):
+        k = jax.random.fold_in(self._root, version)
+        return jax.random.split(k, 3)  # k_sched, k_chan, k_codec
+
+    @property
+    def bytes_up_per_client(self) -> int:
+        return int(sum(self.plan.values()))
+
+    # -- trace-time discovery -----------------------------------------------
+    def prepare(self, trace_round) -> None:
+        """One abstract probe of the round (nothing executes): fills the
+        payload byte plan — the async clock needs encoded bytes *before*
+        the first round runs, unlike the sync driver which reads them
+        after — and discovers the EF memory shapes along the way."""
+        from repro.comm.config import probe_round
+
+        spec = probe_round(self.config, self.m, self._mask_dtype, self.plan,
+                           trace_round, full_cohort=self.lockstep)
+        self.ef_memory = feedback.init_memory(spec)
+
+    # -- event machinery ----------------------------------------------------
+    def start(self, state) -> None:
+        """Snapshot the initial model and put every client in the air."""
+        self._snapshots[0] = state
+        self._dispatch_cohort(range(self.m), now=0.0)
+
+    def _dispatch_cohort(self, clients, now: float) -> None:
+        """Send the current model to ``clients`` that the scheduler picks
+        this version; the rest idle until the next commit."""
+        clients = list(clients)
+        if not clients:
+            return
+        k_sched, k_chan, _ = self._round_keys(self.version)
+        scheduled = self.config.scheduler.participants(
+            k_sched, self.version, self.m, self.config.channel)
+        cohort = [j for j in clients if scheduled[j]]
+        if not cohort and not self._heap and not self._buffer:
+            cohort = clients  # nothing else in flight: avoid a stall
+        self._idle.update(j for j in clients if j not in cohort)
+        draw = self.config.channel.draw(k_chan, self.m)
+        times = self._flight_times(draw)
+        for j in cohort:
+            self._idle.discard(j)
+            self._launch(j, now, times[j], bool(draw.straggler[j]),
+                         bool(draw.dropout[j]), retry=0)
+
+    def _redispatch(self, j: int, now: float, retry: int) -> None:
+        """A dropped upload landed: the client re-fetches the current
+        model and retries with fresh (deterministic) channel coins."""
+        _, k_chan, _ = self._round_keys(self.version)
+        draw = self.config.channel.draw(
+            jax.random.fold_in(k_chan, retry), self.m)
+        dropped = bool(draw.dropout[j]) and retry < MAX_RETRIES
+        times = self._flight_times(draw)
+        self._launch(j, now, times[j], bool(draw.straggler[j]), dropped,
+                     retry=retry)
+
+    def _flight_times(self, draw) -> np.ndarray:
+        """Per-client cycle times for a full (m,) dispatch draw."""
+        bytes_up = np.full(self.m, float(self.bytes_up_per_client))
+        bytes_down = np.full(self.m, float(self.downlink_bytes))
+        return self.config.channel.client_times(draw, bytes_up, bytes_down)
+
+    def _launch(self, j: int, now: float, dt: float, straggler: bool,
+                dropped: bool, retry: int) -> None:
+        self._pending_down[j] += self.downlink_bytes
+        self._seq += 1
+        flight = _Flight(client=j, version=self.version,
+                         straggler=straggler, dropped=dropped, retry=retry)
+        heapq.heappush(self._heap, (now + dt, self._seq, flight))
+
+    def _pump(self) -> float:
+        """Advance the event clock until the commit quorum buffers;
+        returns the commit time (the quorum-th arrival's landing).
+
+        The quorum is capped at the number of uploads that can still
+        arrive (buffered + in flight): a partial-participation scheduler
+        may idle more clients than ``buffer_size`` expects, and waiting
+        for uploads nobody will send would deadlock the clock. The cap
+        is announced once per trajectory; the per-commit cohort is
+        always visible in ``RoundTrace.delivered``."""
+        t = self.server_clock
+        while True:
+            need = max(1, min(self.quorum, len(self._buffer) + len(self._heap)))
+            if need < self.quorum and not self._quorum_capped:
+                self._quorum_capped = True
+                warnings.warn(
+                    f"async commit quorum capped at {need} (< configured "
+                    f"{self.quorum}): the scheduler keeps fewer clients in "
+                    f"flight than the quorum asks for", stacklevel=2)
+            if len(self._buffer) >= need:
+                return t
+            if not self._heap:
+                # everything idled out (pathological scheduler draw):
+                # force-dispatch so the trajectory can make progress
+                self._dispatch_cohort(sorted(self._idle), now=t)
+                continue
+            t, _, flight = heapq.heappop(self._heap)
+            if flight.dropped:
+                self._pending_dropped[flight.client] = True
+                self._redispatch(flight.client, t, flight.retry + 1)
+            else:
+                self._buffer.append(
+                    (flight.client, flight.version, flight.straggler))
+
+    # -- one server commit --------------------------------------------------
+    def step(self, round_fn) -> Any:
+        """Run the event simulation up to the next server commit and
+        return the committed state. ``round_fn(state, memory, key, mask,
+        codec_key) -> (state, memory)`` is the jitted optimizer round."""
+        commit_time = self._pump()
+        committed, self._buffer = self._buffer, []
+
+        # group arrivals by the model version they computed on
+        groups: Dict[int, List[tuple]] = {}
+        for client, version, straggler in committed:
+            groups.setdefault(version, []).append((client, straggler))
+        order = sorted(groups, reverse=True)  # freshest first
+
+        outputs: Dict[int, Any] = {}
+        for v in order:
+            members = [c for c, _ in groups[v]]
+            if self.lockstep:
+                mask = None
+            else:
+                mvec = np.zeros(self.m)
+                mvec[members] = 1.0
+                mask = jnp.asarray(mvec, self._mask_dtype)
+            _, _, k_codec = self._round_keys(v)
+            outputs[v], self.ef_memory = round_fn(
+                self._snapshots[v], self.ef_memory, self.keys[v], mask,
+                k_codec)
+
+        fresh = order[0]
+        if len(order) == 1 and fresh == self.version:
+            # single fresh group: the round output IS the next state
+            # (no delta arithmetic — preserves sync bit-exactness; the
+            # staleness weight is 1 at tau=0 by convention)
+            state_new = outputs[fresh]
+        else:
+            # c_g = staleness(tau_g) * P_g / sum_h P_h: participation
+            # mass is renormalized over the commit (as the sync driver
+            # renormalizes partial cohorts) but staleness DAMPS the step
+            # rather than being renormalized away — an all-stale commit
+            # under "inverse" moves the model by 1/(1+tau) of its delta,
+            # and a weight of exactly 0 contributes exactly nothing
+            p_mass = {
+                v: float(self.client_weights[[c for c, _ in groups[v]]].sum())
+                for v in order
+            }
+            p_total = sum(p_mass.values())
+            w_cur = self._snapshots[self.version]["w"]
+            w_new = w_cur
+            for v in order:
+                c = (self._staleness(float(self.version - v))
+                     * p_mass[v] / p_total)
+                delta = outputs[v]["w"] - self._snapshots[v]["w"]
+                w_new = w_new + c * delta
+            # auxiliary state rides the freshest cohort's round when that
+            # cohort is current; otherwise the current state is kept and
+            # only the model moves (stale aux must not overwrite fresher)
+            base = (outputs[fresh] if fresh == self.version
+                    else self._snapshots[self.version])
+            state_new = dict(base)
+            state_new["w"] = w_new
+
+        self._record_trace(committed, commit_time)
+        self.version += 1
+        self.server_clock = commit_time
+        self._snapshots[self.version] = state_new
+        self._gc_snapshots()
+        self._dispatch_cohort(
+            sorted({c for c, _, _ in committed} | self._idle),
+            now=commit_time)
+        return state_new
+
+    def _record_trace(self, committed, commit_time: float) -> None:
+        mask = np.zeros(self.m, dtype=bool)
+        straggler = np.zeros(self.m, dtype=bool)
+        stale = np.full(self.m, np.nan)
+        for client, version, was_straggler in committed:
+            mask[client] = True
+            straggler[client] = was_straggler
+            stale[client] = float(self.version - version)
+        bytes_up = float(self.bytes_up_per_client) * mask.astype(np.float64)
+        # scheduled \ delivered = clients whose upload was lost in this
+        # commit window and who did not land a retry before the commit —
+        # keeps summarize()'s dropped_client_rounds honest in async mode
+        self.traces.append(RoundTrace(
+            round=self.version,
+            scheduled=mask | self._pending_dropped,
+            delivered=mask,
+            straggler=straggler,
+            bytes_up=bytes_up,
+            bytes_down=self._pending_down,
+            sim_time_s=commit_time - self.server_clock,
+            staleness=stale,
+            version=self.version + 1,
+        ))
+        self._pending_down = np.zeros(self.m, dtype=np.float64)
+        self._pending_dropped = np.zeros(self.m, dtype=bool)
+
+    def _gc_snapshots(self) -> None:
+        """Drop model snapshots no in-flight or buffered cycle references."""
+        alive = {self.version}
+        alive.update(f.version for _, _, f in self._heap if not f.dropped)
+        alive.update(v for _, v, _ in self._buffer)
+        for v in [v for v in self._snapshots if v not in alive]:
+            del self._snapshots[v]
+
+    def ef_residual_norms(self) -> Dict[str, float]:
+        """Per-payload Frobenius norm of the current EF residuals."""
+        return feedback.residual_norms(self.ef_memory)

@@ -3,8 +3,13 @@
 The channel is a *driver-side* (host, numpy) model: per round it draws
 which scheduled clients straggle (slowed by ``straggler_slowdown``) and
 which drop out entirely (their payload never reaches the server), then
-converts per-client byte counts into a simulated round wall-clock —
-the server waits for the slowest delivering client (synchronous FL).
+converts per-client byte counts into per-client delivery times
+(``client_times``). The synchronous driver reduces those to a single
+round wall-clock — the server waits for the slowest delivering client
+(``round_time``) — while the asynchronous driver
+(``repro.comm.async_driver``) keeps the full per-client vector and
+advances a persistent per-client clock from it, so fast clients lap
+slow ones instead of waiting.
 
 All draws are deterministic functions of a PRNG key, so a trajectory is
 exactly reproducible from ``(CommConfig.seed, round index)``.
@@ -65,20 +70,30 @@ class ChannelModel:
             jax.random.bernoulli(k_drop, self.dropout_prob, (m,)))
         return ChannelDraw(straggler=straggler, dropout=dropout)
 
-    def round_time(
+    def client_times(
         self,
         draw: ChannelDraw,
-        scheduled: np.ndarray,  # (m,) bool — chosen by the scheduler
-        delivered: np.ndarray,  # (m,) bool — scheduled & not dropped
-        bytes_up: np.ndarray,  # (m,) uplink bytes for delivering clients
-        bytes_down: np.ndarray,  # (m,) broadcast bytes for scheduled clients
-    ) -> float:
-        """Simulated wall-clock: slowest delivering client closes the round."""
-        m = scheduled.shape[0]
+        bytes_up: np.ndarray,  # (m,) uplink bytes per client
+        bytes_down: np.ndarray,  # (m,) broadcast bytes per client
+    ) -> np.ndarray:
+        """(m,) per-client delivery times: latency + downlink + uplink,
+        straggler-scaled. This is the quantity the async driver consumes
+        directly; the sync driver takes its max over delivering clients."""
+        m = draw.straggler.shape[0]
         up = self.uplink_rates(m)
         down = self.downlink_rates(m)
         t = self.latency_s + bytes_down / down + bytes_up / up
-        t = np.where(draw.straggler, t * self.straggler_slowdown, t)
+        return np.where(draw.straggler, t * self.straggler_slowdown, t)
+
+    def round_time(
+        self,
+        draw: ChannelDraw,
+        delivered: np.ndarray,  # (m,) bool — scheduled & not dropped
+        bytes_up: np.ndarray,  # (m,) uplink bytes for delivering clients
+        bytes_down: np.ndarray,  # (m,) broadcast bytes per client
+    ) -> float:
+        """Simulated wall-clock: slowest delivering client closes the round."""
+        t = self.client_times(draw, bytes_up, bytes_down)
         if not delivered.any():
             return float(self.latency_s)
         return float(np.max(t[delivered]))

@@ -69,6 +69,18 @@ class CommConfig:
     sketch bases). ``ef_variant`` picks the recursion: ``"ef21"``
     (compressed-estimate tracking, default) or ``"ef14"`` (classic
     residual compensation).
+
+    ``async_mode=True`` swaps the synchronous lock-step driver for the
+    event-driven async driver (``repro.comm.async_driver``): each client
+    computes on the model version it last received and the server
+    commits once a quorum of uploads has arrived — ``buffer_size`` (a
+    FedBuff-style K) when set, else ``ceil(async_quantile * m)``.
+    ``staleness`` weights stale contributions on top of participation
+    weights: ``"constant"``, ``"inverse"`` (1/(1+tau)), or
+    ``"poly:a"`` ((1+tau)^-a); see ``make_staleness``. With the full
+    scheduler, no dropout, and a full quorum (``async_quantile=1.0``,
+    ``buffer_size`` unset) the async driver is lock-step-equivalent and
+    reproduces the synchronous trajectory bit-identically.
     """
 
     codecs: "Dict[str, Any] | str | Codec" = "identity"
@@ -77,6 +89,10 @@ class CommConfig:
     seed: int = 0
     error_feedback: "bool | str | Dict[str, bool] | tuple | frozenset" = False
     ef_variant: str = "ef21"
+    async_mode: bool = False
+    buffer_size: "int | None" = None
+    async_quantile: float = 1.0
+    staleness: "str | Any" = "constant"
 
     def __post_init__(self):
         if not isinstance(self.codecs, dict):
@@ -85,6 +101,17 @@ class CommConfig:
             raise ValueError(
                 f"unknown ef_variant {self.ef_variant!r}; "
                 f"want one of {feedback.EF_VARIANTS}")
+        if self.buffer_size is not None and self.buffer_size < 1:
+            raise ValueError(
+                f"buffer_size must be >= 1, got {self.buffer_size}")
+        if not 0.0 < self.async_quantile <= 1.0:
+            raise ValueError(
+                f"async_quantile must be in (0, 1], got {self.async_quantile}")
+        # validate the staleness spec eagerly (bad specs fail at config
+        # time, not mid-trajectory); AsyncSession resolves it for real
+        from repro.comm.async_driver import make_staleness
+
+        make_staleness(self.staleness)
         self._codec_cache: Dict[str, Codec] = {}
         self.scheduler = make_scheduler(self.scheduler)
 
@@ -228,6 +255,32 @@ class _NullComm:
 NULL_COMM = _NullComm()
 
 
+def probe_round(config: CommConfig, m: int, mask_dtype, plan: Dict[str, int],
+                trace_round, *, full_cohort: bool):
+    """One ``jax.eval_shape`` pass of the optimizer's round with a
+    recording ``CommRound`` — nothing executes. Fills ``plan`` with the
+    exact encoded bytes of every payload occurrence and returns the
+    ``{payload_key: ShapeDtypeStruct}`` spec of EF-enabled lossy
+    payloads (empty when error feedback is off). Shared by both round
+    drivers: the sync session probes for EF shapes only, the async
+    session also needs the byte plan before the first round runs.
+
+    ``full_cohort`` selects the mask the real driver will pass
+    (``None`` on the statically-full / lock-step path, a traced (m,)
+    array otherwise) so the probe traces the same jaxpr structure.
+    """
+    spec: Dict[str, jax.ShapeDtypeStruct] = {}
+    mask = None if full_cohort else jnp.zeros((m,), mask_dtype)
+    ck = jax.random.PRNGKey(0)
+
+    def probe(mask, ck):
+        cr = CommRound(config, plan, mask, ck, ef_record=spec)
+        return trace_round(cr)
+
+    jax.eval_shape(probe, mask, ck)
+    return spec
+
+
 class CommSession:
     """Host-side per-trajectory comm state (cohorts, randomness, traces)."""
 
@@ -266,22 +319,13 @@ class CommSession:
 
         ``trace_round(comm_round)`` must invoke the optimizer's round
         exactly as the driver will; it is traced abstractly once (via
-        ``jax.eval_shape`` — nothing executes) with a recording
-        ``CommRound``, which notes the shape/dtype of every EF-enabled
-        lossy payload. Payload shapes are static, so one probe suffices.
-        With no EF-eligible payloads the memory stays an empty pytree and
-        the jitted round's jaxpr is unchanged.
+        ``probe_round`` — nothing executes), which notes the shape/dtype
+        of every EF-enabled lossy payload. Payload shapes are static, so
+        one probe suffices. With no EF-eligible payloads the memory
+        stays an empty pytree and the jitted round's jaxpr is unchanged.
         """
-        spec: Dict[str, jax.ShapeDtypeStruct] = {}
-        mask = (None if self._always_full
-                else jnp.zeros((self.m,), self._mask_dtype))
-        ck = jax.random.PRNGKey(0)
-
-        def probe(mask, ck):
-            cr = CommRound(self.config, {}, mask, ck, ef_record=spec)
-            return trace_round(cr)
-
-        jax.eval_shape(probe, mask, ck)
+        spec = probe_round(self.config, self.m, self._mask_dtype, {},
+                           trace_round, full_cohort=self._always_full)
         self.ef_memory = feedback.init_memory(spec)
         return self.ef_memory
 
@@ -320,7 +364,7 @@ class CommSession:
         bytes_up = per_client * delivered.astype(np.float64)
         bytes_down = float(self.downlink_bytes) * scheduled.astype(np.float64)
         sim = self.config.channel.round_time(
-            draw, scheduled, delivered, bytes_up, bytes_down)
+            draw, delivered, bytes_up, bytes_down)
         trace = RoundTrace(
             round=t,
             scheduled=scheduled,

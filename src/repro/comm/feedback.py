@@ -57,6 +57,12 @@ the jitted step alongside the optimizer state:
     frozen via the delivery mask (``CommRound.where_delivered``, the
     same gate that protects per-client optimizer state and zeroes their
     aggregation weight);
+  * under the asynchronous driver (``repro.comm.async_driver``) the same
+    gate keys memory updates to *actual delivery*: one server commit may
+    replay several version-grouped rounds, each advancing only the
+    memory rows of the clients whose uploads that commit consumed, so a
+    slow client's memory stays put across the server steps its payload
+    spends in flight;
   * payloads whose codec is lossless (identity, bare sympack) allocate
     no memory at all, so the identity-codec path keeps a bit-identical
     jaxpr: the memory pytree is empty and ``uplink`` is unchanged.

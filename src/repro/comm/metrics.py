@@ -15,7 +15,25 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class RoundTrace:
-    """One communication round, as observed on the (simulated) wire."""
+    """One communication round, as observed on the (simulated) wire.
+
+    Synchronous rounds leave the async-only fields at their defaults;
+    asynchronous server steps (``repro.comm.async_driver``) additionally
+    record which model ``version`` the step produced and the per-client
+    ``staleness`` — for each committed client, how many server steps its
+    base model lagged the server (NaN for clients not in the commit).
+    ``sim_time_s`` is then the *server-clock increment* between commits,
+    so ``cumulative_time`` yields the server-clock axis in both modes.
+
+    Async field semantics differ per client: ``scheduled`` is the
+    committed cohort plus clients whose upload was LOST in this commit
+    window (so ``scheduled & ~delivered`` still counts drops), while
+    ``bytes_down`` bills model broadcasts when they are *dispatched* —
+    a client still in flight can carry ``bytes_down > 0`` in a trace
+    whose ``scheduled`` row is False. Per-trace totals and cumulative
+    curves are conserved in both modes; only the per-client pairing of
+    ``bytes_down`` with ``scheduled`` is sync-specific.
+    """
 
     round: int
     scheduled: np.ndarray  # (m,) bool — asked to participate
@@ -23,11 +41,21 @@ class RoundTrace:
     straggler: np.ndarray  # (m,) bool — delivered late (slowdown applied)
     bytes_up: np.ndarray  # (m,) encoded uplink bytes (0 if not delivered)
     bytes_down: np.ndarray  # (m,) broadcast bytes (0 if not scheduled)
-    sim_time_s: float  # synchronous round wall-clock
+    sim_time_s: float  # round wall-clock (sync) / server-clock delta (async)
+    staleness: "np.ndarray | None" = None  # (m,) server steps of lag, NaN = absent
+    version: int = -1  # model version this commit produced (-1 for sync)
 
     @property
     def total_bytes(self) -> int:
         return int(self.bytes_up.sum() + self.bytes_down.sum())
+
+    @property
+    def mean_staleness(self) -> float:
+        """Mean staleness over committed clients (0.0 for sync rounds)."""
+        if self.staleness is None:
+            return 0.0
+        hit = ~np.isnan(self.staleness)
+        return float(self.staleness[hit].mean()) if hit.any() else 0.0
 
 
 def summarize(traces: "list[RoundTrace]") -> dict:
@@ -35,7 +63,7 @@ def summarize(traces: "list[RoundTrace]") -> dict:
     if not traces:
         return {"rounds": 0, "total_bytes_up": 0, "total_bytes_down": 0,
                 "sim_time_s": 0.0, "mean_participation": 0.0,
-                "dropped_client_rounds": 0}
+                "dropped_client_rounds": 0, "mean_staleness": 0.0}
     up = sum(int(t.bytes_up.sum()) for t in traces)
     down = sum(int(t.bytes_down.sum()) for t in traces)
     part = float(np.mean([t.delivered.mean() for t in traces]))
@@ -47,6 +75,7 @@ def summarize(traces: "list[RoundTrace]") -> dict:
         "sim_time_s": float(sum(t.sim_time_s for t in traces)),
         "mean_participation": part,
         "dropped_client_rounds": dropped,
+        "mean_staleness": float(np.mean([t.mean_staleness for t in traces])),
     }
 
 

@@ -23,6 +23,13 @@ the legacy float-count formulas. With ``CommConfig(error_feedback=...)``
 the driver additionally threads the EF21 residual-memory pytree
 (``repro.comm.feedback``) through the jitted round next to the
 optimizer state.
+
+With ``CommConfig(async_mode=True)`` the lock-step round loop is
+replaced by the event-driven async driver (``repro.comm.async_driver``):
+one ``History`` entry per *server commit*, ``sim_time_s`` becomes the
+server-clock axis, and ``History.staleness`` records the mean model-lag
+of each commit's cohort. The jitted round function is identical in both
+modes — only the host-side clock differs.
 """
 from __future__ import annotations
 
@@ -34,7 +41,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import CommConfig, CommRound, CommSession, cumulative_bytes, cumulative_time
+from repro.comm import (
+    AsyncSession,
+    CommConfig,
+    CommRound,
+    CommSession,
+    cumulative_bytes,
+    cumulative_time,
+)
 from repro.core.federated import FederatedProblem
 
 OptState = Dict[str, Any]
@@ -79,6 +93,9 @@ class History:
     cumulative_bytes: Optional[np.ndarray] = None  # (T+1,) up+down, all clients
     sim_time_s: Optional[np.ndarray] = None  # (T+1,) cumulative simulated s
     traces: Optional[list] = None  # per-round RoundTrace records (comm runs)
+    # async runs: (T,) mean staleness (server steps of model lag) of each
+    # commit's cohort; None for sync / no-comm runs
+    staleness: Optional[np.ndarray] = None
     clients: int = 1  # m — scales the per-client float formulas to totals
     itemsize: int = 8  # bytes per float of the problem dtype
     # final error-feedback memory norms per payload (comm runs with EF;
@@ -116,16 +133,31 @@ def run_rounds(
     grad_fn = jax.jit(problem.global_grad)
 
     itemsize = jnp.dtype(problem.X.dtype).itemsize
+    loss_star = float(loss_fn(w_star))
+    state = opt.init(problem, w0)
+    keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
+
     session = None
     if comm is None:
         round_fn = jax.jit(lambda s, k: opt.round(problem, s, k))
     else:
-        session = CommSession(
-            comm,
-            m=problem.m,
-            downlink_bytes=opt.downlink_floats(problem) * itemsize,
-            mask_dtype=problem.X.dtype,
-        )
+        downlink_bytes = opt.downlink_floats(problem) * itemsize
+        if comm.async_mode:
+            session = AsyncSession(
+                comm,
+                m=problem.m,
+                downlink_bytes=downlink_bytes,
+                client_weights=np.asarray(problem.client_weights),
+                keys=keys,
+                mask_dtype=problem.X.dtype,
+            )
+        else:
+            session = CommSession(
+                comm,
+                m=problem.m,
+                downlink_bytes=downlink_bytes,
+                mask_dtype=problem.X.dtype,
+            )
 
         # EF21 memory rides through the jitted round as a pytree next to
         # the optimizer state. Without error feedback (or with only
@@ -138,16 +170,19 @@ def run_rounds(
 
         round_fn = jax.jit(_round)
 
-    loss_star = float(loss_fn(w_star))
-    state = opt.init(problem, w0)
-    keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
-
     ef_memory = {}
-    if session is not None and comm.has_error_feedback:
+    probe_key = jax.random.PRNGKey(seed)
+    if isinstance(session, AsyncSession):
+        # the async clock needs the encoded byte plan BEFORE the first
+        # round executes (dispatch times depend on payload bytes), so
+        # one abstract probe fills it — and the EF shapes along the way
+        session.prepare(lambda cr: opt.round(problem, state, probe_key,
+                                             comm=cr))
+        session.start(state)
+    elif session is not None and comm.has_error_feedback:
         # one abstract probe of the round discovers every EF payload's
         # (m, ...) shape; nothing executes here (any key works — shapes
         # don't depend on it, and keys may be empty when rounds=0)
-        probe_key = jax.random.PRNGKey(seed)
         ef_memory = session.init_error_feedback(
             lambda cr: opt.round(problem, state, probe_key, comm=cr))
 
@@ -157,6 +192,8 @@ def run_rounds(
     for t in range(rounds):
         if session is None:
             state = round_fn(state, keys[t])
+        elif isinstance(session, AsyncSession):
+            state = session.step(round_fn)
         else:
             mask, ck = session.begin_round(t)
             state, ef_memory = round_fn(state, ef_memory, keys[t], mask, ck)
@@ -166,6 +203,7 @@ def run_rounds(
         gnorms.append(float(jnp.linalg.norm(grad_fn(state["w"]))))
     wall = time.perf_counter() - t0
 
+    staleness = None
     if session is None:
         per_round = (opt.uplink_floats(problem)
                      + opt.downlink_floats(problem)) * itemsize * problem.m
@@ -176,6 +214,8 @@ def run_rounds(
         cum_bytes = cumulative_bytes(session.traces)
         sim_time = cumulative_time(session.traces)
         traces = session.traces
+        if isinstance(session, AsyncSession):
+            staleness = np.array([tr.mean_staleness for tr in traces])
 
     losses = np.asarray(losses)
     return History(
@@ -190,6 +230,7 @@ def run_rounds(
         cumulative_bytes=cum_bytes,
         sim_time_s=sim_time,
         traces=traces,
+        staleness=staleness,
         clients=problem.m,
         itemsize=itemsize,
         ef_residuals=session.ef_residual_norms() if session else None,

@@ -14,7 +14,6 @@ same m clients, same sketch seed — exactly, to float tolerance.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core.losses import Objective
-from repro.core.sketch import Sketch, make_sketch
+from repro.core.sketch import make_sketch
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,7 +15,6 @@ the max size; padded rows carry zero weight in the local loss).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 
 from repro.comm import NULL_COMM
 from repro.core.base import FederatedOptimizer, OptState
-from repro.core.federated import FederatedProblem
 
 
 class FedNewton(FederatedOptimizer):

@@ -18,7 +18,6 @@ functions, so they can live inside jitted/vmapped federated rounds.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Literal
 
 import jax

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 
 from repro.comm import NULL_COMM
 from repro.core.base import FederatedOptimizer, OptState
-from repro.core.federated import FederatedProblem
 from repro.core.sketch import effective_dimension, make_sketch
 
 

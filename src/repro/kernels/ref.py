@@ -7,8 +7,6 @@ Each function here is the ground-truth implementation used by
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -44,7 +44,8 @@ def _sds(tree):
 
 
 def _count_params(shapes_tree) -> int:
-    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes_tree)))
+    return int(sum(int(np.prod(leaf.shape))
+                   for leaf in jax.tree.leaves(shapes_tree)))
 
 
 def _active_params(cfg, params_shape) -> int:
@@ -91,7 +92,6 @@ def _serving_param_shardings(mesh, params_shape, param_sh, n_params):
     vocab table additionally drops its d_model sharding always — the
     unembed of a single token otherwise all-gathers the whole table.
     """
-    import dataclasses as _dc
 
     # Measured (§Perf): stripping FSDP from *all* weights at decode trades
     # per-step all-gathers for 16x more per-device HBM weight reads — a net
@@ -159,7 +159,8 @@ def build(arch: str, shape_name: str, mesh: Mesh, *,
         zero_pod = _os.environ.get("REPRO_ZERO_POD", "0") == "1"
         batch = _batch_struct(cfg, b, t, train=True)
         batch_sh = jax.tree_util.tree_map_with_path(
-            lambda p, l: NamedSharding(mesh, rules.batch_spec(mesh, p, l)), batch
+            lambda p, leaf: NamedSharding(
+                mesh, rules.batch_spec(mesh, p, leaf)), batch
         )
         opt_shape = jax.eval_shape(
             lambda p: adamw_init(p, state_dtype=opt_state_dtype), params_shape
@@ -186,7 +187,8 @@ def build(arch: str, shape_name: str, mesh: Mesh, *,
                 return P(*spec)
 
             moments_sh = jax.tree_util.tree_map_with_path(
-                lambda p, l: NamedSharding(mesh, pod_spec(p, l)), params_shape
+                lambda p, leaf: NamedSharding(mesh, pod_spec(p, leaf)),
+                params_shape
             )
         opt_sh = {
             "m": moments_sh,
@@ -210,11 +212,11 @@ def build(arch: str, shape_name: str, mesh: Mesh, *,
                 mbs = jax.tree.map(split, batch)
 
                 def micro_step(acc, mb):
-                    (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    (lv, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
                         params, mb)
                     acc = jax.tree.map(
                         lambda a, gg: a + gg.astype(a.dtype), acc, g)
-                    return acc, (l, m["ce"], m["aux"])
+                    return acc, (lv, m["ce"], m["aux"])
 
                 acc0 = jax.tree.map(jnp.zeros_like, params)
                 grads, (ls, ces, auxs) = jax.lax.scan(micro_step, acc0, mbs)
@@ -247,7 +249,8 @@ def build(arch: str, shape_name: str, mesh: Mesh, *,
         b, t = shp.global_batch, shp.seq_len
         batch = _batch_struct(cfg, b, t, train=False)
         batch_sh = jax.tree_util.tree_map_with_path(
-            lambda p, l: NamedSharding(mesh, rules.batch_spec(mesh, p, l)), batch
+            lambda p, leaf: NamedSharding(
+                mesh, rules.batch_spec(mesh, p, leaf)), batch
         )
 
         def prefill(params, batch):

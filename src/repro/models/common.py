@@ -8,7 +8,7 @@ its substrate end to end.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -256,10 +256,10 @@ def chunked_cross_entropy(features, emb_table, labels, chunk, mask=None):
     msk = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
 
     def body(carry, xs):
-        f, l, mk = xs
+        f, lab, mk = xs
         logits = (f @ emb_table.T.astype(f.dtype)).astype(jnp.float32)
         logz = jax.nn.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
         nll = (logz - gold) * mk
         return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mk)), None
 

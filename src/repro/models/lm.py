@@ -17,7 +17,6 @@ Entry points (all pure):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -30,7 +29,6 @@ from repro.models import ssd as ssd_mod
 from repro.models.common import (
     ModelConfig,
     chunked_cross_entropy,
-    cross_entropy,
     lm_cross_entropy,
     dense_init,
     embed,
@@ -39,7 +37,6 @@ from repro.models.common import (
     mlp_init,
     rmsnorm,
     rmsnorm_init,
-    unembed,
 )
 from repro.sharding.ctx import BATCH, MODEL, shard
 
@@ -454,9 +451,9 @@ class LM:
                 if collect_cache:
                     k, v = attn_cache_from(pg["attn"], xin, theta_g)
                     gk, gv, gpos = pad_cache_kv(k, v)
-                    lk = jnp.stack([l[0] for l in loc_ys])
-                    lv = jnp.stack([l[1] for l in loc_ys])
-                    lpos = jnp.stack([l[2] for l in loc_ys])
+                    lk = jnp.stack([y[0] for y in loc_ys])
+                    lv = jnp.stack([y[1] for y in loc_ys])
+                    lpos = jnp.stack([y[2] for y in loc_ys])
                     ys = (lk, lv, lpos, gk, gv, gpos)
                 return xc, ys
 

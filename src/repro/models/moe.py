@@ -19,7 +19,6 @@ one shard so smoke tests exercise the same code.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

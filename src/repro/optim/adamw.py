@@ -8,7 +8,9 @@ import jax.numpy as jnp
 
 
 def adamw_init(params, *, state_dtype=jnp.float32):
-    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, state_dtype)
+
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -17,8 +17,6 @@ zoo — the single place where layout policy lives.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

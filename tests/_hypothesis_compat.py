@@ -40,3 +40,7 @@ except ModuleNotFoundError:
             return _skip
 
         return deco
+
+# the whole point of this module is re-export (with graceful fallback):
+# declare it so linters don't flag the pass-through imports as unused
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

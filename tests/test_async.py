@@ -1,0 +1,262 @@
+"""Asynchronous round driver tests (`repro.comm.async_driver`).
+
+Covers the PR's contract:
+  * lock-step equivalence — async with a full quorum, full participation
+    and no dropout reproduces the synchronous `History` bit-identically
+    (losses and cumulative bytes), even with stragglers drawn;
+  * event-driven progress — a FedBuff-style buffer commits without
+    waiting for stragglers, so the server clock runs ahead of sync and
+    loss-vs-sim-time dominates under heterogeneous links;
+  * staleness — weights parse/apply, traces record per-client lag, and
+    `History.staleness` exposes the per-commit mean;
+  * composition — error feedback, dropout-with-retry, quantile quorums
+    and partial-participation schedulers all stay finite and converge.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.paper_common import straggler_edge_channel
+from repro.comm import ChannelModel, CommConfig, make_staleness, summarize
+from repro.core import make_optimizer, make_problem, newton_solve, run_rounds
+from repro.core.losses import logistic
+from repro.data import make_classification
+
+
+@pytest.fixture(scope="module")
+def het_problem():
+    """12 clients on the shared heterogeneous straggler channel (two
+    decades of uplink spread, 30% stragglers, no dropout)."""
+    X, y = make_classification(jax.random.PRNGKey(2), 900, 24)
+    prob = make_problem(X, y, m=12, lam=1e-3, objective=logistic)
+    w0 = jnp.zeros(prob.dim, jnp.float64)
+    w_star = newton_solve(prob, w0, iters=30)
+    return prob, w0, w_star, straggler_edge_channel(prob.m)
+
+
+def _fedavg():
+    return make_optimizer("fedavg", lr=2.0, local_steps=5)
+
+
+# ---------------------------------------------------------------------------
+# lock-step equivalence (the PR's backward-compatibility anchor)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "name,kw",
+    [("flens", dict(k=8)), ("flens_plus", dict(k=8)), ("fedavg", {}),
+     ("fednl", {})],
+)
+def test_async_full_quorum_bit_identical_to_sync(het_problem, name, kw):
+    """async_quantile=1.0 + full participation + constant staleness must
+    reproduce the synchronous trajectory bit-for-bit — same key
+    schedule, same jaxpr — including under straggler draws."""
+    prob, w0, w_star, chan = het_problem
+    sync = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=4,
+                      comm=CommConfig(channel=chan, seed=1))
+    asy = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=4,
+                     comm=CommConfig(channel=chan, seed=1, async_mode=True,
+                                     async_quantile=1.0,
+                                     staleness="constant"))
+    np.testing.assert_array_equal(sync.loss, asy.loss)
+    np.testing.assert_array_equal(sync.grad_norm, asy.grad_norm)
+    np.testing.assert_array_equal(sync.cumulative_bytes, asy.cumulative_bytes)
+    # the server clock telescopes the same per-round maxima the sync
+    # driver records (float association differs, hence allclose)
+    np.testing.assert_allclose(sync.sim_time_s, asy.sim_time_s, rtol=1e-12)
+    # full fresh cohort every commit: zero staleness throughout
+    assert asy.staleness is not None
+    np.testing.assert_array_equal(asy.staleness, np.zeros(4))
+
+
+def test_async_lossy_lockstep_matches_sync_bytes(het_problem):
+    """Codecs price identically in both drivers (the plan is discovered
+    by an abstract probe in async, by the first trace in sync)."""
+    prob, w0, w_star, chan = het_problem
+    cfg = dict(codecs={"h_sk": "sympack+qint8", "sg": "qint8"},
+               channel=chan, seed=3)
+    sync = run_rounds(make_optimizer("flens", k=8), prob, w0, w_star,
+                      rounds=3, comm=CommConfig(**cfg))
+    asy = run_rounds(make_optimizer("flens", k=8), prob, w0, w_star,
+                     rounds=3, comm=CommConfig(async_mode=True, **cfg))
+    np.testing.assert_array_equal(sync.loss, asy.loss)
+    np.testing.assert_array_equal(sync.cumulative_bytes, asy.cumulative_bytes)
+
+
+# ---------------------------------------------------------------------------
+# event-driven progress under stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_async_buffer_outruns_sync_on_sim_time(het_problem):
+    """A K=m/3 buffer commits without waiting for stragglers: at any
+    common sim-time point the async run has taken more server steps and
+    sits at a lower loss than the synchronous run."""
+    prob, w0, w_star, chan = het_problem
+    sync = run_rounds(_fedavg(), prob, w0, w_star, rounds=10,
+                      comm=CommConfig(channel=chan, seed=1))
+    asy = run_rounds(_fedavg(), prob, w0, w_star, rounds=40,
+                     comm=CommConfig(channel=chan, seed=1, async_mode=True,
+                                     buffer_size=prob.m // 3))
+    # async commits are much cheaper in simulated seconds
+    assert asy.sim_time_s[-1] / 40 < sync.sim_time_s[-1] / 10
+    # loss-vs-sim-time dominance at the latest common time point
+    t_common = min(sync.sim_time_s[-1], asy.sim_time_s[-1])
+    loss_sync = float(np.interp(t_common, sync.sim_time_s, sync.loss))
+    loss_asy = float(np.interp(t_common, asy.sim_time_s, asy.loss))
+    assert loss_asy < loss_sync
+    # buffered commits genuinely reuse stale model versions
+    assert float(np.nanmean(asy.staleness)) > 0.0
+    # each commit aggregates exactly the buffer quorum
+    for tr in asy.traces:
+        assert tr.delivered.sum() == prob.m // 3
+
+
+def test_async_quantile_quorum_size(het_problem):
+    prob, w0, w_star, chan = het_problem
+    asy = run_rounds(_fedavg(), prob, w0, w_star, rounds=6,
+                     comm=CommConfig(channel=chan, seed=2, async_mode=True,
+                                     async_quantile=0.5))
+    for tr in asy.traces:
+        assert tr.delivered.sum() == prob.m // 2
+    stats = summarize(asy.traces)
+    assert stats["mean_participation"] == pytest.approx(0.5)
+    assert stats["mean_staleness"] >= 0.0
+
+
+def test_async_traces_record_staleness_and_versions(het_problem):
+    prob, w0, w_star, chan = het_problem
+    asy = run_rounds(_fedavg(), prob, w0, w_star, rounds=8,
+                     comm=CommConfig(channel=chan, seed=1, async_mode=True,
+                                     buffer_size=3, staleness="inverse"))
+    assert asy.staleness is not None and asy.staleness.shape == (8,)
+    for t, tr in enumerate(asy.traces):
+        assert tr.version == t + 1
+        committed = ~np.isnan(tr.staleness)
+        np.testing.assert_array_equal(committed, tr.delivered)
+        assert (tr.staleness[committed] >= 0).all()
+        # a client can lag at most the number of commits so far
+        assert (tr.staleness[committed] <= t).all()
+    assert float(np.nanmean(asy.staleness)) > 0.0
+
+
+def test_async_dropout_retries_and_converges(het_problem):
+    """Dropped uploads re-dispatch (the client refetches the current
+    model) instead of silencing the client forever."""
+    prob, w0, w_star, _ = het_problem
+    chan = ChannelModel(straggler_prob=0.2, dropout_prob=0.3)
+    asy = run_rounds(_fedavg(), prob, w0, w_star, rounds=25,
+                     comm=CommConfig(channel=chan, seed=5, async_mode=True,
+                                     buffer_size=4, staleness="inverse"))
+    assert np.isfinite(asy.loss).all()
+    assert asy.gap[-1] < asy.gap[0] * 0.5
+    # every client keeps contributing despite dropout
+    contributed = np.zeros(prob.m, dtype=bool)
+    for tr in asy.traces:
+        contributed |= tr.delivered
+    assert contributed.all()
+    # retried downlinks are billed: more broadcast bytes than commits
+    # strictly need
+    down = sum(float(tr.bytes_down.sum()) for tr in asy.traces)
+    assert down > 0
+    # lost uploads are visible in the traces (scheduled \ delivered),
+    # not silently absorbed by the retry machinery
+    assert summarize(asy.traces)["dropped_client_rounds"] > 0
+
+
+def test_async_ef_composes(het_problem):
+    """EF memory advances only on actual delivery, which now spans
+    server steps; the run stays finite and beats EF-off."""
+    prob, w0, w_star, chan = het_problem
+    base = dict(codecs="topk0.1", channel=chan, seed=1, async_mode=True,
+                buffer_size=4)
+    off = run_rounds(_fedavg(), prob, w0, w_star, rounds=25,
+                     comm=CommConfig(**base))
+    on = run_rounds(_fedavg(), prob, w0, w_star, rounds=25,
+                    comm=CommConfig(error_feedback=True, **base))
+    assert np.isfinite(on.loss).all()
+    assert on.gap[-1] < off.gap[-1]
+    assert set(on.ef_residuals) == {"w_local"}
+    np.testing.assert_array_equal(on.cumulative_bytes, off.cumulative_bytes)
+
+
+def test_async_partial_scheduler_still_progresses(het_problem):
+    prob, w0, w_star, chan = het_problem
+    asy = run_rounds(_fedavg(), prob, w0, w_star, rounds=12,
+                     comm=CommConfig(channel=chan, seed=4, async_mode=True,
+                                     scheduler="uniform:0.5", buffer_size=3))
+    assert np.isfinite(asy.loss).all()
+    assert asy.gap[-1] < asy.gap[0]
+
+
+def test_async_zero_rounds(het_problem):
+    prob, w0, w_star, chan = het_problem
+    hist = run_rounds(_fedavg(), prob, w0, w_star, rounds=0,
+                      comm=CommConfig(channel=chan, async_mode=True,
+                                      buffer_size=2))
+    assert len(hist.loss) == 1 and np.isfinite(hist.loss).all()
+    assert hist.staleness is not None and hist.staleness.shape == (0,)
+
+
+def test_async_trajectory_reproducible(het_problem):
+    prob, w0, w_star, chan = het_problem
+    cfg = dict(channel=chan, seed=9, async_mode=True, buffer_size=4,
+               staleness="poly:1")
+    a = run_rounds(_fedavg(), prob, w0, w_star, rounds=10,
+                   comm=CommConfig(**cfg))
+    b = run_rounds(_fedavg(), prob, w0, w_star, rounds=10,
+                   comm=CommConfig(**cfg))
+    np.testing.assert_array_equal(a.loss, b.loss)
+    np.testing.assert_array_equal(a.sim_time_s, b.sim_time_s)
+    for ta, tb in zip(a.traces, b.traces):
+        np.testing.assert_array_equal(ta.delivered, tb.delivered)
+        np.testing.assert_array_equal(ta.staleness, tb.staleness)
+
+
+# ---------------------------------------------------------------------------
+# staleness weighting + config validation
+# ---------------------------------------------------------------------------
+
+
+def test_async_drop_stale_callable(het_problem):
+    """A staleness callable that zeroes stale contributions is legal: a
+    commit whose whole buffer is stale advances the clock but leaves the
+    model in place instead of dividing by zero."""
+    prob, w0, w_star, chan = het_problem
+    asy = run_rounds(_fedavg(), prob, w0, w_star, rounds=15,
+                     comm=CommConfig(channel=chan, seed=1, async_mode=True,
+                                     buffer_size=3,
+                                     staleness=lambda tau:
+                                         0.0 if tau > 0 else 1.0))
+    assert np.isfinite(asy.loss).all()
+    assert asy.gap[-1] < asy.gap[0]
+
+
+def test_make_staleness_specs():
+    assert make_staleness("constant")(7.0) == 1.0
+    assert make_staleness("inverse")(3.0) == pytest.approx(0.25)
+    assert make_staleness("poly:1")(3.0) == pytest.approx(0.25)
+    assert make_staleness("poly:2")(1.0) == pytest.approx(0.25)
+    assert make_staleness("poly")(0.0) == 1.0  # default exponent
+    fn = make_staleness(lambda tau: 42.0)
+    assert fn(1.0) == 42.0
+    with pytest.raises(ValueError):
+        make_staleness("bogus")
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError):
+        CommConfig(async_mode=True, buffer_size=0)
+    with pytest.raises(ValueError):
+        CommConfig(async_mode=True, async_quantile=0.0)
+    with pytest.raises(ValueError):
+        CommConfig(async_mode=True, async_quantile=1.5)
+    with pytest.raises(ValueError):
+        CommConfig(async_mode=True, staleness="exponential!")
+    # a buffer larger than m clamps to m (lock-step-equivalent)
+    cfg = CommConfig(async_mode=True, buffer_size=10**6)
+    assert cfg.buffer_size == 10**6  # config keeps the request; the
+    # session clamps (m is only known there)

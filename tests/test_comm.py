@@ -206,6 +206,78 @@ def test_straggler_slows_round_and_dropout_zeroes_bytes():
     assert (tr.bytes_up[tr.delivered] == 10).all()
 
 
+def test_channel_per_client_rates_wrong_shape_raises():
+    """Heterogeneous rate arrays must be scalars or exactly (m,)."""
+    chan = ChannelModel(uplink_bytes_per_s=np.ones(5))
+    with pytest.raises(ValueError, match=r"shape \(5,\), want \(8,\)"):
+        chan.uplink_rates(8)
+    chan = ChannelModel(downlink_bytes_per_s=np.ones((4, 2)))
+    with pytest.raises(ValueError):
+        chan.downlink_rates(8)
+    # scalars and exact (m,) arrays broadcast fine
+    assert ChannelModel(uplink_bytes_per_s=7.0).uplink_rates(3).shape == (3,)
+    np.testing.assert_array_equal(
+        ChannelModel(uplink_bytes_per_s=np.arange(1.0, 4.0)).uplink_rates(3),
+        [1.0, 2.0, 3.0])
+
+
+def test_channel_draw_deterministic_from_seed_and_round():
+    """Straggler/dropout coins are a pure function of (seed, round): the
+    same key reproduces the draw, different rounds decorrelate it."""
+    chan = ChannelModel(straggler_prob=0.5, dropout_prob=0.5)
+    root = jax.random.PRNGKey(11)
+    draws = {}
+    for t in (0, 1, 2):
+        key = jax.random.fold_in(root, t)
+        a = chan.draw(key, 64)
+        b = chan.draw(key, 64)
+        np.testing.assert_array_equal(a.straggler, b.straggler)
+        np.testing.assert_array_equal(a.dropout, b.dropout)
+        draws[t] = a
+    assert not np.array_equal(draws[0].straggler, draws[1].straggler)
+    assert not np.array_equal(draws[1].dropout, draws[2].dropout)
+
+
+def test_channel_all_clients_dropped_round():
+    """dropout_prob=1.0: the session re-polls one deterministic client so
+    aggregation weights stay well-defined, and the round's wall-clock is
+    that client's delivery time."""
+    m = 6
+    chan = ChannelModel(dropout_prob=1.0, latency_s=0.25,
+                        uplink_bytes_per_s=1e3)
+    sess = CommSession(CommConfig(channel=chan), m=m, downlink_bytes=0)
+    mask, _ = sess.begin_round(0)
+    assert float(np.asarray(mask).sum()) == 1.0  # exactly one re-polled
+    assert float(np.asarray(mask)[0]) == 1.0  # lowest-index scheduled
+    sess.plan["x"] = 1000
+    tr = sess.end_round()
+    assert tr.delivered.sum() == 1 and tr.delivered[0]
+    assert (tr.bytes_up[1:] == 0).all()
+    assert tr.sim_time_s > 0.0
+    # round_time's no-delivery fallback: latency only
+    draw = chan.draw(jax.random.PRNGKey(0), m)
+    none_delivered = np.zeros(m, dtype=bool)
+    t = chan.round_time(draw, none_delivered, np.zeros(m), np.zeros(m))
+    assert t == pytest.approx(0.25)
+
+
+def test_channel_client_times_match_round_time():
+    """round_time is exactly the max of client_times over deliverers."""
+    m = 10
+    rates = np.logspace(3, 6, m)
+    chan = ChannelModel(uplink_bytes_per_s=rates, latency_s=0.1,
+                        straggler_prob=0.5, straggler_slowdown=4.0)
+    draw = chan.draw(jax.random.PRNGKey(3), m)
+    bytes_up = np.full(m, 5000.0)
+    bytes_down = np.full(m, 800.0)
+    times = chan.client_times(draw, bytes_up, bytes_down)
+    assert times.shape == (m,)
+    delivered = np.ones(m, dtype=bool)
+    delivered[::3] = False
+    assert chan.round_time(draw, delivered, bytes_up,
+                           bytes_down) == times[delivered].max()
+
+
 # ---------------------------------------------------------------------------
 # end-to-end through the round driver
 # ---------------------------------------------------------------------------

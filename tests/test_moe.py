@@ -7,7 +7,6 @@ from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.models import moe as moe_mod
-from repro.models.common import ModelConfig
 
 
 def _cfg(**kw):

@@ -1,5 +1,4 @@
 """SSD (mamba2) and RG-LRU numerics vs naive sequential recurrences."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

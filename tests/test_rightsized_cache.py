@@ -82,7 +82,9 @@ def test_rightsized_cache_is_smaller(setup):
     cache_len = 64
     s_uni = m_uni.init_decode_state(2, cache_len)
     s_rs = m_rs.init_decode_state(2, cache_len)
-    size = lambda s: sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s))
+    def size(s):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s))
+
     assert size(s_rs) < 0.6 * size(s_uni)
 
 

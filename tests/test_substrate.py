@@ -6,7 +6,7 @@ import pytest
 
 from repro.checkpoint import latest_step, restore, save
 from repro.data.lm_stream import FastLMStream
-from repro.data.libsvm_like import PAPER_DATASETS, load, make_classification
+from repro.data.libsvm_like import PAPER_DATASETS, load
 from repro.optim import adamw_init, adamw_update, linear_warmup_cosine
 
 
