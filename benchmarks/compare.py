@@ -17,10 +17,11 @@ Usage (exit code 1 on any violation):
   python benchmarks/compare.py results/comm.json results/comm_baseline.json
   python benchmarks/compare.py CURRENT BASELINE --loss-rtol 5e-3
 
-Refreshing the baseline after an INTENTIONAL change:
+Refreshing the baseline after an INTENTIONAL change (re-runs the seeded
+benchmark in-process and writes the result as the new baseline — commit
+the file it reports):
 
-  PYTHONPATH=src python -m benchmarks.run --only comm
-  cp results/comm.json results/comm_baseline.json   # and commit it
+  python benchmarks/compare.py --update
 """
 
 from __future__ import annotations
@@ -28,8 +29,13 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
 import pathlib
+import shutil
 import sys
+
+# anchor defaults (and --update) to the repo root, not the caller's CWD
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def _rel_err(a: float, b: float) -> float:
@@ -77,12 +83,45 @@ def compare(current: dict, baseline: dict, loss_rtol: float) -> list[str]:
     return violations
 
 
+def update_baseline(baseline: pathlib.Path) -> pathlib.Path:
+    """Re-run the seeded comm benchmark in-process and install its
+    record as the new baseline. Deterministic: every channel draw,
+    cohort, and codec key in the benchmark is a pure function of
+    ``CommConfig.seed``, so two --update runs on one environment write
+    byte-identical baselines. Runs from the repo root regardless of the
+    caller's CWD (the benchmark writes its artifacts relative to it);
+    an explicitly-passed relative BASELINE is resolved against the
+    caller's CWD first."""
+    baseline = baseline.resolve()
+    for p in (_ROOT, _ROOT / "src"):  # plain `python benchmarks/compare.py`
+        if str(p) not in sys.path:
+            sys.path.insert(0, str(p))
+    os.chdir(_ROOT)
+    from benchmarks.run import RESULTS, bench_comm
+
+    RESULTS.mkdir(exist_ok=True)
+    bench_comm(full=False)
+    fresh = (RESULTS / "comm.json").resolve()
+    shutil.copyfile(fresh, baseline)
+    return fresh
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         description="Fail when the comm benchmark drifts from its baseline."
     )
-    ap.add_argument("current", type=pathlib.Path)
-    ap.add_argument("baseline", type=pathlib.Path)
+    ap.add_argument(
+        "current",
+        type=pathlib.Path,
+        nargs="?",
+        default=_ROOT / "results" / "comm.json",
+    )
+    ap.add_argument(
+        "baseline",
+        type=pathlib.Path,
+        nargs="?",
+        default=_ROOT / "results" / "comm_baseline.json",
+    )
     ap.add_argument(
         "--loss-rtol",
         type=float,
@@ -90,7 +129,22 @@ def main(argv: list[str] | None = None) -> int:
         help="relative tolerance on final losses "
         "(absorbs BLAS/jax build jitter; default 5e-3)",
     )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="regenerate the baseline: re-run the seeded comm benchmark "
+        "and write its record to BASELINE (commit the result)",
+    )
     args = ap.parse_args(argv)
+
+    if args.update:
+        fresh = update_baseline(args.baseline)
+        n = len(json.loads(args.baseline.read_text()).get("variants", {}))
+        print(
+            f"baseline refreshed: {fresh} -> {args.baseline} "
+            f"({n} variants); commit the new baseline"
+        )
+        return 0
 
     current = json.loads(args.current.read_text())
     baseline = json.loads(args.baseline.read_text())
@@ -101,7 +155,7 @@ def main(argv: list[str] | None = None) -> int:
             print(f"  - {v}")
         print(
             "If the change is intentional, refresh the baseline: "
-            "cp results/comm.json results/comm_baseline.json"
+            "python benchmarks/compare.py --update  (and commit it)"
         )
         return 1
     n = len(baseline.get("variants", {}))

@@ -1,11 +1,13 @@
-"""Shared setup for the paper-figure benchmarks (Fig 1-3, Table I)."""
+"""Shared setup for the paper-figure benchmarks (Fig 1-3, Table I) and
+the sync-vs-async comparison scaffolding used by both
+``benchmarks/run.py --only async`` and ``examples/async_edge.py``."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import ChannelModel
+from repro.comm import ChannelModel, CommConfig, summarize
 from repro.core import make_optimizer, make_problem, newton_solve, run_rounds
 from repro.core.losses import logistic
 from repro.data.libsvm_like import load
@@ -71,6 +73,67 @@ def spec_alpha(spec):
 def run_method(name, kwargs, prob, w0, w_star, rounds, seed=0):
     opt = make_optimizer(name, **kwargs)
     return run_rounds(opt, prob, w0, w_star, rounds=rounds, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# sync-vs-async comparison scaffolding (shared by `--only async` and
+# examples/async_edge.py — one copy, both consumers move together)
+# ---------------------------------------------------------------------------
+
+def loss_at(hist, t: float) -> float:
+    """Loss at a simulated-time point (linear interpolation)."""
+    return float(np.interp(t, hist.sim_time_s, hist.loss))
+
+
+def hist_record(hist) -> dict:
+    """JSON-able record of one run's transport curves."""
+    return {
+        "loss": hist.loss.tolist(),
+        "gap": hist.gap.tolist(),
+        "sim_time_s": hist.sim_time_s.tolist(),
+        "cumulative_bytes": hist.cumulative_bytes.tolist(),
+        "staleness": (hist.staleness.tolist()
+                      if hist.staleness is not None else None),
+        "stats": summarize(hist.traces) if hist.traces else None,
+    }
+
+
+def check_async_lockstep_anchor(make_opt, prob, w0, w_star, channel, *,
+                                rounds: int = 3, seed: int = 1):
+    """The backward-compatibility anchor both consumers assert before
+    comparing drivers: full-quorum async must reproduce the synchronous
+    ``History`` bit-identically (losses AND byte accounting). Returns
+    ``(exact, sync_hist, async_hist)``."""
+    sync = run_rounds(make_opt(), prob, w0, w_star, rounds=rounds,
+                      comm=CommConfig(channel=channel, seed=seed))
+    asy = run_rounds(make_opt(), prob, w0, w_star, rounds=rounds,
+                     comm=CommConfig(channel=channel, seed=seed,
+                                     async_mode=True))
+    exact = bool(
+        np.array_equal(sync.loss, asy.loss)
+        and np.array_equal(sync.cumulative_bytes, asy.cumulative_bytes))
+    return exact, sync, asy
+
+
+def sync_async_race(make_opt, prob, w0, w_star, channel, *, rounds: int,
+                    seed: int = 1, buffer_size: "int | None" = None) -> dict:
+    """The canonical three-driver race on one channel/seed: lock-step
+    sync, a FedBuff-style buffer (default K = m/4, 4x the commits), and
+    a 50%-quantile quorum (3x the commits), both with inverse staleness
+    weighting. Returns ``{name: History}`` in run order (sync first)."""
+    buf = buffer_size if buffer_size is not None else max(2, prob.m // 4)
+    runs = [
+        ("sync", rounds, CommConfig(channel=channel, seed=seed)),
+        ("async_buf", 4 * rounds, CommConfig(
+            channel=channel, seed=seed, async_mode=True, buffer_size=buf,
+            staleness="inverse")),
+        ("async_q50", 3 * rounds, CommConfig(
+            channel=channel, seed=seed, async_mode=True, async_quantile=0.5,
+            staleness="inverse")),
+    ]
+    return {name: run_rounds(make_opt(), prob, w0, w_star, rounds=r,
+                             comm=comm)
+            for name, r, comm in runs}
 
 
 def ef_gap_shrink(loss_base: float, loss_off: float, loss_on: float) -> dict:

@@ -140,12 +140,15 @@ def bench_table1_communication(full: bool) -> None:
 def bench_comm(full: bool) -> None:
     """Loss-vs-bytes and loss-vs-simulated-time for FLeNS under the
     simulated transport: identity codec vs symmetric-pack + int8 on the
-    sketched Hessian, both under a 10%-dropout full-participation
-    channel; plus error-feedback on/off curves for a top-k-crushed O(M)
-    uplink (fedavg), whose ``ef_gap_shrink`` ratio records how much of
-    the compression floor EF21 memory recovers at identical byte cost.
-    Also asserts the backward-compat contract: identity codec + full
-    participation reproduces the no-comm trajectory exactly."""
+    sketched Hessian, vs a bf16-compressed model BROADCAST (the
+    symmetric downlink direction — asserted to strictly lower both
+    transport axes at a bounded loss gap), all under a 10%-dropout
+    full-participation channel; plus error-feedback on/off curves for a
+    top-k-crushed O(M) uplink (fedavg), whose ``ef_gap_shrink`` ratio
+    records how much of the compression floor EF21 memory recovers at
+    identical byte cost. Also asserts the backward-compat contract:
+    identity codec + full participation reproduces the no-comm
+    trajectory exactly."""
     from benchmarks.paper_common import (
         build_problem, ef_gap_shrink, ef_ratio_label, run_method)
     from repro.comm import ChannelModel, CommConfig, summarize
@@ -184,6 +187,10 @@ def bench_comm(full: bool) -> None:
         ("flens_sympack_qint8", "flens", dict(k=k), CommConfig(
             codecs={"h_sk": "sympack+qint8", "sg": "qint8"},
             channel=channel, seed=1)),
+        # the symmetric direction: compress the server's model broadcast
+        # (identity uplink, so the saving is purely downlink)
+        ("flens_down_bf16", "flens", dict(k=k), CommConfig(
+            downlink_codecs="bf16", channel=channel, seed=1)),
         # EF on/off under a biased codec that actually bites: fedavg's
         # O(M) model uplink at topk0.05 (5% of coordinates per round)
         ("fedavg_identity", "fedavg", dict(lr=2.0, local_steps=5),
@@ -220,6 +227,34 @@ def bench_comm(full: bool) -> None:
     packed_b = out["variants"]["flens_sympack_qint8"]["cumulative_bytes"][-1]
     _csv("comm/bytes_saved_by_sympack_qint8", 0.0,
          f"ratio={ident_b / max(packed_b, 1):.2f}x")
+
+    # downlink-compression acceptance: the bf16 broadcast must strictly
+    # lower BOTH transport axes vs the identity broadcast at a bounded
+    # final-loss gap (the guard absorbs the broadcast rounding noise)
+    ident_v = out["variants"]["flens_identity"]
+    down_v = out["variants"]["flens_down_bf16"]
+    gap_id = float(ident_v["gap"][-1])
+    gap_dn = float(down_v["gap"][-1])
+    out["downlink"] = {
+        "bytes_identity": ident_v["cumulative_bytes"][-1],
+        "bytes_bf16": down_v["cumulative_bytes"][-1],
+        "sim_identity": ident_v["sim_time_s"][-1],
+        "sim_bf16": down_v["sim_time_s"][-1],
+        "gap_identity": gap_id,
+        "gap_bf16": gap_dn,
+    }
+    saves = (down_v["cumulative_bytes"][-1] < ident_v["cumulative_bytes"][-1]
+             and down_v["sim_time_s"][-1] < ident_v["sim_time_s"][-1])
+    _csv("comm/downlink_bf16_saves", 0.0,
+         f"bytes_ratio={ident_v['cumulative_bytes'][-1] / max(down_v['cumulative_bytes'][-1], 1):.2f}x;"
+         f"sim_ratio={ident_v['sim_time_s'][-1] / max(down_v['sim_time_s'][-1], 1e-9):.2f}x;"
+         f"gap_identity={gap_id:.3e};gap_bf16={gap_dn:.3e};"
+         f"strictly_lower={bool(saves)}")
+    assert saves, (
+        "bf16 downlink did not strictly lower both cumulative_bytes and "
+        f"sim_time_s: {out['downlink']}")
+    assert np.isfinite(gap_dn) and gap_dn < max(10.0 * gap_id, 1e-2), (
+        f"bf16 broadcast loss gap unbounded: {gap_dn} vs identity {gap_id}")
     # EF's headline number: how much of the loss gap to the
     # no-compression baseline the memory recovers (same encoded bytes)
     shrink = ef_gap_shrink(finals["fedavg_identity"],
@@ -249,9 +284,15 @@ def bench_async(full: bool) -> None:
     (``async_beats_sync``: the headline loss-vs-sim-time comparison) and
     asserts the lock-step anchor: async with a full quorum reproduces
     the synchronous trajectory bit-identically."""
-    from benchmarks.paper_common import build_problem, straggler_edge_channel
-    from repro.comm import CommConfig, summarize
-    from repro.core import make_optimizer, run_rounds
+    from benchmarks.paper_common import (
+        build_problem,
+        check_async_lockstep_anchor,
+        hist_record,
+        loss_at,
+        straggler_edge_channel,
+        sync_async_race,
+    )
+    from repro.core import make_optimizer
 
     spec, prob, w0, w_star = build_problem("phishing",
                                            n_cap=None if full else 20000)
@@ -263,52 +304,28 @@ def bench_async(full: bool) -> None:
         return make_optimizer("fedavg", lr=2.0, local_steps=5)
 
     # lock-step anchor: full-quorum async == sync, bit for bit
-    sync_anchor = run_rounds(fedavg(), prob, w0, w_star, rounds=4,
-                             comm=CommConfig(channel=channel, seed=1))
-    async_anchor = run_rounds(fedavg(), prob, w0, w_star, rounds=4,
-                              comm=CommConfig(channel=channel, seed=1,
-                                              async_mode=True))
-    exact = bool(
-        np.array_equal(sync_anchor.loss, async_anchor.loss)
-        and np.array_equal(sync_anchor.cumulative_bytes,
-                           async_anchor.cumulative_bytes))
+    exact, _, _ = check_async_lockstep_anchor(fedavg, prob, w0, w_star,
+                                              channel, rounds=4)
     _csv("async/full_quorum_reproduces_sync", 0.0, f"exact={exact}")
     assert exact, "full-quorum async diverged from the synchronous driver"
 
     out = {"dataset": spec.name, "rounds": rounds, "m": m,
            "straggler_prob": channel.straggler_prob, "variants": {}}
-    runs = [
-        ("sync", rounds, CommConfig(channel=channel, seed=1)),
-        ("async_buf", 4 * rounds, CommConfig(
-            channel=channel, seed=1, async_mode=True,
-            buffer_size=max(2, m // 4), staleness="inverse")),
-        ("async_q50", 3 * rounds, CommConfig(
-            channel=channel, seed=1, async_mode=True, async_quantile=0.5,
-            staleness="inverse")),
-    ]
-    for name, r, comm in runs:
-        hist = run_rounds(fedavg(), prob, w0, w_star, rounds=r, comm=comm)
-        out["variants"][name] = {
-            "loss": hist.loss.tolist(),
-            "gap": hist.gap.tolist(),
-            "sim_time_s": hist.sim_time_s.tolist(),
-            "cumulative_bytes": hist.cumulative_bytes.tolist(),
-            "staleness": (hist.staleness.tolist()
-                          if hist.staleness is not None else None),
-            "stats": summarize(hist.traces),
-        }
+    hists = sync_async_race(fedavg, prob, w0, w_star, channel, rounds=rounds)
+    for name, hist in hists.items():
+        out["variants"][name] = hist_record(hist)
+        r = hist.rounds
         _csv(f"async/{name}", hist.wall_time_s / r * 1e6,
              f"gap_final={hist.gap[-1]:.3e};"
              f"sim_s={hist.sim_time_s[-1]:.2f};rounds={r}")
 
-    sync_v = out["variants"]["sync"]
+    sync_h = hists["sync"]
     failures = []
     for name in ("async_buf", "async_q50"):
         av = out["variants"][name]
-        t_common = min(sync_v["sim_time_s"][-1], av["sim_time_s"][-1])
-        loss_sync = float(np.interp(t_common, sync_v["sim_time_s"],
-                                    sync_v["loss"]))
-        loss_async = float(np.interp(t_common, av["sim_time_s"], av["loss"]))
+        t_common = min(sync_h.sim_time_s[-1], hists[name].sim_time_s[-1])
+        loss_sync = loss_at(sync_h, t_common)
+        loss_async = loss_at(hists[name], t_common)
         beats = bool(loss_async < loss_sync)
         av["loss_at_common_sim_time"] = {
             "t": t_common, "sync": loss_sync, "async": loss_async}

@@ -15,6 +15,12 @@ full participation, no dropout) the async driver is lock-step-equivalent
 and reproduces the synchronous trajectory bit-for-bit — which this demo
 checks before printing the comparison.
 
+The channel, the anchor check, and the three-driver race all live in
+``benchmarks/paper_common.py`` (``straggler_edge_channel``,
+``check_async_lockstep_anchor``, ``sync_async_race``) and are shared
+with ``benchmarks/run.py --only async`` — tune them there and both
+consumers move together.
+
   PYTHONPATH=src python examples/async_edge.py
   PYTHONPATH=src python examples/async_edge.py --rounds 16 --buffer 8
 """
@@ -32,13 +38,15 @@ import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-from benchmarks.paper_common import build_problem, straggler_edge_channel
-from repro.comm import CommConfig, summarize
-from repro.core import make_optimizer, run_rounds
-
-
-def loss_at(hist, t: float) -> float:
-    return float(np.interp(t, hist.sim_time_s, hist.loss))
+from benchmarks.paper_common import (
+    build_problem,
+    check_async_lockstep_anchor,
+    hist_record,
+    loss_at,
+    straggler_edge_channel,
+    sync_async_race,
+)
+from repro.core import make_optimizer
 
 
 def main() -> None:
@@ -54,53 +62,21 @@ def main() -> None:
     spec, prob, w0, w_star = build_problem(args.dataset, n_cap=args.n_cap)
     m = prob.m
     chan = straggler_edge_channel(m)
-    buffer = args.buffer if args.buffer is not None else max(2, m // 4)
 
     def fedavg():
         return make_optimizer("fedavg", lr=2.0, local_steps=5)
 
     # --- anchor: full-quorum async == sync, bit for bit -------------------
-    sync_a = run_rounds(
-        fedavg(), prob, w0, w_star, rounds=3, comm=CommConfig(channel=chan, seed=1)
+    anchored, _, _ = check_async_lockstep_anchor(
+        fedavg, prob, w0, w_star, chan, rounds=3
     )
-    async_a = run_rounds(
-        fedavg(),
-        prob,
-        w0,
-        w_star,
-        rounds=3,
-        comm=CommConfig(channel=chan, seed=1, async_mode=True),
-    )
-    anchored = bool(np.array_equal(sync_a.loss, async_a.loss))
     print(f"full-quorum async reproduces sync bit-identically: {anchored}")
     assert anchored
 
     # --- the race: same channel, same seed, three drivers ------------------
-    runs = [
-        ("sync", args.rounds, CommConfig(channel=chan, seed=1)),
-        (
-            f"async buf K={buffer}",
-            4 * args.rounds,
-            CommConfig(
-                channel=chan,
-                seed=1,
-                async_mode=True,
-                buffer_size=buffer,
-                staleness="inverse",
-            ),
-        ),
-        (
-            "async q=0.5",
-            3 * args.rounds,
-            CommConfig(
-                channel=chan,
-                seed=1,
-                async_mode=True,
-                async_quantile=0.5,
-                staleness="inverse",
-            ),
-        ),
-    ]
+    hists = sync_async_race(
+        fedavg, prob, w0, w_star, chan, rounds=args.rounds, buffer_size=args.buffer
+    )
     print(
         f"\n=== {spec.name}: M={prob.dim} m={m} | 30% stragglers x10, "
         f"log-spaced uplinks ==="
@@ -110,24 +86,14 @@ def main() -> None:
         f"{'loss_final':>10} {'mean_tau':>8}"
     )
     out = {}
-    hists = {}
-    for name, r, comm in runs:
-        hist = run_rounds(fedavg(), prob, w0, w_star, rounds=r, comm=comm)
-        hists[name] = hist
+    for name, hist in hists.items():
+        r = hist.rounds
         tau = float(np.nanmean(hist.staleness)) if hist.staleness is not None else 0.0
         print(
             f"{name:>16} {r:>7d} {hist.sim_time_s[-1]:>7.2f} "
             f"{hist.sim_time_s[-1] / r:>8.3f} {hist.loss[-1]:>10.6f} {tau:>8.2f}"
         )
-        out[name] = {
-            "loss": hist.loss.tolist(),
-            "sim_time_s": hist.sim_time_s.tolist(),
-            "cumulative_bytes": hist.cumulative_bytes.tolist(),
-            "staleness": (
-                hist.staleness.tolist() if hist.staleness is not None else None
-            ),
-            "stats": summarize(hist.traces),
-        }
+        out[name] = hist_record(hist)
 
     sync_h = hists["sync"]
     print("\n--- loss at common simulated-time points ---")

@@ -3,11 +3,13 @@ O(k²) uplink is *for*, now actually simulated.
 
 Heterogeneous per-client uplinks (2G-ish to fiber, log-spaced), 20%
 stragglers at 10× slowdown, 10% dropout, Dirichlet non-iid shards.
-Compares four transports for FLeNS+ (whose O(M) complement gradient is
+Compares five transports for FLeNS+ (whose O(M) complement gradient is
 the payload top-k sparsification targets):
 
   * raw           — identity codecs, full participation (the old model)
   * compressed    — sympack+int8 sketched Hessian, top-k+int8 gradient
+  * comp+down     — compressed + a bf16 model broadcast (the symmetric
+                    downlink direction of the wire API)
   * comp+sched    — compressed + bandwidth-aware 50% participation
   * comp+sched+ef — comp+sched with EF21 error feedback on the lossy
                     fixed-basis payload (the top-k complement gradient)
@@ -41,8 +43,13 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-from benchmarks.paper_common import build_problem, ef_gap_shrink, ef_ratio_label
-from repro.comm import ChannelModel, CommConfig, summarize
+from benchmarks.paper_common import (
+    build_problem,
+    ef_gap_shrink,
+    ef_ratio_label,
+    hist_record,
+)
+from repro.comm import ChannelModel, CommConfig
 from repro.core import make_optimizer, run_rounds
 
 
@@ -85,6 +92,10 @@ def main() -> None:
     transports = [
         ("raw", CommConfig(channel=chan, seed=1)),
         ("compressed", CommConfig(codecs=compressed, channel=chan, seed=1)),
+        # + the symmetric direction: bf16 model broadcast (the downlink
+        # is 10x faster here, so bytes drop more than sim time does)
+        ("comp+down", CommConfig(codecs=compressed, downlink_codecs="bf16",
+                                 channel=chan, seed=1)),
         ("comp+sched", CommConfig(codecs=compressed, channel=chan,
                                   scheduler="bandwidth:0.5", seed=1)),
         ("comp+sched+ef", CommConfig(codecs=compressed, channel=chan,
@@ -94,7 +105,7 @@ def main() -> None:
 
     print(f"=== {spec.name}: M={prob.dim} m={prob.m} k={k} | 20% stragglers, "
           f"10% dropout, dirichlet shards ===")
-    print(f"{'transport':>12} {'gap_final':>10} {'MB_total':>9} "
+    print(f"{'transport':>13} {'gap_final':>10} {'MB_total':>9} "
           f"{'sim_s':>8} {'rounds<=%.0e' % args.gap:>12} {'sim_s<=gap':>10}")
     out = {}
     for name, comm in transports:
@@ -102,15 +113,10 @@ def main() -> None:
                           rounds=args.rounds, comm=comm)
         r_hit = rounds_to_gap(hist, args.gap)
         sim_hit = hist.sim_time_s[r_hit] if r_hit >= 0 else float("nan")
-        print(f"{name:>12} {hist.gap[-1]:>10.2e} "
+        print(f"{name:>13} {hist.gap[-1]:>10.2e} "
               f"{hist.cumulative_bytes[-1] / 1e6:>9.3f} "
               f"{hist.sim_time_s[-1]:>8.1f} {r_hit:>12d} {sim_hit:>10.1f}")
-        out[name] = {
-            "gap": hist.gap.tolist(),
-            "cumulative_bytes": hist.cumulative_bytes.tolist(),
-            "sim_time_s": hist.sim_time_s.tolist(),
-            "stats": summarize(hist.traces),
-        }
+        out[name] = hist_record(hist)
 
     # --- error feedback vs the compression floor (FedAvg, O(M) uplink) ---
     # topk0.05 keeps 5% of model coordinates per round; without EF the
@@ -132,12 +138,7 @@ def main() -> None:
         print(f"{name:>15} loss_final={hist.loss[-1]:.6f} "
               f"gap_final={hist.gap[-1]:.2e} "
               f"MB_total={hist.cumulative_bytes[-1] / 1e6:.3f}")
-        out[name] = {
-            "gap": hist.gap.tolist(),
-            "cumulative_bytes": hist.cumulative_bytes.tolist(),
-            "sim_time_s": hist.sim_time_s.tolist(),
-            "stats": summarize(hist.traces),
-        }
+        out[name] = hist_record(hist)
     shrink = ef_gap_shrink(finals["fedavg_raw"], finals["fedavg_topk"],
                            finals["fedavg_topk_ef"])
     out["ef_gap_shrink"] = shrink

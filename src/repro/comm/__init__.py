@@ -1,19 +1,25 @@
 """Simulated federated transport: codecs, channel, scheduling, accounting.
 
 This package turns the repo's communication story from a float-count
-formula into a measurable simulation: every federated round's uplink
-payloads flow through pluggable codecs (so compression error perturbs
-the optimization), a per-client channel model converts exact encoded
-bytes into simulated wall-clock with stragglers and dropout, and
-participation schedulers reweight server aggregation. Lossy codecs can
-carry client-side EF21 error-feedback memory (``repro.comm.feedback``)
-so biased compression keeps the uncompressed fixed point.
+formula into a measurable simulation: every federated round's payloads
+flow through pluggable codecs in BOTH directions — per-client uplinks
+via ``CommRound.uplink`` and server broadcasts via
+``CommRound.downlink`` (direction-aware specs: ``codecs["down:w"]`` or
+the ``downlink_codecs`` shorthand) — so compression error perturbs the
+optimization, a per-client channel model converts exact encoded bytes
+into simulated wall-clock with compute time, stragglers and dropout,
+and participation schedulers reweight server aggregation. Lossy uplink
+codecs can carry client-side EF21 error-feedback memory
+(``repro.comm.feedback``) so biased compression keeps the uncompressed
+fixed point.
 
-Rounds are driven either synchronously (lock-step, the server waits for
-the slowest delivering client) or asynchronously
+Rounds are driven through the ``Session`` protocol
+(``repro.comm.session``): ``NullSession`` (no transport, legacy jaxpr),
+``CommSession`` (synchronous lock-step — the server waits for the
+slowest delivering client), or ``AsyncSession``
 (``CommConfig(async_mode=True)`` — event-driven per-client clocks with
-quorum commits and staleness-weighted aggregation, see
-``repro.comm.async_driver``).
+quorum commits, staleness-weighted aggregation, and a FedBuff-style
+``server_lr``, see ``repro.comm.async_driver``).
 
 Entry point: build a :class:`CommConfig` and pass it to
 ``repro.core.run_rounds(..., comm=cfg)``. See ``examples/edge_clients.py``
@@ -38,10 +44,14 @@ from repro.comm.feedback import (
 )
 from repro.comm.metrics import (
     RoundTrace,
+    Transport,
     cumulative_bytes,
+    cumulative_bytes_down,
+    cumulative_bytes_up,
     cumulative_time,
     summarize,
 )
+from repro.comm.session import NullSession, Session, make_session
 from repro.comm.scheduler import (
     BandwidthAware,
     FullParticipation,
@@ -63,18 +73,24 @@ __all__ = [
     "FullParticipation",
     "IdentityCodec",
     "NULL_COMM",
+    "NullSession",
     "QInt8Codec",
     "RoundTrace",
     "Scheduler",
+    "Session",
     "SymPackCodec",
     "TopKCodec",
+    "Transport",
     "UniformSampler",
     "compensate",
     "cumulative_bytes",
+    "cumulative_bytes_down",
+    "cumulative_bytes_up",
     "cumulative_time",
     "init_memory",
     "make_codec",
     "make_scheduler",
+    "make_session",
     "make_staleness",
     "residual_norms",
     "summarize",

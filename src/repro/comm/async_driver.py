@@ -31,10 +31,12 @@ optimization through the exact machinery the sync driver uses
 (``CommRound.weights`` / ``where_delivered``) — and contributes the
 model *delta* it would have produced. The server combines deltas:
 
-    w_{t+1} = w_t + sum_g c_g (w'_g - w_{v_g}),
+    w_{t+1} = w_t + eta_s * sum_g c_g (w'_g - w_{v_g}),
     c_g  =  staleness(tau_g) * P_g / sum_h P_h
 
-(P_g = group participation mass). Participation is renormalized over the
+(P_g = group participation mass, eta_s = ``CommConfig.server_lr`` — the
+FedBuff-style global server learning rate, 1.0 by default and then
+bit-identical to not having the knob). Participation is renormalized over the
 commit — the same renormalization the sync driver applies to partial
 cohorts — while the staleness factor *damps* the applied step, so a
 fully-stale commit under ``inverse`` moves the model by 1/(1+tau) of its
@@ -128,16 +130,16 @@ class AsyncSession:
         self,
         config,
         m: int,
-        downlink_bytes: int,
         client_weights: np.ndarray,
         keys: jax.Array,  # (rounds, 2) per-version optimizer round keys
+        state0: Any = None,
         mask_dtype=jnp.float64,
     ):
         self.config = config
         self.m = m
-        self.downlink_bytes = int(downlink_bytes)
         self.client_weights = np.asarray(client_weights, dtype=np.float64)
         self.keys = keys
+        self._state0 = state0
         self.plan: Dict[str, int] = {}
         self.traces: List[RoundTrace] = []
         self.ef_memory: Dict[str, jax.Array] = {}
@@ -175,19 +177,49 @@ class AsyncSession:
 
     @property
     def bytes_up_per_client(self) -> int:
-        return int(sum(self.plan.values()))
+        from repro.comm.config import plan_bytes
 
-    # -- trace-time discovery -----------------------------------------------
+        return plan_bytes(self.plan, down=False)
+
+    @property
+    def bytes_down_per_client(self) -> int:
+        """Exact encoded broadcast bytes per dispatched client (the
+        ``down:*`` plan entries the prepare-time probe filled)."""
+        from repro.comm.config import plan_bytes
+
+        return plan_bytes(self.plan, down=True)
+
+    # -- Session protocol: trace-time discovery -----------------------------
     def prepare(self, trace_round) -> None:
         """One abstract probe of the round (nothing executes): fills the
-        payload byte plan — the async clock needs encoded bytes *before*
-        the first round runs, unlike the sync driver which reads them
-        after — and discovers the EF memory shapes along the way."""
+        payload byte plan — the async clock needs encoded bytes in BOTH
+        directions *before* the first round runs, unlike the sync driver
+        which reads them after — discovers the EF memory shapes along
+        the way, then snapshots the initial state and launches every
+        client's first cycle."""
         from repro.comm.config import probe_round
 
         spec = probe_round(self.config, self.m, self._mask_dtype, self.plan,
                            trace_round, full_cohort=self.lockstep)
         self.ef_memory = feedback.init_memory(spec)
+        if self._state0 is not None:
+            self.start(self._state0)
+
+    def comm_round(self, memory, mask, codec_key):
+        """In-jit transport view for the driver's round builder."""
+        from repro.comm.config import CommRound
+
+        return CommRound(self.config, self.plan, mask, codec_key,
+                         memory=memory)
+
+    def finalize(self):
+        from repro.comm.metrics import transport_from_traces
+
+        return transport_from_traces(
+            self.traces,
+            staleness=np.array([tr.mean_staleness for tr in self.traces]),
+            ef_residuals=self.ef_residual_norms(),
+        )
 
     # -- event machinery ----------------------------------------------------
     def start(self, state) -> None:
@@ -227,14 +259,15 @@ class AsyncSession:
                      retry=retry)
 
     def _flight_times(self, draw) -> np.ndarray:
-        """Per-client cycle times for a full (m,) dispatch draw."""
+        """Per-client cycle times for a full (m,) dispatch draw — both
+        directions priced at their exact encoded sizes."""
         bytes_up = np.full(self.m, float(self.bytes_up_per_client))
-        bytes_down = np.full(self.m, float(self.downlink_bytes))
+        bytes_down = np.full(self.m, float(self.bytes_down_per_client))
         return self.config.channel.client_times(draw, bytes_up, bytes_down)
 
     def _launch(self, j: int, now: float, dt: float, straggler: bool,
                 dropped: bool, retry: int) -> None:
-        self._pending_down[j] += self.downlink_bytes
+        self._pending_down[j] += self.bytes_down_per_client
         self._seq += 1
         flight = _Flight(client=j, version=self.version,
                          straggler=straggler, dropped=dropped, retry=retry)
@@ -303,18 +336,23 @@ class AsyncSession:
                 k_codec)
 
         fresh = order[0]
-        if len(order) == 1 and fresh == self.version:
-            # single fresh group: the round output IS the next state
-            # (no delta arithmetic — preserves sync bit-exactness; the
-            # staleness weight is 1 at tau=0 by convention)
+        eta = float(self.config.server_lr)
+        if len(order) == 1 and fresh == self.version and eta == 1.0:
+            # single fresh group at unit server lr: the round output IS
+            # the next state (no delta arithmetic — preserves sync
+            # bit-exactness; the staleness weight is 1 at tau=0 by
+            # convention)
             state_new = outputs[fresh]
         else:
-            # c_g = staleness(tau_g) * P_g / sum_h P_h: participation
-            # mass is renormalized over the commit (as the sync driver
-            # renormalizes partial cohorts) but staleness DAMPS the step
-            # rather than being renormalized away — an all-stale commit
-            # under "inverse" moves the model by 1/(1+tau) of its delta,
-            # and a weight of exactly 0 contributes exactly nothing
+            # c_g = eta_s * staleness(tau_g) * P_g / sum_h P_h:
+            # participation mass is renormalized over the commit (as the
+            # sync driver renormalizes partial cohorts) but staleness
+            # DAMPS the step rather than being renormalized away — an
+            # all-stale commit under "inverse" moves the model by
+            # 1/(1+tau) of its delta, and a weight of exactly 0
+            # contributes exactly nothing. The FedBuff-style global
+            # server learning rate eta_s scales every committed delta on
+            # top (eta_s = 1 is bit-identical to not having the knob).
             p_mass = {
                 v: float(self.client_weights[[c for c, _ in groups[v]]].sum())
                 for v in order
@@ -323,7 +361,7 @@ class AsyncSession:
             w_cur = self._snapshots[self.version]["w"]
             w_new = w_cur
             for v in order:
-                c = (self._staleness(float(self.version - v))
+                c = (eta * self._staleness(float(self.version - v))
                      * p_mass[v] / p_total)
                 delta = outputs[v]["w"] - self._snapshots[v]["w"]
                 w_new = w_new + c * delta

@@ -1,15 +1,21 @@
-"""Per-client link model: bandwidth, latency, stragglers, dropout.
+"""Per-client link model: bandwidth, latency, compute, stragglers, dropout.
 
 The channel is a *driver-side* (host, numpy) model: per round it draws
 which scheduled clients straggle (slowed by ``straggler_slowdown``) and
 which drop out entirely (their payload never reaches the server), then
-converts per-client byte counts into per-client delivery times
-(``client_times``). The synchronous driver reduces those to a single
-round wall-clock — the server waits for the slowest delivering client
+converts per-client byte counts into per-client cycle times
+(``client_times`` = latency + broadcast download + local compute +
+upload). The synchronous driver reduces those to a single round
+wall-clock — the server waits for the slowest delivering client
 (``round_time``) — while the asynchronous driver
 (``repro.comm.async_driver``) keeps the full per-client vector and
 advances a persistent per-client clock from it, so fast clients lap
 slow ones instead of waiting.
+
+``compute_s`` models per-client local computation time explicitly
+(scalar or per-client ``(m,)`` — heterogeneous devices), instead of
+folding compute into link latency; stragglers slow the whole cycle,
+compute included.
 
 All draws are deterministic functions of a PRNG key, so a trajectory is
 exactly reproducible from ``(CommConfig.seed, round index)``.
@@ -51,6 +57,7 @@ class ChannelModel:
     uplink_bytes_per_s: "float | np.ndarray" = 1.25e6  # ~10 Mbit/s edge uplink
     downlink_bytes_per_s: "float | np.ndarray" = 1.25e7  # ~100 Mbit/s down
     latency_s: float = 0.05
+    compute_s: "float | np.ndarray" = 0.0  # per-client local compute time
     straggler_prob: float = 0.0
     straggler_slowdown: float = 10.0
     dropout_prob: float = 0.0
@@ -60,6 +67,9 @@ class ChannelModel:
 
     def downlink_rates(self, m: int) -> np.ndarray:
         return _per_client(self.downlink_bytes_per_s, m)
+
+    def compute_times(self, m: int) -> np.ndarray:
+        return _per_client(self.compute_s, m)
 
     def draw(self, key: jax.Array, m: int) -> ChannelDraw:
         """Deterministic straggler/dropout coin flips for one round."""
@@ -76,13 +86,15 @@ class ChannelModel:
         bytes_up: np.ndarray,  # (m,) uplink bytes per client
         bytes_down: np.ndarray,  # (m,) broadcast bytes per client
     ) -> np.ndarray:
-        """(m,) per-client delivery times: latency + downlink + uplink,
-        straggler-scaled. This is the quantity the async driver consumes
-        directly; the sync driver takes its max over delivering clients."""
+        """(m,) per-client cycle times: latency + downlink + compute +
+        uplink, straggler-scaled. This is the quantity the async driver
+        consumes directly; the sync driver takes its max over delivering
+        clients."""
         m = draw.straggler.shape[0]
         up = self.uplink_rates(m)
         down = self.downlink_rates(m)
-        t = self.latency_s + bytes_down / down + bytes_up / up
+        t = (self.latency_s + bytes_down / down + self.compute_times(m)
+             + bytes_up / up)
         return np.where(draw.straggler, t * self.straggler_slowdown, t)
 
     def round_time(

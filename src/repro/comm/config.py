@@ -3,16 +3,28 @@
 Three layers:
 
   * ``CommConfig``  — user-facing description: which codec per payload
-      name, which participation scheduler, which channel model, seed.
+      name *and direction*, which participation scheduler, which channel
+      model, seed.
   * ``CommSession`` — driver-side (host) state for one trajectory: draws
       cohorts/channel randomness per round, accumulates ``RoundTrace``s,
       and owns the *payload plan* (exact encoded bytes per payload name,
       recorded once at jit-trace time — payload shapes are static).
+      Implements the ``Session`` protocol (``prepare`` / ``step`` /
+      ``finalize``, see ``repro.comm.session``) for the synchronous
+      lock-step clock.
   * ``CommRound``   — the view optimizers see *inside* the jitted round:
       ``uplink(name, x)`` routes a stacked per-client payload through its
-      codec (so compression error perturbs the optimization), and
-      ``weights(p)`` masks + renormalizes aggregation weights for the
-      delivering cohort.
+      codec (so compression error perturbs the optimization),
+      ``downlink(name, x)`` routes a server broadcast through its
+      direction-aware codec (encoded once, received by every scheduled
+      client), and ``weights(p)`` masks + renormalizes aggregation
+      weights for the delivering cohort.
+
+The wire API is symmetric: downlink payloads resolve codecs under the
+``"down:"``-prefixed name (``codecs={"down:w": "bf16"}`` or the
+``downlink_codecs={"w": "bf16"}`` shorthand) and are billed at their
+exact encoded size per receiving client — the broadcast is no longer a
+``downlink_floats * itemsize`` formula.
 
 With ``CommConfig(error_feedback=...)`` lossy payloads additionally
 carry client-side error-feedback memory (``repro.comm.feedback``): the
@@ -24,10 +36,11 @@ consumes the advanced estimate ``g + C(x - g)``; under ``"ef14"`` it is
 the accumulated residual ``e`` and the wire carries the compensated
 payload ``C(x + e)``.
 
-Bit-exactness contract: with the identity codec and full participation
-(no dropout), ``CommRound.uplink`` returns its input object unchanged
-and ``weights`` returns ``p`` unchanged — the round's jaxpr is identical
-to the no-comm path, so trajectories match today's bit-for-bit.
+Bit-exactness contract: with identity codecs and full participation
+(no dropout), ``CommRound.uplink`` AND ``CommRound.downlink`` return
+their input objects unchanged and ``weights`` returns ``p`` unchanged —
+the round's jaxpr is identical to the no-comm path, so trajectories
+match today's bit-for-bit, in both wire directions.
 """
 from __future__ import annotations
 
@@ -41,13 +54,29 @@ import numpy as np
 from repro.comm import feedback
 from repro.comm.channel import ChannelModel
 from repro.comm.codecs import Codec, IdentityCodec, make_codec
-from repro.comm.metrics import RoundTrace
+from repro.comm.metrics import RoundTrace, Transport, transport_from_traces
 from repro.comm.scheduler import Scheduler, make_scheduler
 
+# payload-name prefix that selects the downlink (server -> client)
+# direction in codec specs and in the byte plan
+DOWN = "down:"
+
 # control-plane payloads default to lossless regardless of the default
-# codec (compressing a 1-scalar guard loss saves nothing and can poison
-# the accept/reject logic)
-_LOSSLESS_BY_DEFAULT = ("loss",)
+# codec (compressing a 1-scalar guard loss or an O(1) sketch seed saves
+# nothing and can poison the accept/reject logic / the shared basis)
+_LOSSLESS_BY_DEFAULT = ("loss", "down:seed")
+
+# fold_in stream offset separating downlink codec keys from the uplink
+# payload counter (keeps uplink key schedules unchanged by the presence
+# of downlink payloads)
+_DOWNLINK_KEY_STREAM = 1 << 20
+
+
+def plan_bytes(plan: "Dict[str, int]", *, down: bool) -> int:
+    """Sum one direction of a payload byte plan (keys are payload
+    occurrences; downlink occurrences carry the ``"down:"`` prefix)."""
+    return int(sum(v for k, v in plan.items()
+                   if k.startswith(DOWN) == down))
 
 
 @dataclasses.dataclass
@@ -57,7 +86,16 @@ class CommConfig:
     ``codecs`` maps payload names (``"h_sk"``, ``"sg"``, ``"grad"``,
     ``"w_local"``, ...) to codec specs; the ``"default"`` entry covers
     unnamed payloads. A bare string/Codec is shorthand for
-    ``{"default": ...}``.
+    ``{"default": ...}``. Downlink (server -> client broadcast) payloads
+    resolve under the ``"down:"``-prefixed name — ``"down:w"`` for the
+    model broadcast — falling back to ``"down:default"`` and then to
+    identity, NEVER to the uplink ``"default"``: turning on uplink
+    compression must not silently degrade the broadcast.
+    ``downlink_codecs`` is a shorthand that merges into ``codecs`` with
+    the prefix applied: ``downlink_codecs="bf16"`` ==
+    ``codecs["down:default"] = "bf16"``, ``downlink_codecs={"w": ...}``
+    == ``codecs["down:w"] = ...`` (explicit ``down:`` entries in
+    ``codecs`` win on conflict).
 
     ``error_feedback`` gates client-side error-feedback memory per
     payload (see ``repro.comm.feedback``): ``True`` enables it for every
@@ -77,13 +115,19 @@ class CommConfig:
     FedBuff-style K) when set, else ``ceil(async_quantile * m)``.
     ``staleness`` weights stale contributions on top of participation
     weights: ``"constant"``, ``"inverse"`` (1/(1+tau)), or
-    ``"poly:a"`` ((1+tau)^-a); see ``make_staleness``. With the full
-    scheduler, no dropout, and a full quorum (``async_quantile=1.0``,
-    ``buffer_size`` unset) the async driver is lock-step-equivalent and
-    reproduces the synchronous trajectory bit-identically.
+    ``"poly:a"`` ((1+tau)^-a); see ``make_staleness``. ``server_lr`` is
+    the FedBuff-style global server learning rate: every committed model
+    delta is additionally scaled by it *after* staleness weighting
+    (default 1.0 is bit-identical to not having the knob). It is an
+    async-driver control — configuring it with ``async_mode=False``
+    raises. With the full scheduler, no dropout, a full quorum
+    (``async_quantile=1.0``, ``buffer_size`` unset) and ``server_lr=1``
+    the async driver is lock-step-equivalent and reproduces the
+    synchronous trajectory bit-identically.
     """
 
     codecs: "Dict[str, Any] | str | Codec" = "identity"
+    downlink_codecs: "Dict[str, Any] | str | Codec | None" = None
     scheduler: "str | Scheduler" = "full"
     channel: ChannelModel = dataclasses.field(default_factory=ChannelModel)
     seed: int = 0
@@ -93,10 +137,26 @@ class CommConfig:
     buffer_size: "int | None" = None
     async_quantile: float = 1.0
     staleness: "str | Any" = "constant"
+    server_lr: float = 1.0
 
     def __post_init__(self):
-        if not isinstance(self.codecs, dict):
-            self.codecs = {"default": self.codecs}
+        # always own a private copy: the downlink_codecs merge below must
+        # never mutate a caller's dict (configs often share one spec)
+        self.codecs = (dict(self.codecs) if isinstance(self.codecs, dict)
+                       else {"default": self.codecs})
+        if self.downlink_codecs is not None:
+            shorthand = (self.downlink_codecs
+                         if isinstance(self.downlink_codecs, dict)
+                         else {"default": self.downlink_codecs})
+            for name, spec in shorthand.items():
+                self.codecs.setdefault(f"{DOWN}{name}", spec)
+        if self.server_lr <= 0.0:
+            raise ValueError(f"server_lr must be > 0, got {self.server_lr}")
+        if self.server_lr != 1.0 and not self.async_mode:
+            raise ValueError(
+                "server_lr scales asynchronous commit deltas; it requires "
+                "async_mode=True (the synchronous driver applies rounds "
+                "verbatim)")
         if self.ef_variant not in feedback.EF_VARIANTS:
             raise ValueError(
                 f"unknown ef_variant {self.ef_variant!r}; "
@@ -116,11 +176,15 @@ class CommConfig:
         self.scheduler = make_scheduler(self.scheduler)
 
     def codec_for(self, payload: str) -> Codec:
+        """Resolve a payload (``"name"`` uplink / ``"down:name"``
+        downlink) to its codec. Each direction has its own default."""
         if payload not in self._codec_cache:
             if payload in self.codecs:
                 spec = self.codecs[payload]
             elif payload in _LOSSLESS_BY_DEFAULT:
                 spec = "identity"
+            elif payload.startswith(DOWN):
+                spec = self.codecs.get(f"{DOWN}default", "identity")
             else:
                 spec = self.codecs.get("default", "identity")
             self._codec_cache[payload] = make_codec(spec)
@@ -164,6 +228,7 @@ class CommRound:
         self.mask = mask
         self._key = key
         self._n_payloads = 0
+        self._n_down = 0
         self._occurrences: Dict[str, int] = {}
         self._ef_record = ef_record
         # memory_out starts as a same-structure copy so payloads a round
@@ -220,6 +285,38 @@ class CommRound:
             return decoded
         return jax.vmap(codec.roundtrip)(keys, x)
 
+    def downlink(self, name: str, x: jax.Array,
+                 wire_shape: "tuple | None" = None) -> jax.Array:
+        """Route a server->client broadcast through its downlink codec's
+        simulated encode->decode; records exact encoded bytes.
+
+        The server encodes ONCE and every scheduled client decodes the
+        same bytes, so ``x`` is the unstacked server-side array (no
+        client axis) and the plan bills ``nbytes`` per receiving client
+        (each client pulls the broadcast over its own link). Codecs
+        resolve under ``"down:<name>"`` — see ``CommConfig.codecs`` —
+        and the identity codec returns ``x`` unchanged, preserving the
+        bit-exactness contract in the downlink direction too.
+
+        No error feedback applies: EF memory is a per-client *uplink*
+        construct; a broadcast has one sender whose compression error is
+        common knowledge.
+        """
+        codec = self._config.codec_for(f"{DOWN}{name}")
+        pkey = self._payload_key(f"{DOWN}{name}")
+        self._plan[pkey] = codec.nbytes(
+            tuple(wire_shape) if wire_shape is not None
+            else tuple(x.shape), x.dtype)
+        self._n_down += 1
+        if isinstance(codec, IdentityCodec):
+            return x  # same object: zero jaxpr change
+        if codec.deterministic:
+            key = jnp.zeros((2,), jnp.uint32)  # unused by codec
+        else:
+            key = jax.random.fold_in(
+                self._key, _DOWNLINK_KEY_STREAM + self._n_down)
+        return codec.roundtrip(key, x)
+
     def weights(self, p: jax.Array) -> jax.Array:
         """Aggregation weights restricted to the delivering cohort."""
         if self.mask is None:
@@ -245,11 +342,18 @@ class _NullComm:
     def uplink(self, name, x, wire_shape=None, ef_eligible=True):
         return x
 
+    def downlink(self, name, x, wire_shape=None):
+        return x
+
     def weights(self, p):
         return p
 
     def where_delivered(self, new, old):
         return new
+
+    @property
+    def memory_out(self):
+        return {}
 
 
 NULL_COMM = _NullComm()
@@ -282,24 +386,35 @@ def probe_round(config: CommConfig, m: int, mask_dtype, plan: Dict[str, int],
 
 
 class CommSession:
-    """Host-side per-trajectory comm state (cohorts, randomness, traces)."""
+    """Host-side per-trajectory comm state (cohorts, randomness, traces).
+
+    Implements the ``Session`` driver protocol (``repro.comm.session``)
+    for the synchronous lock-step clock: ``prepare`` runs the EF shape
+    probe when error feedback is on, ``step`` draws a cohort, executes
+    the jitted round, and accounts it, ``finalize`` folds the traces
+    into the ``Transport`` axes ``History`` carries.
+    """
 
     def __init__(
         self,
         config: CommConfig,
         m: int,
-        downlink_bytes: int,
         mask_dtype=jnp.float64,
+        keys: "jax.Array | None" = None,
+        state0: Any = None,
     ):
         self.config = config
         self.m = m
-        self.downlink_bytes = int(downlink_bytes)
-        # keyed by payload occurrence (``name`` / ``name#i``): a round
-        # uplinking the same name twice accumulates both, it does not
-        # overwrite the first entry
+        # keyed by payload occurrence (``name`` / ``name#i``, downlink
+        # occurrences under ``down:name``): a round uplinking the same
+        # name twice accumulates both, it does not overwrite the first
+        # entry
         self.plan: Dict[str, int] = {}
         self.traces: "list[RoundTrace]" = []
         self.ef_memory: Dict[str, jax.Array] = {}
+        self.keys = keys
+        self._state = state0
+        self._t = 0
         self._root = jax.random.PRNGKey(config.seed)
         self._mask_dtype = mask_dtype
         # static decision: identical jit trace structure for every round
@@ -312,7 +427,41 @@ class CommSession:
         """Exact encoded uplink bytes per delivering client per round,
         summed over every payload occurrence (valid after the first
         round has been traced)."""
-        return int(sum(self.plan.values()))
+        return plan_bytes(self.plan, down=False)
+
+    @property
+    def bytes_down_per_client(self) -> int:
+        """Exact encoded broadcast bytes per scheduled client per round
+        (``down:*`` plan entries; valid after the first trace)."""
+        return plan_bytes(self.plan, down=True)
+
+    # -- Session protocol ----------------------------------------------------
+    def prepare(self, trace_round) -> None:
+        """EF shape discovery (one abstract probe, only when requested —
+        without EF the byte plan fills during the first real trace and
+        the round's jaxpr stays untouched)."""
+        if self.config.has_error_feedback:
+            self.init_error_feedback(trace_round)
+
+    def comm_round(self, memory, mask, codec_key) -> CommRound:
+        """The in-jit transport view ``run_rounds``'s round builder
+        hands to the optimizer (called at trace time)."""
+        return CommRound(self.config, self.plan, mask, codec_key,
+                         memory=memory)
+
+    def step(self, round_fn) -> Any:
+        """One lock-step round: draw cohort, execute, account."""
+        t = self._t
+        mask, ck = self.begin_round(t)
+        self._state, self.ef_memory = round_fn(
+            self._state, self.ef_memory, self.keys[t], mask, ck)
+        self.end_round()
+        self._t += 1
+        return self._state
+
+    def finalize(self) -> Transport:
+        return transport_from_traces(
+            self.traces, ef_residuals=self.ef_residual_norms())
 
     def init_error_feedback(self, trace_round) -> "Dict[str, jax.Array]":
         """Discover EF payload shapes and zero-init the memory pytree.
@@ -358,11 +507,13 @@ class CommSession:
         return jnp.asarray(delivered, dtype=self._mask_dtype), k_codec
 
     def end_round(self) -> RoundTrace:
-        """Account the round just executed (reads the traced byte plan)."""
+        """Account the round just executed (reads the traced byte plan —
+        both directions carry real encoded sizes, downlink included)."""
         t, scheduled, delivered, draw = self._pending
         per_client = float(self.bytes_up_per_client)
         bytes_up = per_client * delivered.astype(np.float64)
-        bytes_down = float(self.downlink_bytes) * scheduled.astype(np.float64)
+        bytes_down = (float(self.bytes_down_per_client)
+                      * scheduled.astype(np.float64))
         sim = self.config.channel.round_time(
             draw, delivered, bytes_up, bytes_down)
         trace = RoundTrace(

@@ -4,11 +4,14 @@
 scheduled, who delivered, exactly how many encoded bytes moved in each
 direction, and the simulated wall-clock the round cost. ``summarize``
 folds a trajectory of traces into the cumulative curves benchmarks plot
-(loss vs transmitted bytes, loss vs simulated time).
+(loss vs transmitted bytes, loss vs simulated time). ``Transport`` is
+the bundle of those curves a ``Session`` hands back to the round driver
+for ``History`` assembly.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -85,7 +88,53 @@ def cumulative_bytes(traces: "list[RoundTrace]") -> np.ndarray:
     return np.concatenate([[0.0], np.cumsum(per_round)])
 
 
+def cumulative_bytes_up(traces: "list[RoundTrace]") -> np.ndarray:
+    """(T+1,) cumulative uplink bytes (all clients) after each round."""
+    per_round = np.array([float(t.bytes_up.sum()) for t in traces])
+    return np.concatenate([[0.0], np.cumsum(per_round)])
+
+
+def cumulative_bytes_down(traces: "list[RoundTrace]") -> np.ndarray:
+    """(T+1,) cumulative downlink (broadcast) bytes after each round."""
+    per_round = np.array([float(t.bytes_down.sum()) for t in traces])
+    return np.concatenate([[0.0], np.cumsum(per_round)])
+
+
 def cumulative_time(traces: "list[RoundTrace]") -> np.ndarray:
     """(T+1,) cumulative simulated seconds after each round."""
     per_round = np.array([t.sim_time_s for t in traces], dtype=np.float64)
     return np.concatenate([[0.0], np.cumsum(per_round)])
+
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """Transport axes one ``Session`` produces for ``History`` assembly.
+
+    ``traces``/``staleness``/``ef_residuals`` are None on the
+    no-transport path (``run_rounds(..., comm=None)``), where the bytes
+    curve is derived from the per-optimizer float formulas instead of
+    encoded wire sizes and simulated time is identically zero.
+    """
+
+    cumulative_bytes: np.ndarray  # (T+1,) up+down, all clients
+    sim_time_s: np.ndarray  # (T+1,) cumulative simulated seconds
+    traces: Optional[list] = None  # per-round RoundTrace records
+    staleness: Optional[np.ndarray] = None  # (T,) mean commit staleness
+    ef_residuals: Optional[dict] = None  # final EF memory norms
+
+
+def transport_from_traces(
+    traces: "list[RoundTrace]",
+    staleness: "np.ndarray | None" = None,
+    ef_residuals: "dict | None" = None,
+) -> Transport:
+    """Fold a trace trajectory into the ``Transport`` axes — the one
+    assembly both transport drivers share, so a new axis cannot be added
+    to one driver's ``History`` and silently missed in the other's."""
+    return Transport(
+        cumulative_bytes=cumulative_bytes(traces),
+        sim_time_s=cumulative_time(traces),
+        traces=traces,
+        staleness=staleness,
+        ef_residuals=ef_residuals,
+    )

@@ -1,0 +1,106 @@
+"""The ``Session`` driver protocol: one round loop, three clocks.
+
+``run_rounds`` used to special-case its three modes (no transport,
+synchronous transport, asynchronous transport) with an isinstance
+ladder. Instead, every mode now implements one small protocol and the
+driver is a single protocol-driven loop:
+
+  * ``prepare(trace_round)`` — trace-time discovery before the first
+      round executes: the async driver probes the payload byte plan
+      (its clock needs encoded sizes up front) and launches the initial
+      cohort; the sync driver probes EF memory shapes when error
+      feedback is on; the null session does nothing.
+  * ``comm_round(memory, mask, codec_key)`` — build the in-jit
+      transport view the optimizer's round receives (``CommRound``, or
+      the no-op ``NULL_COMM`` on the no-transport path). Called at
+      trace time by the driver's uniform round builder.
+  * ``step(round_fn)`` — advance one server round/commit and return the
+      new optimizer state. ``round_fn(state, memory, key, mask,
+      codec_key) -> (state, memory)`` is the one jitted round function
+      shared by every mode.
+  * ``finalize() -> Transport`` — the transport axes (cumulative bytes,
+      simulated time, traces, staleness, EF residuals) for ``History``.
+
+Sessions own the host-side trajectory state (optimizer state between
+rounds, per-round keys, EF memory, clocks); the jitted round function
+stays pure. Adding a fourth driver mode means implementing this
+protocol — not deepening a branch in ``run_rounds``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.comm.async_driver import AsyncSession
+from repro.comm.config import NULL_COMM, CommConfig, CommSession
+from repro.comm.metrics import Transport
+
+
+class Session:
+    """Protocol base for round drivers (see module docstring)."""
+
+    def prepare(self, trace_round) -> None:
+        raise NotImplementedError
+
+    def comm_round(self, memory, mask, codec_key):
+        raise NotImplementedError
+
+    def step(self, round_fn) -> Any:
+        raise NotImplementedError
+
+    def finalize(self) -> Transport:
+        raise NotImplementedError
+
+
+class NullSession(Session):
+    """No-transport driver: rounds execute back to back with the no-op
+    ``NULL_COMM`` view — the exact legacy jaxpr — and the byte axis is
+    derived from the per-optimizer float-count formulas."""
+
+    def __init__(self, keys, state0, formula_bytes_per_round: float):
+        self.keys = keys
+        self._state = state0
+        self._formula = float(formula_bytes_per_round)
+        self._t = 0
+
+    def prepare(self, trace_round) -> None:
+        pass
+
+    def comm_round(self, memory, mask, codec_key):
+        return NULL_COMM
+
+    def step(self, round_fn) -> Any:
+        self._state, _ = round_fn(self._state, {}, self.keys[self._t],
+                                  None, None)
+        self._t += 1
+        return self._state
+
+    def finalize(self) -> Transport:
+        t = self._t
+        return Transport(
+            cumulative_bytes=np.arange(t + 1, dtype=np.float64)
+            * self._formula,
+            sim_time_s=np.zeros(t + 1),
+        )
+
+
+def make_session(
+    comm: Optional[CommConfig],
+    *,
+    m: int,
+    mask_dtype,
+    client_weights: np.ndarray,
+    keys,
+    state0,
+    formula_bytes_per_round: float,
+) -> Session:
+    """Resolve a ``CommConfig`` (or None) to its driver session — the
+    single place mode dispatch happens."""
+    if comm is None:
+        return NullSession(keys, state0, formula_bytes_per_round)
+    if comm.async_mode:
+        return AsyncSession(comm, m=m, client_weights=client_weights,
+                            keys=keys, state0=state0, mask_dtype=mask_dtype)
+    return CommSession(comm, m=m, mask_dtype=mask_dtype, keys=keys,
+                       state0=state0)

@@ -5,7 +5,8 @@ Every algorithm implements:
   * ``init(problem, w0) -> state``          (state is a pytree dict)
   * ``round(problem, state, key, comm=None) -> state``
       (pure, jittable; one comm round — client payloads are routed
-      through ``comm.uplink`` and aggregation weights through
+      through ``comm.uplink``, server broadcasts through
+      ``comm.downlink``, and aggregation weights through
       ``comm.weights`` so codecs / partial participation perturb the
       optimization; ``comm=None`` is the exact legacy path)
   * ``uplink_floats(problem)`` / ``downlink_floats(problem)``
@@ -15,21 +16,22 @@ Every algorithm implements:
 ``state`` always carries the current iterate under key ``"w"``.
 
 ``run_rounds(..., comm=CommConfig(...))`` threads a simulated transport
-(``repro.comm``) through every round: codecs give exact encoded bytes,
-the channel model gives simulated wall-clock with stragglers/dropout,
-and the scheduler picks the per-round cohort. The resulting ``History``
-carries byte-accurate ``cumulative_bytes`` / ``sim_time_s`` axes next to
-the legacy float-count formulas. With ``CommConfig(error_feedback=...)``
-the driver additionally threads the EF21 residual-memory pytree
-(``repro.comm.feedback``) through the jitted round next to the
-optimizer state.
+(``repro.comm``) through every round: codecs give exact encoded bytes
+in BOTH directions (uplink payloads and the server's model broadcast),
+the channel model gives simulated wall-clock with compute, stragglers
+and dropout, and the scheduler picks the per-round cohort. The
+resulting ``History`` carries byte-accurate ``cumulative_bytes`` /
+``sim_time_s`` axes next to the legacy float-count formulas.
 
-With ``CommConfig(async_mode=True)`` the lock-step round loop is
-replaced by the event-driven async driver (``repro.comm.async_driver``):
-one ``History`` entry per *server commit*, ``sim_time_s`` becomes the
-server-clock axis, and ``History.staleness`` records the mean model-lag
-of each commit's cohort. The jitted round function is identical in both
-modes — only the host-side clock differs.
+The loop itself is mode-agnostic: ``make_session`` resolves the
+``CommConfig`` (or None) to a ``Session`` — ``NullSession`` (no
+transport, the exact legacy jaxpr), ``CommSession`` (synchronous
+lock-step), or ``AsyncSession`` (``CommConfig(async_mode=True)``,
+event-driven commits where ``sim_time_s`` becomes the server-clock axis
+and ``History.staleness`` records each commit's mean model lag) — and
+``run_rounds`` drives ``prepare -> step* -> finalize`` identically for
+all three. The jitted round function is shared: only the host-side
+clock differs.
 """
 from __future__ import annotations
 
@@ -41,14 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import (
-    AsyncSession,
-    CommConfig,
-    CommRound,
-    CommSession,
-    cumulative_bytes,
-    cumulative_time,
-)
+from repro.comm import CommConfig, make_session
 from repro.core.federated import FederatedProblem
 
 OptState = Dict[str, Any]
@@ -127,7 +122,8 @@ def run_rounds(
     With ``comm=None`` this is the exact legacy path (identical jaxprs,
     bit-identical trajectories). With a ``CommConfig`` every round flows
     through the simulated transport and the returned ``History`` carries
-    per-round ``RoundTrace`` records.
+    per-round ``RoundTrace`` records. All modes run the same loop: the
+    ``Session`` protocol (``repro.comm.session``) owns the clock.
     """
     loss_fn = jax.jit(problem.global_value)
     grad_fn = jax.jit(problem.global_grad)
@@ -137,86 +133,49 @@ def run_rounds(
     state = opt.init(problem, w0)
     keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
 
-    session = None
-    if comm is None:
-        round_fn = jax.jit(lambda s, k: opt.round(problem, s, k))
-    else:
-        downlink_bytes = opt.downlink_floats(problem) * itemsize
-        if comm.async_mode:
-            session = AsyncSession(
-                comm,
-                m=problem.m,
-                downlink_bytes=downlink_bytes,
-                client_weights=np.asarray(problem.client_weights),
-                keys=keys,
-                mask_dtype=problem.X.dtype,
-            )
-        else:
-            session = CommSession(
-                comm,
-                m=problem.m,
-                downlink_bytes=downlink_bytes,
-                mask_dtype=problem.X.dtype,
-            )
+    formula_bytes = float(
+        (opt.uplink_floats(problem) + opt.downlink_floats(problem))
+        * itemsize * problem.m)
+    session = make_session(
+        comm,
+        m=problem.m,
+        mask_dtype=problem.X.dtype,
+        client_weights=np.asarray(problem.client_weights),
+        keys=keys,
+        state0=state,
+        formula_bytes_per_round=formula_bytes,
+    )
 
-        # EF21 memory rides through the jitted round as a pytree next to
-        # the optimizer state. Without error feedback (or with only
-        # lossless codecs) it is an EMPTY pytree — zero extra jaxpr
-        # inputs, so the identity-codec path stays bit-identical.
-        def _round(s, mem, k, mask, ck):
-            cr = CommRound(comm, session.plan, mask, ck, memory=mem)
-            s_next = opt.round(problem, s, k, comm=cr)
-            return s_next, cr.memory_out
+    # The one jitted round function every driver mode shares. The EF21
+    # memory rides through as a pytree next to the optimizer state;
+    # without error feedback (or with only lossless codecs) it is an
+    # EMPTY pytree — zero extra jaxpr inputs — and on the no-transport
+    # path ``comm_round`` returns the no-op NULL_COMM view, so the
+    # identity/legacy jaxprs stay bit-identical.
+    def _round(s, mem, k, mask, ck):
+        cr = session.comm_round(mem, mask, ck)
+        s_next = opt.round(problem, s, k, comm=cr)
+        return s_next, cr.memory_out
 
-        round_fn = jax.jit(_round)
+    round_fn = jax.jit(_round)
 
-    ef_memory = {}
+    # trace-time discovery (byte plan / EF shapes / async launch): one
+    # abstract probe of the round — nothing executes here (any key
+    # works; shapes don't depend on it, and keys may be empty when
+    # rounds=0)
     probe_key = jax.random.PRNGKey(seed)
-    if isinstance(session, AsyncSession):
-        # the async clock needs the encoded byte plan BEFORE the first
-        # round executes (dispatch times depend on payload bytes), so
-        # one abstract probe fills it — and the EF shapes along the way
-        session.prepare(lambda cr: opt.round(problem, state, probe_key,
-                                             comm=cr))
-        session.start(state)
-    elif session is not None and comm.has_error_feedback:
-        # one abstract probe of the round discovers every EF payload's
-        # (m, ...) shape; nothing executes here (any key works — shapes
-        # don't depend on it, and keys may be empty when rounds=0)
-        ef_memory = session.init_error_feedback(
-            lambda cr: opt.round(problem, state, probe_key, comm=cr))
+    session.prepare(lambda cr: opt.round(problem, state, probe_key, comm=cr))
 
     losses = [float(loss_fn(state["w"]))]
     gnorms = [float(jnp.linalg.norm(grad_fn(state["w"])))]
     t0 = time.perf_counter()
-    for t in range(rounds):
-        if session is None:
-            state = round_fn(state, keys[t])
-        elif isinstance(session, AsyncSession):
-            state = session.step(round_fn)
-        else:
-            mask, ck = session.begin_round(t)
-            state, ef_memory = round_fn(state, ef_memory, keys[t], mask, ck)
-            session.ef_memory = ef_memory
-            session.end_round()
+    for _ in range(rounds):
+        state = session.step(round_fn)
         losses.append(float(loss_fn(state["w"])))
         gnorms.append(float(jnp.linalg.norm(grad_fn(state["w"]))))
     wall = time.perf_counter() - t0
 
-    staleness = None
-    if session is None:
-        per_round = (opt.uplink_floats(problem)
-                     + opt.downlink_floats(problem)) * itemsize * problem.m
-        cum_bytes = np.arange(rounds + 1, dtype=np.float64) * float(per_round)
-        sim_time = np.zeros(rounds + 1)
-        traces = None
-    else:
-        cum_bytes = cumulative_bytes(session.traces)
-        sim_time = cumulative_time(session.traces)
-        traces = session.traces
-        if isinstance(session, AsyncSession):
-            staleness = np.array([tr.mean_staleness for tr in traces])
-
+    transport = session.finalize()
     losses = np.asarray(losses)
     return History(
         name=opt.name,
@@ -227,11 +186,11 @@ def run_rounds(
         downlink_floats=opt.downlink_floats(problem),
         wall_time_s=wall,
         rounds=rounds,
-        cumulative_bytes=cum_bytes,
-        sim_time_s=sim_time,
-        traces=traces,
-        staleness=staleness,
+        cumulative_bytes=transport.cumulative_bytes,
+        sim_time_s=transport.sim_time_s,
+        traces=transport.traces,
+        staleness=transport.staleness,
         clients=problem.m,
         itemsize=itemsize,
-        ef_residuals=session.ef_residual_norms() if session else None,
+        ef_residuals=transport.ef_residuals,
     )

@@ -35,7 +35,8 @@ class FedAvg(FederatedOptimizer):
 
     def round(self, problem, state: OptState, key, comm=None) -> OptState:
         comm = NULL_COMM if comm is None else comm
-        w = state["w"]
+        # clients start their local runs from the decoded broadcast
+        w = comm.downlink("w", state["w"])
 
         def client(Xj, yj, mj):
             def body(wl, _):
@@ -65,7 +66,9 @@ class FedProx(FedAvg):
 
     def round(self, problem, state: OptState, key, comm=None) -> OptState:
         comm = NULL_COMM if comm is None else comm
-        w = state["w"]
+        # the proximal anchor is the same decoded broadcast clients
+        # start from — a client never sees the server's exact iterate
+        w = comm.downlink("w", state["w"])
 
         def client(Xj, yj, mj):
             def body(wl, _):

@@ -106,13 +106,21 @@ class FLeNS(FederatedOptimizer):
         # (1) Nesterov look-ahead (common knowledge: server-known w, w_prev)
         v = w + beta * (w - w_prev)
 
+        # server broadcast: the look-ahead iterate clients compute on,
+        # plus the O(1) sketch seed (lossless by default — a compressed
+        # seed would desynchronize the shared basis). The server keeps
+        # the exact v for its own step; only client-side quantities see
+        # the decoded broadcast.
+        v_bcast = comm.downlink("w", v)
+        key = comm.downlink("seed", key)
+
         # (2) per-round shared sketch, seed broadcast by the server
         s = make_sketch(key, self.sketch, self.k, dim, dtype=dtype)
         sst = s.apply(s.apply_t(jnp.eye(self.k, dtype=dtype)))  # S S^T (k,k)
 
         # client-side: local gradient + two-sided sketched Hessian
-        gs = self._local_grads_at(problem, v)  # (m, M)
-        a = self._local_hess_sqrt_at(problem, v)  # (m, n_shard, M)
+        gs = self._local_grads_at(problem, v_bcast)  # (m, M)
+        a = self._local_hess_sqrt_at(problem, v_bcast)  # (m, n_shard, M)
 
         def client_sketch(aj):
             bj = s.apply(aj)  # A_j S^T : (n_shard, k)
@@ -152,9 +160,14 @@ class FLeNS(FederatedOptimizer):
         # rejected and the momentum killed for the next round — this is what
         # keeps the literal Assumption-A7 momentum (beta ~ 1) stable; see
         # EXPERIMENTS.md §Paper for the unguarded divergence measurement.
-        lv = problem.local_value(w_next)
         if self.restart:
+            # guard broadcast: clients evaluate the candidate iterate,
+            # so the server ships w_next too — a guarded round's real
+            # downlink is 2M + seed, not the M + 1 of the formula
+            lv = problem.local_value(comm.downlink("w_next", w_next))
             lv = comm.uplink("loss", lv)  # the piggybacked scalar
+        else:
+            lv = problem.local_value(w_next)
         loss_next = jnp.sum(p * lv)
         if self.restart:
             # NaN-safe acceptance: a NaN loss is a rejected step, and the

@@ -26,8 +26,11 @@ class FedNewton(FederatedOptimizer):
     def round(self, problem, state: OptState, key, comm=None) -> OptState:
         comm = NULL_COMM if comm is None else comm
         w = state["w"]
-        gs = comm.uplink("grad", problem.local_grad(w))
-        hs = comm.uplink("hess", problem.local_hessian(w))
+        # clients differentiate at the decoded broadcast; the server
+        # steps from its own exact iterate
+        w_bcast = comm.downlink("w", w)
+        gs = comm.uplink("grad", problem.local_grad(w_bcast))
+        hs = comm.uplink("hess", problem.local_hessian(w_bcast))
         p = comm.weights(problem.client_weights)
         g = jnp.einsum("j,jm->m", p, gs)
         h = jnp.einsum("j,jab->ab", p, hs)
@@ -53,12 +56,14 @@ class DistributedNewton(FederatedOptimizer):
     def round(self, problem, state: OptState, key, comm=None) -> OptState:
         comm = NULL_COMM if comm is None else comm
         w = state["w"]
+        w_bcast = comm.downlink("w", w)
         p = comm.weights(problem.client_weights)
-        # phase 1: gradients up, global gradient broadcast back
-        gs = comm.uplink("grad", problem.local_grad(w))
-        g = jnp.einsum("j,jm->m", p, gs)
+        # phase 1: gradients up, global gradient broadcast back — a
+        # genuine second O(M) downlink this round is billed for
+        gs = comm.uplink("grad", problem.local_grad(w_bcast))
+        g = comm.downlink("grad", jnp.einsum("j,jm->m", p, gs))
         # phase 2: local-Newton directions up
-        hs = problem.local_hessian(w)  # (m, M, M)
+        hs = problem.local_hessian(w_bcast)  # (m, M, M)
         dirs = jax.vmap(lambda h: jnp.linalg.solve(h, g))(hs)
         dirs = comm.uplink("dir", dirs)
         d = jnp.einsum("j,jm->m", p, dirs)
@@ -79,7 +84,8 @@ class LocalNewton(FederatedOptimizer):
 
     def round(self, problem, state: OptState, key, comm=None) -> OptState:
         comm = NULL_COMM if comm is None else comm
-        w = state["w"]
+        # clients iterate from the decoded broadcast
+        w = comm.downlink("w", state["w"])
         eye = jnp.eye(problem.dim, dtype=problem.X.dtype)
 
         def client(Xj, yj, mj):
@@ -147,12 +153,16 @@ class FedNew(FederatedOptimizer):
     def round(self, problem, state: OptState, key, comm=None) -> OptState:
         comm = NULL_COMM if comm is None else comm
         w, d_bar, duals = state["w"], state["d_bar"], state["duals"]
-        gs = problem.local_grad(w)  # (m, M)
-        hs = problem.local_hessian(w)  # (m, M, M)
+        # clients receive the model AND the averaged direction — two
+        # O(M) broadcasts per ADMM sweep, both billed
+        w_bcast = comm.downlink("w", w)
+        d_bar_bcast = comm.downlink("d_bar", d_bar)
+        gs = problem.local_grad(w_bcast)  # (m, M)
+        hs = problem.local_hessian(w_bcast)  # (m, M, M)
         eye = jnp.eye(problem.dim, dtype=w.dtype)
 
         def client(hj, gj, yj):
-            rhs = gj + self.rho * d_bar - yj
+            rhs = gj + self.rho * d_bar_bcast - yj
             return jnp.linalg.solve(hj + self.rho * eye, rhs)
 
         ds = jax.vmap(client)(hs, gs, duals)
@@ -206,10 +216,14 @@ class FedNL(FederatedOptimizer):
     def round(self, problem, state: OptState, key, comm=None) -> OptState:
         comm = NULL_COMM if comm is None else comm
         w, B = state["w"], state["B"]
+        # clients differentiate at the decoded broadcast; B needs no
+        # broadcast — clients mirror it from the same compressed updates
+        # the server applies (standard FedNL bookkeeping)
+        w_bcast = comm.downlink("w", w)
         p = comm.weights(problem.client_weights)
-        gs = comm.uplink("grad", problem.local_grad(w))
+        gs = comm.uplink("grad", problem.local_grad(w_bcast))
         g = jnp.einsum("j,jm->m", p, gs)
-        hs = problem.local_hessian(w)  # (m, M, M)
+        hs = problem.local_hessian(w_bcast)  # (m, M, M)
         keys = jax.random.split(key, problem.m)
         comps = jax.vmap(lambda h, k: self._rank1_compress(h - B, k))(hs, keys)
         # native wire format: one (value, vector) eigenpair per client,

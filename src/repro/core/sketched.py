@@ -31,10 +31,14 @@ class FedNS(FederatedOptimizer):
     def round(self, problem, state: OptState, key, comm=None) -> OptState:
         comm = NULL_COMM if comm is None else comm
         w = state["w"]
+        # clients sketch at the decoded broadcast (per-client data-axis
+        # sketches are drawn locally — no basis broadcast needed); the
+        # server steps from its exact iterate
+        w_bcast = comm.downlink("w", w)
         p = comm.weights(problem.client_weights)
-        gs = comm.uplink("grad", problem.local_grad(w))
+        gs = comm.uplink("grad", problem.local_grad(w_bcast))
         g = jnp.einsum("j,jm->m", p, gs)
-        a = problem.local_hess_sqrt(w)  # (m, n_shard, M)
+        a = problem.local_hess_sqrt(w_bcast)  # (m, n_shard, M)
         n_shard = a.shape[1]
         keys = jax.random.split(key, problem.m)
 

@@ -247,6 +247,55 @@ def test_make_staleness_specs():
         make_staleness("bogus")
 
 
+def test_server_lr_default_bit_identical(het_problem):
+    """server_lr=1.0 (the default) must not change a single float — the
+    lock-step fast path stays engaged and async still reproduces sync."""
+    prob, w0, w_star, chan = het_problem
+    sync = run_rounds(_fedavg(), prob, w0, w_star, rounds=4,
+                      comm=CommConfig(channel=chan, seed=1))
+    asy = run_rounds(_fedavg(), prob, w0, w_star, rounds=4,
+                     comm=CommConfig(channel=chan, seed=1, async_mode=True,
+                                     server_lr=1.0))
+    np.testing.assert_array_equal(sync.loss, asy.loss)
+    np.testing.assert_array_equal(sync.cumulative_bytes, asy.cumulative_bytes)
+
+
+def test_server_lr_scales_committed_delta(het_problem):
+    """FedBuff-style global server lr: on a full-quorum fresh commit the
+    applied update is exactly eta_s * (round output - current model)."""
+    prob, w0, w_star, chan = het_problem
+    opt = _fedavg()
+    w1 = opt.round(prob, opt.init(prob, w0), jax.random.PRNGKey(0))["w"]
+    w_half = w0 + 0.5 * (w1 - w0)
+    expect = float(prob.global_value(w_half))
+    asy = run_rounds(_fedavg(), prob, w0, w_star, rounds=1,
+                     comm=CommConfig(channel=chan, seed=1, async_mode=True,
+                                     server_lr=0.5))
+    np.testing.assert_allclose(asy.loss[-1], expect, rtol=1e-12)
+
+
+def test_server_lr_composes_with_staleness_and_converges(het_problem):
+    prob, w0, w_star, chan = het_problem
+    asy = run_rounds(_fedavg(), prob, w0, w_star, rounds=25,
+                     comm=CommConfig(channel=chan, seed=1, async_mode=True,
+                                     buffer_size=4, staleness="inverse",
+                                     server_lr=0.7))
+    assert np.isfinite(asy.loss).all()
+    assert asy.gap[-1] < asy.gap[0] * 0.5
+
+
+def test_server_lr_validation():
+    with pytest.raises(ValueError):
+        CommConfig(async_mode=True, server_lr=0.0)
+    with pytest.raises(ValueError):
+        CommConfig(async_mode=True, server_lr=-0.5)
+    # an async-driver knob: configuring it on the sync driver is an error,
+    # not a silent no-op
+    with pytest.raises(ValueError):
+        CommConfig(server_lr=0.5)
+    assert CommConfig(server_lr=1.0).server_lr == 1.0  # default passes
+
+
 def test_async_config_validation():
     with pytest.raises(ValueError):
         CommConfig(async_mode=True, buffer_size=0)

@@ -164,15 +164,17 @@ def test_session_trajectory_reproducible():
     cfg = dict(codecs="qint8", scheduler="uniform:0.5",
                channel=ChannelModel(dropout_prob=0.2, straggler_prob=0.2),
                seed=3)
-    s1, s2 = CommSession(CommConfig(**cfg), m=16, downlink_bytes=800), \
-        CommSession(CommConfig(**cfg), m=16, downlink_bytes=800)
+    s1, s2 = CommSession(CommConfig(**cfg), m=16), \
+        CommSession(CommConfig(**cfg), m=16)
     for t in range(5):
         m1, _ = s1.begin_round(t)
         m2, _ = s2.begin_round(t)
         np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
         s1.plan["x"] = s2.plan["x"] = 100
+        s1.plan["down:w"] = s2.plan["down:w"] = 800
         t1, t2 = s1.end_round(), s2.end_round()
         np.testing.assert_array_equal(t1.bytes_up, t2.bytes_up)
+        np.testing.assert_array_equal(t1.bytes_down, t2.bytes_down)
         assert t1.sim_time_s == t2.sim_time_s
 
 
@@ -182,23 +184,21 @@ def test_straggler_slows_round_and_dropout_zeroes_bytes():
                         latency_s=0.0, straggler_prob=0.0,
                         straggler_slowdown=25.0)
     cfg = CommConfig(channel=chan)
-    sess = CommSession(cfg, m=m, downlink_bytes=0)
+    sess = CommSession(cfg, m=m)
     sess.begin_round(0)
     sess.plan["x"] = 1000  # 1s per client at 1e3 B/s
     base = sess.end_round().sim_time_s
     slow = CommSession(
         CommConfig(channel=ChannelModel(
             uplink_bytes_per_s=1e3, downlink_bytes_per_s=1e6, latency_s=0.0,
-            straggler_prob=1.0, straggler_slowdown=25.0)), m=m,
-        downlink_bytes=0)
+            straggler_prob=1.0, straggler_slowdown=25.0)), m=m)
     slow.begin_round(0)
     slow.plan["x"] = 1000
     assert slow.end_round().sim_time_s == pytest.approx(25.0 * base)
     # dropped clients transmit nothing
     drop = CommSession(
         CommConfig(scheduler="full",
-                   channel=ChannelModel(dropout_prob=0.5)), m=64,
-        downlink_bytes=0)
+                   channel=ChannelModel(dropout_prob=0.5)), m=64)
     drop.begin_round(0)
     drop.plan["x"] = 10
     tr = drop.end_round()
@@ -245,7 +245,7 @@ def test_channel_all_clients_dropped_round():
     m = 6
     chan = ChannelModel(dropout_prob=1.0, latency_s=0.25,
                         uplink_bytes_per_s=1e3)
-    sess = CommSession(CommConfig(channel=chan), m=m, downlink_bytes=0)
+    sess = CommSession(CommConfig(channel=chan), m=m)
     mask, _ = sess.begin_round(0)
     assert float(np.asarray(mask).sum()) == 1.0  # exactly one re-polled
     assert float(np.asarray(mask)[0]) == 1.0  # lowest-index scheduled
@@ -319,11 +319,19 @@ def test_flens_byte_accounting_matches_payload_shapes(small_problem):
     per_client = (k * k + k + 1) * 8
     tr = hist.traces[0]
     assert (tr.bytes_up == per_client).all()
-    # downlink: model + sketch seed
-    assert (tr.bytes_down == (prob.dim + 1) * 8).all()
+    # downlink, as measured on the wire: look-ahead model (M floats) +
+    # guard candidate w_next (M floats) + the (2,)-uint32 sketch seed —
+    # a guarded round genuinely broadcasts twice, unlike the
+    # ``downlink_floats`` formula's M + 1
+    per_client_down = 2 * prob.dim * 8 + 8
+    assert (tr.bytes_down == per_client_down).all()
     np.testing.assert_allclose(
         hist.cumulative_bytes[-1],
-        3 * prob.m * (per_client + (prob.dim + 1) * 8))
+        3 * prob.m * (per_client + per_client_down))
+    # an unguarded round drops the w_next broadcast
+    bare = run_rounds(make_optimizer("flens", k=k, restart=False), prob, w0,
+                      w_star, rounds=1, comm=CommConfig())
+    assert (bare.traces[0].bytes_down == prob.dim * 8 + 8).all()
 
 
 def test_fednl_billed_at_native_wire_format(small_problem):
@@ -421,19 +429,23 @@ def test_dirichlet_partition_sizes_follow_draw(small_problem):
 
 def test_repeated_payload_name_bytes_accumulate():
     """An optimizer uplinking the same payload name twice in one round
-    must be billed for both occurrences, not just the last one."""
+    must be billed for both occurrences, not just the last one — and
+    downlink occurrences accumulate in their own direction."""
     plan = {}
     cr = CommRound(CommConfig(), plan, None, None)
     x = _payload((3, 10))
     cr.uplink("g", x)
     cr.uplink("g", x)
     cr.uplink("h", x)
-    assert set(plan) == {"g", "g#1", "h"}
-    assert sum(plan.values()) == 3 * 10 * 8
+    cr.downlink("w", x[0])
+    cr.downlink("w", x[0])
+    assert set(plan) == {"g", "g#1", "h", "down:w", "down:w#1"}
+    assert sum(plan.values()) == 3 * 10 * 8 + 2 * 10 * 8
 
-    sess = CommSession(CommConfig(), m=3, downlink_bytes=0)
+    sess = CommSession(CommConfig(), m=3)
     sess.plan.update(plan)
     assert sess.bytes_up_per_client == 3 * 10 * 8
+    assert sess.bytes_down_per_client == 2 * 10 * 8
 
 
 def test_cumulative_uplink_in_bytes_matches_traced(small_problem):
@@ -536,7 +548,7 @@ def test_ef_memory_allocation_per_payload(small_problem):
     def discover(cfg, name, **kw):
         opt = make_optimizer(name, **kw)
         state = opt.init(prob, w0)
-        sess = CommSession(cfg, m=prob.m, downlink_bytes=0)
+        sess = CommSession(cfg, m=prob.m)
         return sess.init_error_feedback(
             lambda cr: opt.round(prob, state, key, comm=cr))
 

@@ -1,0 +1,300 @@
+"""Symmetric transport API tests: downlink broadcast codecs, the
+``Session`` driver protocol, and explicit per-client compute time.
+
+Covers the redesign's contract:
+  * direction-aware codec resolution — ``codecs["down:<name>"]`` / the
+    ``downlink_codecs`` shorthand, with the uplink default never leaking
+    into the broadcast direction;
+  * identity-downlink bit-exactness in BOTH drivers (the symmetric
+    extension of the PR-1 guarantee);
+  * downlink byte accounting cross-checked against codec wire sizes,
+    and ``History`` axes consistency (up + down == total, per round);
+  * one protocol-driven ``run_rounds`` loop — no isinstance driver
+    ladder — with ``NullSession`` / ``CommSession`` / ``AsyncSession``
+    all satisfying ``prepare`` / ``step`` / ``finalize``;
+  * ``ChannelModel.compute_s``: compute time billed explicitly in
+    ``client_times`` for both clocks, without touching trajectories.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (
+    AsyncSession,
+    ChannelModel,
+    CommConfig,
+    CommSession,
+    NullSession,
+    cumulative_bytes_down,
+    cumulative_bytes_up,
+    make_codec,
+    make_session,
+)
+from repro.core import make_optimizer, make_problem, newton_solve, run_rounds
+from repro.core.base import run_rounds as _run_rounds_fn
+from repro.core.losses import logistic
+from repro.data import make_classification
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    X, y = make_classification(jax.random.PRNGKey(3), 600, 24)
+    prob = make_problem(X, y, m=6, lam=1e-3, objective=logistic)
+    w0 = jnp.zeros(prob.dim, jnp.float64)
+    w_star = newton_solve(prob, w0, iters=30)
+    return prob, w0, w_star
+
+
+# ---------------------------------------------------------------------------
+# direction-aware codec resolution
+# ---------------------------------------------------------------------------
+
+def test_downlink_codec_resolution_is_direction_aware():
+    # uplink compression never leaks into the broadcast direction
+    cfg = CommConfig(codecs="qint8")
+    assert cfg.codec_for("w_local").name == "qint8"
+    assert cfg.codec_for("down:w").name == "identity"
+
+    # the shorthand covers the downlink default only
+    cfg = CommConfig(downlink_codecs="bf16")
+    assert cfg.codec_for("down:w").name == "bf16"
+    assert cfg.codec_for("down:anything").name == "bf16"
+    assert cfg.codec_for("w_local").name == "identity"
+
+    # per-name shorthand merges under the down: prefix; explicit codecs
+    # entries win on conflict; the sketch seed stays lossless by default
+    cfg = CommConfig(codecs={"down:w": "qint8"},
+                     downlink_codecs={"w": "bf16", "grad": "fp16"})
+    assert cfg.codec_for("down:w").name == "qint8"
+    assert cfg.codec_for("down:grad").name == "fp16"
+    assert cfg.codec_for("down:seed").name == "identity"
+
+    # ...unless overridden explicitly (their foot)
+    cfg = CommConfig(codecs={"down:seed": "bf16"})
+    assert cfg.codec_for("down:seed").name == "bf16"
+
+
+def test_codecs_dict_not_mutated_across_configs():
+    """Configs sharing one codec-spec dict must not contaminate each
+    other: the downlink_codecs merge works on a private copy."""
+    shared = {"h_sk": "sympack+qint8"}
+    plain = CommConfig(codecs=shared)
+    with_down = CommConfig(codecs=shared, downlink_codecs="bf16")
+    assert with_down.codec_for("down:w").name == "bf16"
+    assert plain.codec_for("down:w").name == "identity"
+    assert "down:default" not in shared
+
+
+# ---------------------------------------------------------------------------
+# identity-downlink bit-exactness, sync and async
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kw", [
+    ("flens", dict(k=8)), ("fedavg", {}), ("distributed_newton", {}),
+    ("fednew", {}),
+])
+def test_identity_downlink_bit_exact_sync_and_async(small_problem, name, kw):
+    """Explicit identity downlink codecs reproduce the no-comm
+    trajectory bit-for-bit through both drivers."""
+    prob, w0, w_star = small_problem
+    h0 = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=3)
+    h1 = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=3,
+                    comm=CommConfig(downlink_codecs="identity"))
+    np.testing.assert_array_equal(h0.loss, h1.loss)
+    np.testing.assert_array_equal(h0.grad_norm, h1.grad_norm)
+    h2 = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=3,
+                    comm=CommConfig(downlink_codecs="identity",
+                                    async_mode=True))
+    np.testing.assert_array_equal(h0.loss, h2.loss)
+    np.testing.assert_array_equal(h1.cumulative_bytes, h2.cumulative_bytes)
+
+
+# ---------------------------------------------------------------------------
+# downlink byte accounting
+# ---------------------------------------------------------------------------
+
+def test_downlink_bytes_match_codec_wire_sizes(small_problem):
+    prob, w0, w_star = small_problem
+    M = prob.dim
+    f64 = jnp.float64
+
+    # fedavg broadcasts exactly the model: bf16 halves-of-halves it
+    hist = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=2,
+                      comm=CommConfig(downlink_codecs="bf16"))
+    assert (hist.traces[0].bytes_down
+            == make_codec("bf16").nbytes((M,), f64)).all()
+
+    # qint8 broadcast: 1 byte per entry + one fp32 scale
+    hist = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=2,
+                      comm=CommConfig(downlink_codecs="qint8", seed=1))
+    assert (hist.traces[0].bytes_down == M + 4).all()
+
+    # guarded flens broadcasts w AND w_next (both priced by the codec)
+    # plus the lossless (2,)-uint32 sketch seed
+    hist = run_rounds(make_optimizer("flens", k=8), prob, w0, w_star,
+                      rounds=2, comm=CommConfig(downlink_codecs="bf16"))
+    assert (hist.traces[0].bytes_down == 2 * (M * 2) + 8).all()
+
+    # uplink accounting is untouched by downlink codecs
+    ident = run_rounds(make_optimizer("flens", k=8), prob, w0, w_star,
+                       rounds=2, comm=CommConfig())
+    np.testing.assert_array_equal(hist.traces[0].bytes_up,
+                                  ident.traces[0].bytes_up)
+
+
+def test_history_axes_match_directional_trace_sums(small_problem):
+    """`History.cumulative_bytes` is exactly the sum of the two
+    per-direction trace curves, in every mode and under lossy codecs +
+    partial participation."""
+    prob, w0, w_star = small_problem
+    for comm in (
+        CommConfig(seed=1),
+        CommConfig(codecs="qint8", downlink_codecs="bf16",
+                   scheduler="uniform:0.7",
+                   channel=ChannelModel(dropout_prob=0.1), seed=1),
+        CommConfig(codecs="qint8", downlink_codecs="bf16", async_mode=True,
+                   buffer_size=3, channel=ChannelModel(straggler_prob=0.3),
+                   seed=1),
+    ):
+        hist = run_rounds(make_optimizer("fedavg"), prob, w0, w_star,
+                          rounds=5, comm=comm)
+        up = cumulative_bytes_up(hist.traces)
+        down = cumulative_bytes_down(hist.traces)
+        np.testing.assert_allclose(hist.cumulative_bytes, up + down)
+        assert down[-1] > 0 and up[-1] > 0
+        total = sum(float(t.bytes_up.sum() + t.bytes_down.sum())
+                    for t in hist.traces)
+        assert float(hist.cumulative_bytes[-1]) == total
+
+
+def test_lossy_downlink_saves_bytes_and_time_and_converges(small_problem):
+    """A bf16 broadcast strictly lowers both transport axes at a bounded
+    loss penalty — the benchmark acceptance criterion, in miniature."""
+    prob, w0, w_star = small_problem
+    chan = ChannelModel(uplink_bytes_per_s=1e4, downlink_bytes_per_s=1e5)
+    ident = run_rounds(make_optimizer("fedavg", lr=2.0, local_steps=5),
+                       prob, w0, w_star, rounds=8,
+                       comm=CommConfig(channel=chan, seed=1))
+    lossy = run_rounds(make_optimizer("fedavg", lr=2.0, local_steps=5),
+                       prob, w0, w_star, rounds=8,
+                       comm=CommConfig(downlink_codecs="bf16", channel=chan,
+                                       seed=1))
+    assert lossy.cumulative_bytes[-1] < ident.cumulative_bytes[-1]
+    assert lossy.sim_time_s[-1] < ident.sim_time_s[-1]
+    assert np.isfinite(lossy.loss).all()
+    assert lossy.gap[-1] < lossy.gap[0] * 0.5  # still converges
+    assert abs(lossy.loss[-1] - ident.loss[-1]) < 1e-2  # bounded gap
+
+
+def test_lossy_downlink_lockstep_matches_sync(small_problem):
+    """Both drivers price and apply downlink codecs identically on the
+    lock-step-equivalent path (stochastic broadcast included)."""
+    prob, w0, w_star = small_problem
+    cfg = dict(downlink_codecs="qint8", codecs={"h_sk": "sympack+qint8"},
+               channel=ChannelModel(straggler_prob=0.3), seed=3)
+    sync = run_rounds(make_optimizer("flens", k=8), prob, w0, w_star,
+                      rounds=3, comm=CommConfig(**cfg))
+    asy = run_rounds(make_optimizer("flens", k=8), prob, w0, w_star,
+                     rounds=3, comm=CommConfig(async_mode=True, **cfg))
+    np.testing.assert_array_equal(sync.loss, asy.loss)
+    np.testing.assert_array_equal(sync.cumulative_bytes, asy.cumulative_bytes)
+
+
+# ---------------------------------------------------------------------------
+# the Session protocol
+# ---------------------------------------------------------------------------
+
+def test_run_rounds_has_no_isinstance_driver_branching():
+    """The driver loop is protocol-driven: mode dispatch lives in
+    ``make_session``, not in an isinstance ladder inside run_rounds."""
+    src = inspect.getsource(_run_rounds_fn)
+    assert "isinstance" not in src
+    assert "make_session" in src
+
+
+def test_all_sessions_implement_the_protocol(small_problem):
+    prob, w0, w_star = small_problem
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    kw = dict(m=prob.m, mask_dtype=prob.X.dtype,
+              client_weights=np.asarray(prob.client_weights), keys=keys,
+              state0={"w": w0}, formula_bytes_per_round=1.0)
+    null = make_session(None, **kw)
+    sync = make_session(CommConfig(), **kw)
+    asyn = make_session(CommConfig(async_mode=True), **kw)
+    assert isinstance(null, NullSession)
+    assert isinstance(sync, CommSession)
+    assert isinstance(asyn, AsyncSession)
+    for sess in (null, sync, asyn):
+        for method in ("prepare", "comm_round", "step", "finalize"):
+            assert callable(getattr(sess, method)), (sess, method)
+
+
+def test_null_session_formula_axes(small_problem):
+    """comm=None still derives the byte curve from the float formulas
+    (all clients, raw dtype width) with zero simulated time."""
+    prob, w0, w_star = small_problem
+    opt = make_optimizer("fedavg")
+    hist = run_rounds(opt, prob, w0, w_star, rounds=4)
+    per_round = (opt.uplink_floats(prob) + opt.downlink_floats(prob)) \
+        * 8 * prob.m
+    np.testing.assert_allclose(hist.cumulative_bytes,
+                               np.arange(5) * float(per_round))
+    np.testing.assert_array_equal(hist.sim_time_s, np.zeros(5))
+    assert hist.traces is None and hist.staleness is None
+    assert hist.ef_residuals is None
+
+
+# ---------------------------------------------------------------------------
+# explicit per-client compute time (ChannelModel.compute_s)
+# ---------------------------------------------------------------------------
+
+def test_compute_s_enters_client_times():
+    m = 4
+    base = ChannelModel(uplink_bytes_per_s=1e3, downlink_bytes_per_s=1e4,
+                        latency_s=0.1)
+    busy = ChannelModel(uplink_bytes_per_s=1e3, downlink_bytes_per_s=1e4,
+                        latency_s=0.1, compute_s=2.0)
+    draw = base.draw(jax.random.PRNGKey(0), m)
+    bytes_up = np.full(m, 1000.0)
+    bytes_down = np.full(m, 500.0)
+    t0 = base.client_times(draw, bytes_up, bytes_down)
+    t1 = busy.client_times(draw, bytes_up, bytes_down)
+    np.testing.assert_allclose(t1 - t0, 2.0)
+    # per-client heterogeneity: (m,) arrays broadcast, wrong shapes fail
+    per = ChannelModel(compute_s=np.arange(1.0, 5.0))
+    np.testing.assert_allclose(per.compute_times(4), [1.0, 2.0, 3.0, 4.0])
+    with pytest.raises(ValueError):
+        per.compute_times(8)
+    # stragglers slow the whole cycle, compute included
+    slow = ChannelModel(uplink_bytes_per_s=1e3, latency_s=0.0,
+                        compute_s=1.0, straggler_prob=1.0,
+                        straggler_slowdown=10.0)
+    draw = slow.draw(jax.random.PRNGKey(1), m)
+    t = slow.client_times(draw, np.zeros(m), np.zeros(m))
+    np.testing.assert_allclose(t, 10.0)
+
+
+def test_compute_s_shifts_sim_time_not_trajectory(small_problem):
+    """Compute time is a clock effect in both drivers: identical losses,
+    strictly larger sim_time_s, and the sync round_time grows by exactly
+    the (unstraggled) compute term."""
+    prob, w0, w_star = small_problem
+    fast = ChannelModel()
+    busy = ChannelModel(compute_s=3.0)
+    a = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=3,
+                   comm=CommConfig(channel=fast, seed=1))
+    b = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=3,
+                   comm=CommConfig(channel=busy, seed=1))
+    np.testing.assert_array_equal(a.loss, b.loss)
+    np.testing.assert_allclose(np.diff(b.sim_time_s) - np.diff(a.sim_time_s),
+                               3.0)
+    # async: per-client clocks advance with compute, trajectory intact
+    a2 = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=3,
+                    comm=CommConfig(channel=fast, seed=1, async_mode=True))
+    b2 = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=3,
+                    comm=CommConfig(channel=busy, seed=1, async_mode=True))
+    np.testing.assert_array_equal(a2.loss, b2.loss)
+    assert b2.sim_time_s[-1] > a2.sim_time_s[-1]
