@@ -148,7 +148,16 @@ def bench_comm(full: bool) -> None:
     records how much of the compression floor EF21 memory recovers at
     identical byte cost. Also asserts the backward-compat contract:
     identity codec + full participation reproduces the no-comm
-    trajectory exactly."""
+    trajectory exactly.
+
+    The sketch-policy axis (``SketchPolicy`` spec per variant) rides in
+    every record; its headline is the ``flens_rot_ef`` pair: the same
+    top-k-crushed sketch payloads under a fresh per-round basis (EF
+    requested but ineligible — cross-round memory is meaningless there)
+    vs a rotating ``srht:rotate=8`` basis (EF eligible by
+    ``basis_persistent``), asserted strictly lower loss at exactly
+    equal bytes — the cross-round sketch closing the sketch-payload
+    compression floor the PR-2 ROADMAP item predicted."""
     from benchmarks.paper_common import (
         build_problem, ef_gap_shrink, ef_ratio_label, run_method)
     from repro.comm import ChannelModel, CommConfig, summarize
@@ -181,6 +190,9 @@ def bench_comm(full: bool) -> None:
         f"bytes ({traced_up})")
 
     channel = ChannelModel(dropout_prob=0.10, straggler_prob=0.10)
+    # the sketch-policy pair: identical top-k-crushed sketch payloads,
+    # fresh vs rotating basis — only the rotating one can use EF
+    sketch_topk = {"h_sk": "topk0.25", "sg": "topk0.5"}
     variants = [
         ("flens_identity", "flens", dict(k=k),
          CommConfig(channel=channel, seed=1)),
@@ -191,6 +203,15 @@ def bench_comm(full: bool) -> None:
         # (identity uplink, so the saving is purely downlink)
         ("flens_down_bf16", "flens", dict(k=k), CommConfig(
             downlink_codecs="bf16", channel=channel, seed=1)),
+        # the policy axis: EF is requested in BOTH runs; the fresh basis
+        # is ineligible (basis_persistent -> False), the rotating basis
+        # carries EF21 memory on h_sk/sg across its 8-round epochs
+        ("flens_fresh_topk", "flens", dict(k=k, sketch="srht"), CommConfig(
+            codecs=sketch_topk, error_feedback=True, channel=channel,
+            seed=1)),
+        ("flens_rot_ef", "flens", dict(k=k, sketch="srht:rotate=8"),
+         CommConfig(codecs=sketch_topk, error_feedback=True,
+                    channel=channel, seed=1)),
         # EF on/off under a biased codec that actually bites: fedavg's
         # O(M) model uplink at topk0.05 (5% of coordinates per round)
         ("fedavg_identity", "fedavg", dict(lr=2.0, local_steps=5),
@@ -204,11 +225,13 @@ def bench_comm(full: bool) -> None:
     out = {"dataset": spec.name, "rounds": rounds, "k": k, "variants": {}}
     finals = {}
     for name, opt_name, opt_kw, comm in variants:
-        hist = run_rounds(make_optimizer(opt_name, **opt_kw), prob, w0,
-                          w_star, rounds=rounds, comm=comm)
+        opt = make_optimizer(opt_name, **opt_kw)
+        policy = getattr(opt, "policy", None)
+        hist = run_rounds(opt, prob, w0, w_star, rounds=rounds, comm=comm)
         stats = summarize(hist.traces)
         finals[name] = float(hist.loss[-1])
         out["variants"][name] = {
+            "policy": policy.spec() if policy is not None else None,
             "gap": hist.gap.tolist(),
             "loss_final": float(hist.loss[-1]),
             "cumulative_bytes": hist.cumulative_bytes.tolist(),
@@ -216,12 +239,13 @@ def bench_comm(full: bool) -> None:
             "stats": stats,
             "ef_residuals": hist.ef_residuals,
         }
+        policy_label = f";policy={policy.spec()}" if policy is not None else ""
         _csv(
             f"comm/{name}",
             hist.wall_time_s / rounds * 1e6,
             f"gap_final={hist.gap[-1]:.3e};"
             f"total_MB={hist.cumulative_bytes[-1] / 1e6:.3f};"
-            f"sim_s={hist.sim_time_s[-1]:.2f}",
+            f"sim_s={hist.sim_time_s[-1]:.2f}" + policy_label,
         )
     ident_b = out["variants"]["flens_identity"]["cumulative_bytes"][-1]
     packed_b = out["variants"]["flens_sympack_qint8"]["cumulative_bytes"][-1]
@@ -255,6 +279,35 @@ def bench_comm(full: bool) -> None:
         f"sim_time_s: {out['downlink']}")
     assert np.isfinite(gap_dn) and gap_dn < max(10.0 * gap_id, 1e-2), (
         f"bf16 broadcast loss gap unbounded: {gap_dn} vs identity {gap_id}")
+
+    # sketch-policy acceptance: rotating-SRHT + EF21 must strictly beat
+    # the fresh basis at EXACTLY equal bytes — EF never changes encoded
+    # sizes, and both runs crush h_sk/sg with the same top-k codecs, so
+    # the whole loss difference is the cross-round basis unlocking EF
+    fresh_v = out["variants"]["flens_fresh_topk"]
+    rot_v = out["variants"]["flens_rot_ef"]
+    bytes_equal = fresh_v["cumulative_bytes"] == rot_v["cumulative_bytes"]
+    gap_fresh, gap_rot = float(fresh_v["gap"][-1]), float(rot_v["gap"][-1])
+    out["rot_ef"] = {
+        "policy_fresh": fresh_v["policy"],
+        "policy_rot": rot_v["policy"],
+        "gap_fresh": gap_fresh,
+        "gap_rot": gap_rot,
+        "bytes": rot_v["cumulative_bytes"][-1],
+        "bytes_equal": bool(bytes_equal),
+        "ef_residuals_rot": rot_v["ef_residuals"],
+    }
+    _csv("comm/flens_rot_ef_closes_sketch_floor", 0.0,
+         f"gap_fresh={gap_fresh:.3e};gap_rot={gap_rot:.3e};"
+         f"ratio={gap_fresh / max(gap_rot, 1e-30):.2f}x;"
+         f"equal_bytes={bool(bytes_equal)};"
+         f"strictly_lower={bool(gap_rot < gap_fresh)}")
+    assert bytes_equal, (
+        "rotating-basis run must cost exactly the bytes of the fresh-basis "
+        "run (EF and the schedule change values, never sizes)")
+    assert finals["flens_rot_ef"] < finals["flens_fresh_topk"], (
+        f"rotating-SRHT + EF did not beat the fresh basis at equal bytes: "
+        f"{finals['flens_rot_ef']} vs {finals['flens_fresh_topk']}")
     # EF's headline number: how much of the loss gap to the
     # no-compression baseline the memory recovers (same encoded bytes)
     shrink = ef_gap_shrink(finals["fedavg_identity"],

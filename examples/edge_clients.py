@@ -13,6 +13,20 @@ the payload top-k sparsification targets):
   * comp+sched    — compressed + bandwidth-aware 50% participation
   * comp+sched+ef — comp+sched with EF21 error feedback on the lossy
                     fixed-basis payload (the top-k complement gradient)
+  * crush+sched   — the sketch payloads themselves top-k-crushed
+                    (biased compression on h_sk/sg); EF is requested but
+                    the fresh per-round basis is ineligible, so the
+                    sketch bias goes uncorrected
+  * crush+rot+ef  — same crushed codecs under a rotating sketch policy
+                    (``sketch="srht:rotate=6"``): the basis persists
+                    across 6-round epochs, so ``basis_persistent`` makes
+                    h_sk/sg EF-eligible and the memory cancels the top-k
+                    bias — identical bytes, lower loss. The epoch is
+                    longer than the comm benchmark's rotate=8-on-full-
+                    participation setting per *memory update*: under the
+                    50% scheduler a client's EF memory only advances on
+                    the rounds it participates, so each epoch must span
+                    several participation cycles for EF21 to contract
 
 and reports bytes and *simulated wall-clock* to a fixed optimality gap:
 on slow links the compressed transport reaches the target in a fraction
@@ -89,34 +103,54 @@ def main() -> None:
         "sg": "qint8",  # sketched gradient
         "grad": "topk0.1+qint8",  # FLeNS+ complement gradient (the O(M) term)
     }
+    crushed = {
+        "h_sk": "topk0.25",  # BIASED sketch-Hessian compression: only a
+        "sg": "topk0.5",  # rotating basis lets EF cancel the bias
+        "grad": "topk0.1+qint8",
+    }
     transports = [
-        ("raw", CommConfig(channel=chan, seed=1)),
-        ("compressed", CommConfig(codecs=compressed, channel=chan, seed=1)),
+        ("raw", "srht", CommConfig(channel=chan, seed=1)),
+        ("compressed", "srht",
+         CommConfig(codecs=compressed, channel=chan, seed=1)),
         # + the symmetric direction: bf16 model broadcast (the downlink
         # is 10x faster here, so bytes drop more than sim time does)
-        ("comp+down", CommConfig(codecs=compressed, downlink_codecs="bf16",
-                                 channel=chan, seed=1)),
-        ("comp+sched", CommConfig(codecs=compressed, channel=chan,
-                                  scheduler="bandwidth:0.5", seed=1)),
-        ("comp+sched+ef", CommConfig(codecs=compressed, channel=chan,
-                                     scheduler="bandwidth:0.5",
-                                     error_feedback=True, seed=1)),
+        ("comp+down", "srht",
+         CommConfig(codecs=compressed, downlink_codecs="bf16",
+                    channel=chan, seed=1)),
+        ("comp+sched", "srht", CommConfig(codecs=compressed, channel=chan,
+                                          scheduler="bandwidth:0.5", seed=1)),
+        ("comp+sched+ef", "srht",
+         CommConfig(codecs=compressed, channel=chan,
+                    scheduler="bandwidth:0.5", error_feedback=True, seed=1)),
+        # + the sketch-policy axis, where it actually bites: BIASED
+        # (top-k) compression on the sketch payloads themselves. With a
+        # fresh basis the bias is uncorrectable (EF ineligible); a
+        # rotating basis keeps h_sk/sg in a stable coordinate system for
+        # 6-round epochs, so the same EF request now covers them too —
+        # identical bytes, lower loss
+        ("crush+sched", "srht",
+         CommConfig(codecs=crushed, channel=chan,
+                    scheduler="bandwidth:0.5", error_feedback=True, seed=1)),
+        ("crush+rot+ef", "srht:rotate=6",
+         CommConfig(codecs=crushed, channel=chan,
+                    scheduler="bandwidth:0.5", error_feedback=True, seed=1)),
     ]
 
     print(f"=== {spec.name}: M={prob.dim} m={prob.m} k={k} | 20% stragglers, "
           f"10% dropout, dirichlet shards ===")
-    print(f"{'transport':>13} {'gap_final':>10} {'MB_total':>9} "
+    print(f"{'transport':>13} {'policy':>14} {'gap_final':>10} {'MB_total':>9} "
           f"{'sim_s':>8} {'rounds<=%.0e' % args.gap:>12} {'sim_s<=gap':>10}")
     out = {}
-    for name, comm in transports:
-        hist = run_rounds(make_optimizer("flens_plus", k=k), prob, w0, w_star,
-                          rounds=args.rounds, comm=comm)
+    for name, sketch, comm in transports:
+        hist = run_rounds(make_optimizer("flens_plus", k=k, sketch=sketch),
+                          prob, w0, w_star, rounds=args.rounds, comm=comm)
         r_hit = rounds_to_gap(hist, args.gap)
         sim_hit = hist.sim_time_s[r_hit] if r_hit >= 0 else float("nan")
-        print(f"{name:>13} {hist.gap[-1]:>10.2e} "
+        print(f"{name:>13} {sketch:>14} {hist.gap[-1]:>10.2e} "
               f"{hist.cumulative_bytes[-1] / 1e6:>9.3f} "
               f"{hist.sim_time_s[-1]:>8.1f} {r_hit:>12d} {sim_hit:>10.1f}")
         out[name] = hist_record(hist)
+        out[name]["policy"] = sketch
 
     # --- error feedback vs the compression floor (FedAvg, O(M) uplink) ---
     # topk0.05 keeps 5% of model coordinates per round; without EF the

@@ -80,6 +80,10 @@ from repro.comm.metrics import RoundTrace
 # forever under dropout_prob -> 1.0
 MAX_RETRIES = 8
 
+# begin_variant sentinel: "no variant announced yet" (None is a valid
+# round signature — the default single-trace trajectory)
+_NO_VARIANT = object()
+
 
 def make_staleness(spec: "str | Callable[[float], float]"):
     """Resolve a staleness-weighting spec to a ``tau -> weight`` callable.
@@ -169,6 +173,7 @@ class AsyncSession:
         self._quorum_capped = False
         self._pending_down = np.zeros(m, dtype=np.float64)
         self._pending_dropped = np.zeros(m, dtype=bool)
+        self._variant_sig: Any = _NO_VARIANT
 
     # -- key schedule (matches CommSession.begin_round exactly) -------------
     def _round_keys(self, version: int):
@@ -204,6 +209,21 @@ class AsyncSession:
         self.ef_memory = feedback.init_memory(spec)
         if self._state0 is not None:
             self.start(self._state0)
+
+    def begin_variant(self, sig, trace_round) -> None:
+        """The async clock prices in-flight uploads at dispatch time, so
+        the payload plan must stay constant for the whole trajectory:
+        the first announced variant is accepted (its plan was already
+        probed by ``prepare``), any later change — an adaptive-k policy
+        resizing payloads mid-run — is rejected."""
+        if self._variant_sig is _NO_VARIANT:
+            self._variant_sig = sig
+        elif sig != self._variant_sig:
+            raise NotImplementedError(
+                "round-varying payload plans (adaptive-k sketch policies) "
+                "are not supported by the asynchronous driver: uploads "
+                "already in flight were priced at dispatch time; use the "
+                "synchronous driver")
 
     def comm_round(self, memory, mask, codec_key):
         """In-jit transport view for the driver's round builder."""

@@ -71,6 +71,10 @@ _LOSSLESS_BY_DEFAULT = ("loss", "down:seed")
 # of downlink payloads)
 _DOWNLINK_KEY_STREAM = 1 << 20
 
+# begin_variant sentinel: "no variant announced yet" (None is a valid
+# round signature — the default single-trace trajectory)
+_NO_VARIANT = object()
+
 
 def plan_bytes(plan: "Dict[str, int]", *, down: bool) -> int:
     """Sum one direction of a payload byte plan (keys are payload
@@ -244,7 +248,8 @@ class CommRound:
 
     def uplink(self, name: str, x: jax.Array,
                wire_shape: "tuple | None" = None,
-               ef_eligible: bool = True) -> jax.Array:
+               ef_eligible: bool = True,
+               ef_reset=None) -> jax.Array:
         """Route a stacked per-client payload ``x: (m, ...)`` through its
         codec's simulated encode→decode; records exact encoded bytes.
 
@@ -257,7 +262,15 @@ class CommRound:
         ``ef_eligible=False`` declares that this payload's coordinate
         system is redrawn every round (two-sided sketches): cross-round
         error-feedback memory would mix incompatible bases, so EF is
-        skipped for it even when ``CommConfig.error_feedback`` asks."""
+        skipped for it even when ``CommConfig.error_feedback`` asks.
+
+        ``ef_reset`` (a traced 0/1 scalar, or None) zeroes the EF memory
+        BEFORE compensating: rotating sketch schedules pass
+        ``SketchPolicy.ef_reset(t)`` so the residual accumulated in the
+        previous epoch's basis is discarded the round the basis
+        rotates, instead of being injected into the new basis. The
+        reset is a pure function of the round index and the declared
+        schedule, so the server's estimate resets in lock-step."""
         codec = self._config.codec_for(name)
         pkey = self._payload_key(name)
         self._plan[pkey] = codec.nbytes(
@@ -275,13 +288,21 @@ class CommRound:
             base = jax.random.fold_in(self._key, self._n_payloads)
             keys = jax.random.split(base, x.shape[0])
         if ef and pkey in self.memory_out:
+            mem = self.memory_out[pkey]
+            if ef_reset is not None:
+                # basis rotated: the residual's coordinate system is
+                # stale — compensate from a zeroed memory this round
+                mem = mem * (1 - jnp.asarray(ef_reset, mem.dtype))
             decoded, mem_new = feedback.compensate(
-                codec, keys, x, self.memory_out[pkey],
+                codec, keys, x, mem,
                 variant=self._config.ef_variant)
             # dropped clients never ran the round: freeze their memory
-            # rows with the same gate that protects optimizer state
-            self.memory_out[pkey] = self.where_delivered(
-                mem_new, self.memory_out[pkey])
+            # rows with the same gate that protects optimizer state.
+            # The frozen fallback is the post-reset ``mem``: the basis
+            # rotation is schedule knowledge, not computation — a client
+            # absent on the boundary round must still drop its old-epoch
+            # residual, or it would compensate into the new basis later.
+            self.memory_out[pkey] = self.where_delivered(mem_new, mem)
             return decoded
         return jax.vmap(codec.roundtrip)(keys, x)
 
@@ -339,7 +360,8 @@ class _NullComm:
 
     mask = None
 
-    def uplink(self, name, x, wire_shape=None, ef_eligible=True):
+    def uplink(self, name, x, wire_shape=None, ef_eligible=True,
+               ef_reset=None):
         return x
 
     def downlink(self, name, x, wire_shape=None):
@@ -408,8 +430,13 @@ class CommSession:
         # keyed by payload occurrence (``name`` / ``name#i``, downlink
         # occurrences under ``down:name``): a round uplinking the same
         # name twice accumulates both, it does not overwrite the first
-        # entry
+        # entry. The dict OBJECT is stable for the whole trajectory
+        # (traced rounds close over it); ``begin_variant`` swaps its
+        # CONTENTS when an adaptive sketch policy changes payload sizes,
+        # so per-round accounting follows the active variant.
         self.plan: Dict[str, int] = {}
+        self._plans: "Dict[Any, Dict[str, int]]" = {}
+        self._variant: Any = _NO_VARIANT
         self.traces: "list[RoundTrace]" = []
         self.ef_memory: Dict[str, jax.Array] = {}
         self.keys = keys
@@ -442,6 +469,32 @@ class CommSession:
         the round's jaxpr stays untouched)."""
         if self.config.has_error_feedback:
             self.init_error_feedback(trace_round)
+
+    def begin_variant(self, sig, trace_round) -> None:
+        """Install the payload byte plan of the round variant about to
+        run. The first variant keeps the lazy pre-policy behavior (the
+        plan fills during the first real jit trace — no extra abstract
+        interpretation on the common single-variant path); when a
+        SECOND variant appears (adaptive-k changed payload sizes), the
+        outgoing plan is snapshotted and the new variant is probed once
+        (``jax.eval_shape`` — nothing executes) and cached, so
+        ``end_round`` bills round-varying sizes truthfully even when a
+        jitted trace is reused."""
+        if self._variant is _NO_VARIANT:
+            self._variant = sig
+            return
+        if sig == self._variant:
+            return
+        self._plans[self._variant] = dict(self.plan)
+        plan = self._plans.get(sig)
+        if plan is None:
+            plan = {}
+            probe_round(self.config, self.m, self._mask_dtype, plan,
+                        trace_round, full_cohort=self._always_full)
+            self._plans[sig] = plan
+        self.plan.clear()
+        self.plan.update(plan)
+        self._variant = sig
 
     def comm_round(self, memory, mask, codec_key) -> CommRound:
         """The in-jit transport view ``run_rounds``'s round builder

@@ -10,6 +10,16 @@ driver is a single protocol-driven loop:
       (its clock needs encoded sizes up front) and launches the initial
       cohort; the sync driver probes EF memory shapes when error
       feedback is on; the null session does nothing.
+  * ``begin_variant(sig, trace_round)`` — announce the static round
+      variant about to execute (adaptive-k sketch policies change
+      payload sizes mid-trajectory; ``sig`` comes from
+      ``FederatedOptimizer.round_signature``). Sessions probe each new
+      variant's payload byte plan once (``jax.eval_shape`` — nothing
+      executes) and install it, so per-round accounting bills the true
+      round-varying sizes: the null session derives its formula bytes
+      from an identity-codec plan, the sync session swaps its live plan
+      per variant, and the async session rejects mid-run variant
+      changes (its clock prices in-flight uploads at dispatch time).
   * ``comm_round(memory, mask, codec_key)`` — build the in-jit
       transport view the optimizer's round receives (``CommRound``, or
       the no-op ``NULL_COMM`` on the no-transport path). Called at
@@ -28,12 +38,19 @@ protocol — not deepening a branch in ``run_rounds``.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Optional
 
 import numpy as np
 
 from repro.comm.async_driver import AsyncSession
-from repro.comm.config import NULL_COMM, CommConfig, CommSession
+from repro.comm.config import (
+    NULL_COMM,
+    CommConfig,
+    CommSession,
+    plan_bytes,
+    probe_round,
+)
 from repro.comm.metrics import Transport
 
 
@@ -41,6 +58,9 @@ class Session:
     """Protocol base for round drivers (see module docstring)."""
 
     def prepare(self, trace_round) -> None:
+        raise NotImplementedError
+
+    def begin_variant(self, sig, trace_round) -> None:
         raise NotImplementedError
 
     def comm_round(self, memory, mask, codec_key):
@@ -55,17 +75,48 @@ class Session:
 
 class NullSession(Session):
     """No-transport driver: rounds execute back to back with the no-op
-    ``NULL_COMM`` view — the exact legacy jaxpr — and the byte axis is
-    derived from the per-optimizer float-count formulas."""
+    ``NULL_COMM`` view — the exact legacy jaxpr. The byte axis is
+    derived from an identity-codec probe of the round's payload plan
+    (the measured wire: every payload occurrence at its raw encoded
+    size, both directions), falling back to the per-optimizer
+    float-count formulas when no probe context is available; adaptive-k
+    variants re-probe, so the formula axis is round-varying too."""
 
-    def __init__(self, keys, state0, formula_bytes_per_round: float):
+    def __init__(self, keys, state0, formula_bytes_per_round: float,
+                 m: "int | None" = None, mask_dtype=None):
         self.keys = keys
         self._state = state0
         self._formula = float(formula_bytes_per_round)
+        self.m = m
+        self._mask_dtype = mask_dtype
+        self._plans: dict = {}
+        self._per_round: "list[float]" = []
         self._t = 0
 
     def prepare(self, trace_round) -> None:
         pass
+
+    def begin_variant(self, sig, trace_round) -> None:
+        if self.m is None:
+            return  # no probe context: keep the float-formula fallback
+        if sig not in self._plans:
+            plan: dict = {}
+            try:
+                probe_round(CommConfig(), self.m, self._mask_dtype, plan,
+                            trace_round, full_cohort=True)
+            except Exception as e:  # un-traceable round: formula fallback
+                plan = None
+                warnings.warn(
+                    f"payload-plan probe failed ({e!r}); the no-comm byte "
+                    f"axis falls back to the per-optimizer float-count "
+                    f"formulas for this run (these can undercount the "
+                    f"wire)", stacklevel=2)
+            self._plans[sig] = plan
+        plan = self._plans[sig]
+        if plan is not None:
+            per_client = (plan_bytes(plan, down=False)
+                          + plan_bytes(plan, down=True))
+            self._formula = float(per_client * self.m)
 
     def comm_round(self, memory, mask, codec_key):
         return NULL_COMM
@@ -73,15 +124,15 @@ class NullSession(Session):
     def step(self, round_fn) -> Any:
         self._state, _ = round_fn(self._state, {}, self.keys[self._t],
                                   None, None)
+        self._per_round.append(self._formula)
         self._t += 1
         return self._state
 
     def finalize(self) -> Transport:
-        t = self._t
+        per_round = np.asarray(self._per_round, dtype=np.float64)
         return Transport(
-            cumulative_bytes=np.arange(t + 1, dtype=np.float64)
-            * self._formula,
-            sim_time_s=np.zeros(t + 1),
+            cumulative_bytes=np.concatenate([[0.0], np.cumsum(per_round)]),
+            sim_time_s=np.zeros(self._t + 1),
         )
 
 
@@ -98,7 +149,8 @@ def make_session(
     """Resolve a ``CommConfig`` (or None) to its driver session — the
     single place mode dispatch happens."""
     if comm is None:
-        return NullSession(keys, state0, formula_bytes_per_round)
+        return NullSession(keys, state0, formula_bytes_per_round,
+                           m=m, mask_dtype=mask_dtype)
     if comm.async_mode:
         return AsyncSession(comm, m=m, client_weights=client_weights,
                             keys=keys, state0=state0, mask_dtype=mask_dtype)

@@ -12,6 +12,7 @@ from repro.core.newton_family import (
     LocalNewton,
 )
 from repro.core.sketch import Sketch, effective_dimension, make_sketch, sketch_psd
+from repro.core.sketch_policy import SketchPolicy, as_policy
 from repro.core.sketched import FedNDES, FedNS
 
 

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -60,6 +61,18 @@ class FederatedOptimizer:
         comm=None,
     ) -> OptState:
         raise NotImplementedError
+
+    def round_signature(self, round_idx: int, state: OptState):
+        """Host-side pre-round hook: return a hashable signature naming
+        the static variant of the next round's trace. Rounds sharing a
+        signature share one jitted round function and one payload byte
+        plan; a new signature re-traces and re-bills (the signature must
+        therefore determine every static choice the round makes — e.g.
+        the current sketch size). Optimizers with adaptive sketch
+        policies update their k here from the trajectory signals the
+        driver hands back. Default: one signature (``None``) for the
+        whole trajectory — the single-jaxpr fast path."""
+        return None
 
     # -- communication accounting (per client, per round) -------------------
     def uplink_floats(self, problem: FederatedProblem) -> int:
@@ -146,6 +159,32 @@ def run_rounds(
         formula_bytes_per_round=formula_bytes,
     )
 
+    # Adaptive-k policies change payload sizes mid-trajectory; the async
+    # clock prices in-flight uploads at dispatch time, so round-varying
+    # plans are a synchronous-driver feature. Fail fast with the fix.
+    policy = getattr(opt, "policy", None)
+    if comm is not None and comm.async_mode and policy is not None:
+        if getattr(policy, "adaptive", False):
+            raise NotImplementedError(
+                "adaptive-k sketch policies vary payload bytes per round, "
+                "which the asynchronous driver cannot bill truthfully "
+                "(in-flight uploads are priced at dispatch time); use the "
+                "synchronous driver or a constant-k policy")
+        if (getattr(policy, "schedule", "fresh") == "rotate"
+                and comm.has_error_feedback):
+            # stale commit groups share one EF memory pytree across model
+            # versions: a group based on the previous epoch can straddle
+            # a rotation boundary and briefly compensate across bases
+            # (EF21 re-contracts within the epoch). Per-version memory
+            # would fix it properly — a known follow-up.
+            warnings.warn(
+                "async driver + rotating sketch policy + error feedback: "
+                "commit groups based on pre-rotation model versions share "
+                "the EF memory of the new epoch, so residuals can briefly "
+                "straddle a rotation boundary under stale commits; the "
+                "synchronous driver keeps the epoch-reset invariant exact",
+                stacklevel=2)
+
     # The one jitted round function every driver mode shares. The EF21
     # memory rides through as a pytree next to the optimizer state;
     # without error feedback (or with only lossless codecs) it is an
@@ -157,20 +196,35 @@ def run_rounds(
         s_next = opt.round(problem, s, k, comm=cr)
         return s_next, cr.memory_out
 
-    round_fn = jax.jit(_round)
-
     # trace-time discovery (byte plan / EF shapes / async launch): one
     # abstract probe of the round — nothing executes here (any key
     # works; shapes don't depend on it, and keys may be empty when
     # rounds=0)
     probe_key = jax.random.PRNGKey(seed)
-    session.prepare(lambda cr: opt.round(problem, state, probe_key, comm=cr))
+
+    def trace_with(s):
+        return lambda cr: opt.round(problem, s, probe_key, comm=cr)
+
+    session.prepare(trace_with(state))
 
     losses = [float(loss_fn(state["w"]))]
     gnorms = [float(jnp.linalg.norm(grad_fn(state["w"])))]
+    # one jitted round PER static variant: the default round_signature
+    # (None for every round) keeps the single shared trace; an adaptive
+    # sketch policy announces each k change here, and the session probes
+    # that variant's byte plan so per-round traces bill the true sizes
+    round_fns: Dict[Any, Any] = {}
+    sig_prev = object()  # sentinel: no signature compares equal to it
     t0 = time.perf_counter()
-    for _ in range(rounds):
-        state = session.step(round_fn)
+    for t in range(rounds):
+        sig = opt.round_signature(t, state)
+        if sig != sig_prev:
+            session.begin_variant(sig, trace_with(state))
+            sig_prev = sig
+        fn = round_fns.get(sig)
+        if fn is None:
+            fn = round_fns[sig] = jax.jit(_round)
+        state = session.step(fn)
         losses.append(float(loss_fn(state["w"])))
         gnorms.append(float(jnp.linalg.norm(grad_fn(state["w"]))))
     wall = time.perf_counter() - t0

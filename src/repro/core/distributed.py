@@ -22,15 +22,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core.losses import Objective
-from repro.core.sketch import make_sketch
+from repro.core.sketch_policy import SketchPolicy, as_policy
 
 
 @dataclasses.dataclass(frozen=True)
 class DistributedFLeNS:
     """FLeNS with clients distributed over mesh axes.
 
-    The per-round sketch is derived from an int32 seed (server broadcast,
-    O(1) downlink); `round_fn()` returns a jit-compiled step.
+    The sketch basis is keyed by the broadcast int32 seed through a
+    ``SketchPolicy`` (the seed doubles as the round index, so
+    ``sketch="srht:rotate=R"`` / ``"srht:fixed"`` schedule the basis
+    exactly like the simulator's optimizers); `round_fn()` returns a
+    jit-compiled step.
     """
 
     mesh: Mesh
@@ -42,6 +45,7 @@ class DistributedFLeNS:
     beta: float = 0.0
     lam_damp: float = 1e-8
     client_axes: tuple = ("pod", "data")
+    sketch: "str | SketchPolicy" = "srht"
 
     def _axes(self):
         return tuple(a for a in self.client_axes if a in self.mesh.axis_names)
@@ -68,13 +72,22 @@ class DistributedFLeNS:
     def round_fn(self):
         axes = self._axes()
         dim, k = self.dim, self.k
+        policy = as_policy(self.sketch, k=k)
+        if policy.adaptive:
+            raise ValueError(
+                "DistributedFLeNS compiles one fixed-shape step: adaptive-k "
+                f"sketch policies ({policy.spec()!r}) cannot resize it; "
+                "use a constant-k fresh/fixed/rotating schedule")
 
         def body(X, y, w, w_prev, seed):
             w = w[0]
             w_prev = w_prev[0]
             v = w + self.beta * (w - w_prev)
-            sketch = make_sketch(jax.random.PRNGKey(seed[0]), "srht", k, dim,
-                                 dtype=w.dtype)
+            # the broadcast seed is the round index: fresh schedules key
+            # the basis from PRNGKey(seed) directly (the pre-policy
+            # wire contract), fixed/rotating ones from their epoch
+            sketch = policy.sample(jax.random.PRNGKey(seed[0]), seed[0],
+                                   dim, dtype=w.dtype)
             sst = sketch.apply(sketch.apply_t(jnp.eye(k, dtype=w.dtype)))
 
             a = self._local_hess_sqrt(X, y, v)

@@ -15,6 +15,12 @@ described in DESIGN.md §1.1:
          delta = S^T (H~ + lam_damp I)^{-1} (S g),
          w_{t+1} = v_t - mu * delta.
 
+The sketch is a first-class scheduled object (``repro.core.
+sketch_policy``): ``sketch="srht"`` reproduces the paper's fresh
+per-round basis bit-for-bit, while ``"srht:fixed"`` / ``"srht:rotate=R"``
+persist the basis across rounds (making the sketch uplinks EF-eligible)
+and ``"...:adaptive"`` ramps k within declared bounds on guard rejects.
+
 ``variant="plus"`` is the beyond-paper FLeNS+ of DESIGN.md §1.2: clients
 additionally upload the raw gradient (O(M), the same uplink order as
 FedAvg) and the server adds a first-order step in the orthogonal
@@ -30,7 +36,16 @@ import jax.numpy as jnp
 from repro.comm import NULL_COMM
 from repro.core.base import FederatedOptimizer, OptState
 from repro.core.federated import FederatedProblem
-from repro.core.sketch import Sketch, make_sketch
+from repro.core.sketch_policy import (
+    SketchPolicy,
+    as_policy,
+    loss_effective_dimension,
+)
+
+
+# lower bound of the guard's backtracking trust scale: rejects halve the
+# scale down to this floor, accepts double it back (capped at 1)
+_MIN_TRUST_SCALE = 1.0 / 64.0
 
 
 class FLeNS(FederatedOptimizer):
@@ -41,24 +56,42 @@ class FLeNS(FederatedOptimizer):
         k: int,
         mu: float = 1.0,
         beta: float | str = "paper",
-        sketch: str = "srht",
+        sketch: "str | SketchPolicy" = "srht",
         lam_damp: float = 1e-8,
         variant: str = "paper",  # "paper" | "plus"
         eta: float | None = None,  # complement step size (plus); None -> 1/L1
         step_from: str = "v",  # "v" (standard accelerated) | "w" (paper literal)
         restart: bool = True,  # function-value adaptive momentum restart
     ):
-        self.k = k
+        # the sketch is a scheduled first-class object: "srht" (fresh,
+        # the paper's per-round basis), "srht:fixed", "srht:rotate=8",
+        # "gaussian:adaptive", ... — see repro.core.sketch_policy
+        self.policy = as_policy(sketch, k=k)
         self.mu = mu
         self.beta = beta
-        self.sketch = sketch
         self.lam_damp = lam_damp
         self.variant = variant
         self.eta = eta
         self.step_from = step_from
         self.restart = restart
+        self._guard_scale = 1.0  # host-side adaptive-k reject detector
+        if self.policy.adaptive and not restart:
+            # the ramp is driven by guard rejections; without the guard
+            # the trust scale never moves and "adaptive" would silently
+            # degenerate to constant-k
+            raise ValueError(
+                "adaptive-k sketch policies need the guard (restart=True): "
+                "the k ramp is driven by its rejected steps")
         if variant == "plus":
             self.name = "flens_plus"
+
+    @property
+    def k(self) -> int:
+        return self.policy.k
+
+    @k.setter
+    def k(self, value: int) -> None:
+        self.policy = self.policy.with_k(value)
 
     # -- momentum schedule ---------------------------------------------------
     def _beta_value(self, problem: FederatedProblem, w0: jax.Array) -> float:
@@ -76,6 +109,14 @@ class FLeNS(FederatedOptimizer):
         raise ValueError(f"unknown beta rule {self.beta!r}")
 
     def init(self, problem, w0):
+        if self.policy.adaptive:
+            # adaptive-k: start from the effective dimension of the loss
+            # Hessian clipped into the declared (k_min, k_max); the
+            # guard-driven ramp happens in round_signature as the
+            # trajectory unfolds
+            d_eff = loss_effective_dimension(problem, w0)
+            self.policy = self.policy.resolved(d_eff, cap=problem.dim)
+            self._guard_scale = 1.0
         beta = self._beta_value(problem, w0)
         state = {
             "w": w0,
@@ -83,6 +124,9 @@ class FLeNS(FederatedOptimizer):
             "beta": jnp.asarray(beta, w0.dtype),
             "loss": problem.global_value(w0),
             "scale": jnp.asarray(1.0, w0.dtype),
+            # round counter: the rotation-epoch input of the sketch
+            # schedule (and a no-op for the default fresh basis)
+            "t": jnp.asarray(0, jnp.int32),
         }
         if self.variant == "plus":
             # eta lives in the state dict (NOT on the optimizer instance):
@@ -96,10 +140,29 @@ class FLeNS(FederatedOptimizer):
             state["eta"] = jnp.asarray(eta, w0.dtype)
         return state
 
+    # -- host-side adaptive-k hook (run_rounds calls this pre-round) ---------
+    def round_signature(self, round_idx: int, state: OptState):
+        if not self.policy.adaptive:
+            return None
+        # the FLeNS guard halves the trust scale on every rejected step:
+        # a scale drop since the last round means the sketched model was
+        # too coarse — ramp k (doubling, capped at k_max). At the scale
+        # floor a reject no longer drops the value (max() pins it), but
+        # sitting AT the floor still means the last round rejected — an
+        # accept would have doubled away from it — so it counts too.
+        # k never shrinks; the signature re-traces and re-bills.
+        scale = float(state.get("scale", 1.0))
+        rejected = scale < self._guard_scale or scale <= _MIN_TRUST_SCALE
+        if round_idx > 0 and rejected:
+            self.policy = self.policy.ramped()
+        self._guard_scale = scale
+        return ("flens_k", self.policy.k)
+
     # -- one communication round ----------------------------------------------
     def round(self, problem, state: OptState, key, comm=None) -> OptState:
         comm = NULL_COMM if comm is None else comm
         w, w_prev, beta = state["w"], state["w_prev"], state["beta"]
+        t = state["t"]
         dim = problem.dim
         dtype = w.dtype
 
@@ -107,15 +170,18 @@ class FLeNS(FederatedOptimizer):
         v = w + beta * (w - w_prev)
 
         # server broadcast: the look-ahead iterate clients compute on,
-        # plus the O(1) sketch seed (lossless by default — a compressed
-        # seed would desynchronize the shared basis). The server keeps
-        # the exact v for its own step; only client-side quantities see
-        # the decoded broadcast.
+        # plus the O(1) sketch basis key (lossless by default — a
+        # compressed key would desynchronize the shared basis). Fresh
+        # schedules broadcast the per-round driver key; fixed/rotating
+        # schedules broadcast the epoch key from the policy's own seed
+        # stream, which is what keeps S identical across the rounds of
+        # one epoch. The server keeps the exact v for its own step;
+        # only client-side quantities see the decoded broadcast.
         v_bcast = comm.downlink("w", v)
-        key = comm.downlink("seed", key)
+        skey = comm.downlink("seed", self.policy.basis_key(key, t))
 
-        # (2) per-round shared sketch, seed broadcast by the server
-        s = make_sketch(key, self.sketch, self.k, dim, dtype=dtype)
+        # (2) the round's shared sketch, per the declared schedule
+        s = self.policy.materialize(skey, dim, dtype=dtype)
         sst = s.apply(s.apply_t(jnp.eye(self.k, dtype=dtype)))  # S S^T (k,k)
 
         # client-side: local gradient + two-sided sketched Hessian
@@ -131,10 +197,18 @@ class FLeNS(FederatedOptimizer):
 
         # uplink: the k×k sketched Hessian (symmetric — sympack applies)
         # and the sketched gradient flow through the transport codecs.
-        # Both live in the per-round sketch basis S_t, so they are not
-        # EF-eligible: cross-round memory would mix incompatible bases.
-        h_sk = comm.uplink("h_sk", h_sk, ef_eligible=False)
-        sg = comm.uplink("sg", sg, ef_eligible=False)
+        # EF eligibility flows from the schedule: both payloads live in
+        # the basis S_t, so cross-round memory is meaningful exactly
+        # when the basis persists across rounds (fixed/rotating
+        # schedules) and meaningless for a fresh per-round draw. A
+        # rotating schedule additionally resets the residual the round
+        # the basis rotates — memory from the previous epoch lives in
+        # the old basis.
+        persistent = self.policy.basis_persistent()
+        reset = self.policy.ef_reset(t)
+        h_sk = comm.uplink("h_sk", h_sk, ef_eligible=persistent,
+                           ef_reset=reset)
+        sg = comm.uplink("sg", sg, ef_eligible=persistent, ef_reset=reset)
 
         # (3)+(4) server aggregation and sketched-subspace Newton step
         p = comm.weights(problem.client_weights)
@@ -179,12 +253,12 @@ class FLeNS(FederatedOptimizer):
             # backtracking across rounds: halve the trust scale on reject,
             # grow it back (capped at 1) on accept
             scale_out = jnp.where(ok, jnp.minimum(scale * 2.0, 1.0),
-                                  jnp.maximum(scale * 0.5, 1.0 / 64.0))
+                                  jnp.maximum(scale * 0.5, _MIN_TRUST_SCALE))
         else:
             w_out, w_prev_out, loss_out = w_next, w, loss_next
             scale_out = scale
         out = {"w": w_out, "w_prev": w_prev_out, "beta": beta,
-               "loss": loss_out, "scale": scale_out}
+               "loss": loss_out, "scale": scale_out, "t": t + 1}
         if self.variant == "plus":
             out["eta"] = state["eta"]
         return out
@@ -204,4 +278,10 @@ class FLeNS(FederatedOptimizer):
         return self.k * self.k + self.k + extra
 
     def downlink_floats(self, problem) -> int:
-        return problem.dim + 1  # model + sketch seed
+        # a guarded round broadcasts BOTH the look-ahead model and the
+        # candidate iterate w_next (clients evaluate the guard loss at
+        # it) plus the O(1) sketch basis key — 2M + 1, matching the
+        # measured wire (PR 4 found the old M + 1 undercounting by ~2x)
+        if self.restart:
+            return 2 * problem.dim + 1
+        return problem.dim + 1  # model + sketch basis key

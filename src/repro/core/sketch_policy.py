@@ -1,0 +1,286 @@
+"""Declarative sketch schedules: the ``SketchPolicy`` protocol.
+
+The paper's central object — the Hessian sketch — used to be a
+stringly-typed ``sketch: str`` kind plus an ad-hoc ``make_sketch`` call
+per round, which hard-wired one schedule (a fresh basis every round)
+into every optimizer. A fresh basis is the right default for embedding
+quality, but it permanently locks sketch payloads out of error
+feedback: EF memory lives in the payload's coordinate system, and a
+basis that is redrawn each round makes cross-round memory meaningless
+(the exact ``uplink(..., ef_eligible=False)`` opt-outs PR 2 had to
+scatter through the optimizers).
+
+``SketchPolicy`` promotes the sketch to a first-class scheduled
+operator, parsed from a compact spec grammar::
+
+    "srht"                      fresh SRHT basis every round (the default)
+    "srht:fixed"                one basis for the whole trajectory
+    "srht:rotate=8"             rotate the basis every 8 rounds
+    "gaussian:adaptive"         adaptive-k (effective-dimension start,
+                                guard-driven ramp within (k_min, k_max))
+    "sjlt:rotate=4,seed=3"      options compose; ``seed`` picks the
+                                basis stream for fixed/rotating bases
+    "srht:adaptive=8..64"       explicit adaptive bounds k_min..k_max
+
+The policy answers the three questions a sketched optimizer needs:
+
+  * ``sample(key, round_idx, dim, dtype) -> Sketch`` — the operator for
+    this round. Fresh schedules ride the per-round driver key (bit
+    identical to the pre-policy code); fixed/rotating schedules derive
+    the basis from the policy's own ``seed`` stream at the current
+    rotation epoch, so the basis survives across rounds by
+    construction.
+  * ``basis_persistent(round_idx=None)`` — does the basis at
+    ``round_idx`` carry into the next round? With no argument, the
+    schedule-level answer (any cross-round persistence at all) — the
+    single predicate EF eligibility now flows from at every uplink call
+    site. Adaptive-k policies always answer False: a k change resizes
+    the payload, and EF memory cannot survive a shape change.
+  * the k-schedule — constant (``k`` bound at construction), or
+    adaptive: ``resolved(d_eff, cap)`` starts k at ``ceil(c * d_eff)``
+    clipped into ``(k_min, k_max)`` (FedNDES-style dimension-efficient
+    sizing) and ``ramped()`` doubles it toward ``k_max`` when the
+    driver observes the FLeNS guard rejecting steps (the sketch was too
+    coarse). k changes are host-side static decisions: the round driver
+    re-traces and re-bills through ``FederatedOptimizer.round_signature``.
+
+Policies are immutable; ``with_k`` / ``ramped`` / ``resolved`` return
+updated copies, so one optimizer instance can re-bind per problem
+without leaking state across runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import Sketch, effective_dimension, make_sketch
+
+KINDS = ("srht", "gaussian", "sjlt")
+SCHEDULES = ("fresh", "fixed", "rotate")
+
+
+def adaptive_k(d_eff: float, *, c: float, k_min: int, k_max: int) -> int:
+    """Dimension-efficient sketch size: ceil(c * d_eff) clipped into
+    [k_min, k_max] — the FedNDES rule, shared so every adaptive consumer
+    sizes k identically."""
+    return int(min(max(k_min, int(math.ceil(c * float(d_eff)))), k_max))
+
+
+def loss_effective_dimension(problem, w0) -> float:
+    """Effective dimension of the LOSS Hessian at ``w0`` — the ridge
+    term is excluded (it would inflate d_lambda by ~dim/2). The one
+    d_eff recipe every adaptive consumer (FLeNS adaptive-k start,
+    FedNDES sizing) shares."""
+    h = problem.global_hessian(w0)
+    h_loss = h - problem.lam * jnp.eye(problem.dim, dtype=h.dtype)
+    return float(effective_dimension(h_loss, problem.lam))
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchPolicy:
+    """A parsed, immutable sketch schedule (see module docstring)."""
+
+    kind: str = "srht"
+    schedule: str = "fresh"
+    period: int = 0  # rotation period in rounds (schedule == "rotate")
+    k: "int | None" = None  # current sketch size (None until bound)
+    adaptive: bool = False
+    k_min: "int | None" = None  # adaptive bounds; resolved() fills defaults
+    k_max: "int | None" = None
+    c: float = 2.0  # adaptive: k0 ~ ceil(c * d_eff)
+    seed: int = 0  # basis stream for fixed/rotating schedules
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"unknown sketch schedule {self.schedule!r}; "
+                f"want one of {SCHEDULES}")
+        if self.schedule == "rotate" and self.period < 1:
+            raise ValueError(
+                f"rotate schedule needs a period >= 1, got {self.period}")
+        if (self.k_min is not None and self.k_max is not None
+                and self.k_min > self.k_max):
+            raise ValueError(
+                f"adaptive bounds inverted: k_min={self.k_min} > "
+                f"k_max={self.k_max}")
+
+    # -- spec grammar --------------------------------------------------------
+    @classmethod
+    def parse(cls, spec: str) -> "SketchPolicy":
+        """Parse ``kind[:opt[,opt]*]`` (grammar in the module docstring)."""
+        kind, _, rest = spec.partition(":")
+        kind = kind.strip()
+        if kind not in KINDS:
+            raise ValueError(
+                f"unknown sketch kind {kind!r} in spec {spec!r}; "
+                f"want one of {KINDS}")
+        kw: dict = {"kind": kind}
+        for raw in (o.strip() for o in rest.split(",")):
+            if not raw:
+                continue
+            name, _, val = raw.partition("=")
+            if name in ("fresh", "fixed"):
+                kw["schedule"] = name
+            elif name == "rotate":
+                if not val:
+                    raise ValueError(
+                        f"rotate needs a period, e.g. 'rotate=8' (in {spec!r})")
+                kw["schedule"] = "rotate"
+                kw["period"] = int(val)
+            elif name == "adaptive":
+                kw["adaptive"] = True
+                if val:
+                    lo, sep, hi = val.partition("..")
+                    if not sep:
+                        raise ValueError(
+                            f"adaptive bounds are 'adaptive=K_MIN..K_MAX', "
+                            f"got {raw!r} (in {spec!r})")
+                    kw["k_min"], kw["k_max"] = int(lo), int(hi)
+            elif name == "seed":
+                kw["seed"] = int(val)
+            elif name == "c":
+                kw["c"] = float(val)
+            elif name == "k":
+                kw["k"] = int(val)
+            else:
+                raise ValueError(
+                    f"unknown sketch-policy option {raw!r} in spec {spec!r}")
+        return cls(**kw)
+
+    @classmethod
+    def per_round(cls, basis: str) -> "SketchPolicy":
+        """A degenerate fresh-schedule policy for payloads whose
+        coordinate basis is locally re-derived every round without ever
+        sampling a ``Sketch`` (FedNL's power-iteration eigenbasis): it
+        exists so EF eligibility at such call sites flows from the same
+        ``basis_persistent`` predicate as the true sketches."""
+        return cls(kind=basis, schedule="fresh")
+
+    # -- immutable updates ---------------------------------------------------
+    def with_k(self, k: int) -> "SketchPolicy":
+        return dataclasses.replace(self, k=int(k))
+
+    def resolved(self, d_eff: float, cap: int) -> "SketchPolicy":
+        """Resolve an adaptive k-schedule against a measured effective
+        dimension: bounds default to (declared k, min(8 * k_min, cap)),
+        and the starting k is ``adaptive_k`` inside them. No-op for
+        constant-k policies."""
+        if not self.adaptive:
+            return self
+        k_min = min(int(self.k_min or self.k or 8), int(cap))
+        k_max = min(int(self.k_max or 8 * k_min), int(cap))
+        k_max = max(k_max, k_min)
+        k0 = adaptive_k(d_eff, c=self.c, k_min=k_min, k_max=k_max)
+        return dataclasses.replace(self, k=k0, k_min=k_min, k_max=k_max)
+
+    def ramped(self) -> "SketchPolicy":
+        """One adaptive ramp step: double k toward ``k_max`` (the guard
+        rejected a step — the sketched subspace was too coarse)."""
+        if not self.adaptive or self.k_max is None:
+            return self
+        return self.with_k(min(2 * self.k, self.k_max))
+
+    # -- the schedule --------------------------------------------------------
+    def epoch(self, round_idx):
+        """Basis epoch at ``round_idx`` (works on traced round counters:
+        rotation is plain integer arithmetic inside the jitted round)."""
+        if self.schedule == "fixed":
+            return 0
+        if self.schedule == "rotate":
+            return round_idx // self.period
+        return round_idx
+
+    def basis_persistent(self, round_idx=None) -> bool:
+        """Does the sketch basis at ``round_idx`` survive into the next
+        round? ``round_idx=None`` asks at the schedule level: is there
+        ANY cross-round persistence — the static predicate EF
+        eligibility derives from (EF memory lives in the payload's
+        coordinate system, so it is exactly as durable as the basis).
+        Adaptive-k never reports persistence: a k change resizes the
+        payload and memory cannot survive a shape change."""
+        if self.adaptive or self.schedule == "fresh":
+            return False
+        if self.schedule == "fixed":
+            return True
+        if round_idx is None:
+            return self.period > 1
+        return (int(round_idx) + 1) % self.period != 0
+
+    def ef_reset(self, round_idx):
+        """Traced indicator (0/1) that the basis at ``round_idx`` is a
+        NEW draw under a rotating schedule: error-feedback residuals
+        accumulated in the previous epoch live in the old basis and must
+        be zeroed before compensating (the reset is common knowledge —
+        a pure function of the round index and the declared policy, so
+        client and server stay in sync). ``None`` for schedules that
+        never need it: fixed (one basis forever) and fresh (EF is
+        ineligible there anyway)."""
+        if self.schedule != "rotate" or self.period <= 1:
+            return None
+        return (round_idx % self.period) == 0
+
+    def basis_key(self, key: jax.Array, round_idx) -> jax.Array:
+        """The PRNG key the basis at ``round_idx`` is drawn from. Fresh
+        schedules return the per-round driver key unchanged (bit
+        compatibility with the pre-policy code); fixed/rotating
+        schedules fold the rotation epoch into the policy's own seed
+        stream, which is what makes the basis identical across the
+        rounds of one epoch regardless of the driver's key schedule."""
+        if self.schedule == "fresh":
+            return key
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                  self.epoch(round_idx))
+
+    # -- operator construction -----------------------------------------------
+    def materialize(self, key: jax.Array, dim: int, dtype=jnp.float32) -> Sketch:
+        """Draw the operator from an already-derived basis key (e.g. the
+        decoded ``down:seed`` broadcast)."""
+        if self.k is None:
+            raise ValueError(
+                f"sketch policy {self.spec()!r} has no k bound; construct "
+                f"the optimizer with k= or call with_k/resolved first")
+        return make_sketch(key, self.kind, self.k, dim, dtype=dtype)
+
+    def sample(self, key: jax.Array, round_idx, dim: int,
+               dtype=jnp.float32) -> Sketch:
+        """The round's sketch operator: schedule-aware basis key, then
+        draw. ``round_idx`` may be a traced scalar."""
+        return self.materialize(self.basis_key(key, round_idx), dim, dtype)
+
+    # -- display -------------------------------------------------------------
+    def spec(self) -> str:
+        """Round-trip the policy back to its spec string: parsing the
+        result reproduces this policy exactly (non-default ``c`` and a
+        bound ``k`` included, so reports never under-describe a run)."""
+        opts = []
+        if self.schedule == "fixed":
+            opts.append("fixed")
+        elif self.schedule == "rotate":
+            opts.append(f"rotate={self.period}")
+        if self.adaptive:
+            if self.k_min is not None and self.k_max is not None:
+                opts.append(f"adaptive={self.k_min}..{self.k_max}")
+            else:
+                opts.append("adaptive")
+        if self.seed:
+            opts.append(f"seed={self.seed}")
+        if self.c != 2.0:
+            opts.append(f"c={self.c}")
+        if self.k is not None:
+            opts.append(f"k={self.k}")
+        return self.kind + (":" + ",".join(opts) if opts else "")
+
+
+def as_policy(spec: "str | SketchPolicy", k: "int | None" = None) -> SketchPolicy:
+    """Coerce a spec string or policy to a ``SketchPolicy``, binding
+    ``k`` when the policy does not already declare one (an explicit
+    ``k=`` in the spec, or a previously-bound policy, wins)."""
+    pol = SketchPolicy.parse(spec) if isinstance(spec, str) else spec
+    if not isinstance(pol, SketchPolicy):
+        raise TypeError(f"want a spec string or SketchPolicy, got {pol!r}")
+    if k is not None and pol.k is None:
+        pol = pol.with_k(int(k))
+    return pol

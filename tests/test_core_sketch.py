@@ -92,3 +92,104 @@ def test_effective_dimension():
     lam = 0.1
     expect = float(jnp.sum(evals / (evals + lam)))
     assert abs(float(effective_dimension(h, lam)) - expect) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# operator invariants (property tests across dims / dtypes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gaussian", "sjlt"])
+@pytest.mark.parametrize("dim", [24, 37])  # non-powers of two
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+def test_gaussian_sjlt_unbiased_identity_property(kind, dim, dtype):
+    """E[S^T S] = I for gaussian/sjlt (columns normalized to unit mean
+    energy), for any dim — power of two or not — and both dtypes."""
+    k, reps, seed = 16, 250, 0
+    dt = jnp.dtype(dtype)
+    keys = jax.random.split(jax.random.PRNGKey(seed), reps)
+
+    def one(key):
+        mat = make_sketch(key, kind, k, dim, dtype=dt).dense()
+        return mat.T @ mat
+
+    acc = np.mean([np.asarray(one(kk), np.float64) for kk in keys], axis=0)
+    # diagonal is exactly unbiased at 1; off-diagonal concentrates at 0
+    np.testing.assert_allclose(np.diag(acc), np.ones(dim), atol=0.35)
+    off = acc - np.diag(np.diag(acc))
+    assert np.abs(off).max() < 0.35
+
+
+@pytest.mark.parametrize("dim", [16, 64, 128])
+@pytest.mark.parametrize("k", [4, 16])
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+def test_srht_rows_exactly_orthogonal_property(dim, k, dtype):
+    """S S^T = (dim/k) I_k EXACTLY (to fp roundoff) on the SRHT's native
+    power-of-two domain, both dtypes: the rows are sampled without
+    replacement from an orthogonal matrix."""
+    dt = jnp.dtype(dtype)
+    s = make_sketch(jax.random.PRNGKey(dim + k), "srht", k, dim, dtype=dt)
+    mat = s.dense()
+    tol = 1e-10 if dtype == "float64" else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(mat @ mat.T, np.float64), (dim / k) * np.eye(k),
+        rtol=tol, atol=tol * dim)
+
+
+@pytest.mark.parametrize("dim", [24, 37, 100])  # strictly non-pow2
+@pytest.mark.parametrize("seed", [0, 7])
+def test_srht_nonpow2_restriction_invariants(dim, seed):
+    """Non-power-of-two dims embed into n = next_pow2(dim): the
+    restricted S satisfies the exact complement identity
+    S S^T = (n/k) I - S_c S_c^T (S_c = the truncated columns), hence
+    0 <= S S^T <= (n/k) I in the PSD order."""
+    k = 8
+    n = 1
+    while n < dim:
+        n *= 2
+    assert n != dim
+    s = make_sketch(jax.random.PRNGKey(seed), "srht", k, dim, dtype=jnp.float64)
+    mat = s.dense()  # (k, dim) — the first dim columns of the full k x n S
+    # rebuild the FULL padded-domain operator from the same draw: apply
+    # on padded eye == taking all n columns
+    eye_n = np.eye(n)
+    signs = np.asarray(s.signs)
+    from repro.kernels import ref
+
+    h = np.asarray(ref.fwht(jnp.asarray(eye_n * signs[None, :]),
+                            normalize=True))
+    full = h[:, np.asarray(s.rows)].T * np.sqrt(n / k)
+    np.testing.assert_allclose(full[:, :dim], np.asarray(mat),
+                               rtol=1e-10, atol=1e-12)
+    comp = full[:, dim:]
+    np.testing.assert_allclose(
+        np.asarray(mat) @ np.asarray(mat).T + comp @ comp.T,
+        (n / k) * np.eye(k), rtol=1e-10, atol=1e-10)
+    evals = np.linalg.eigvalsh(np.asarray(mat) @ np.asarray(mat).T)
+    assert evals.min() >= -1e-10
+    assert evals.max() <= n / k + 1e-10
+
+
+@pytest.mark.parametrize("dim", [24, 37, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_srht_apply_pallas_interpret_parity(dim, dtype):
+    """The SRHT hot loop through the Pallas kernel body (interpret mode,
+    so it runs on CPU CI) matches the reference-path ``Sketch.apply``
+    bit-for-float: the policy -> sketch -> kernel path is exercised
+    without a TPU."""
+    from repro.kernels import ops as kops
+
+    k = 8
+    s = make_sketch(jax.random.PRNGKey(1), "srht", k, dim, dtype=dtype)
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, dim), dtype)
+    want = s.apply(x)  # CPU dispatch: reference fwht
+
+    n = s.signs.shape[-1]
+    pad = n - dim
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    xp = xp * s.signs
+    h = kops.fwht(xp, normalize=True, impl="interpret")  # Pallas body
+    got = jnp.take(h, s.rows, axis=-1) * jnp.sqrt(jnp.asarray(n / k, h.dtype))
+    # the kernel accumulates in f32; compare at f32 accuracy
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-4, atol=2e-4 * n**0.5)

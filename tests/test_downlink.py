@@ -228,7 +228,8 @@ def test_all_sessions_implement_the_protocol(small_problem):
     assert isinstance(sync, CommSession)
     assert isinstance(asyn, AsyncSession)
     for sess in (null, sync, asyn):
-        for method in ("prepare", "comm_round", "step", "finalize"):
+        for method in ("prepare", "begin_variant", "comm_round", "step",
+                       "finalize"):
             assert callable(getattr(sess, method)), (sess, method)
 
 

@@ -1,0 +1,463 @@
+"""SketchPolicy tests: spec grammar, schedule semantics, EF eligibility
+flowing from ``basis_persistent``, adaptive-k ramping + round-varying
+byte billing, and the redesign's backward-compatibility contract (the
+default fresh/constant-k policy reproduces the pre-policy trajectories
+bit for bit — golden values captured from the seed code).
+"""
+import inspect
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import ChannelModel, CommConfig, CommSession
+from repro.core import (
+    SketchPolicy,
+    as_policy,
+    make_optimizer,
+    make_problem,
+    newton_solve,
+    run_rounds,
+)
+from repro.core.losses import logistic
+from repro.data import make_classification
+
+# no-comm losses of the default (fresh basis, constant k) policy, captured
+# from the pre-SketchPolicy code on this exact problem/seed — the redesign's
+# bit-identity contract for every sketched optimizer
+GOLDEN_LOSSES = {
+    "flens": [0.6931471805599452, 0.6101396628666327, 0.5886880709327852,
+              0.5886880709327852, 0.5836630185920685],
+    "flens_plus": [0.6931471805599452, 0.6015472835168161, 0.6015472835168161,
+                   0.5866587222754482, 0.5747659024283325],
+    "fedns": [0.6931471805599452, 0.7166734224450081, 1.420287152953094,
+              4.742821066312273, 19.734619500330894],
+    "fedndes": [0.6931471805599452, 0.5633062504196183, 0.5571608398764784,
+                0.5565957824063676, 0.5565779318201288],
+}
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    X, y = make_classification(jax.random.PRNGKey(2), 600, 24)
+    prob = make_problem(X, y, m=6, lam=1e-3, objective=logistic)
+    w0 = jnp.zeros(prob.dim, jnp.float64)
+    w_star = newton_solve(prob, w0, iters=30)
+    return prob, w0, w_star
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+# ---------------------------------------------------------------------------
+
+def test_spec_grammar_parses():
+    p = SketchPolicy.parse("srht")
+    assert (p.kind, p.schedule, p.adaptive) == ("srht", "fresh", False)
+    p = SketchPolicy.parse("srht:fixed")
+    assert p.schedule == "fixed"
+    p = SketchPolicy.parse("srht:rotate=8")
+    assert (p.schedule, p.period) == ("rotate", 8)
+    p = SketchPolicy.parse("gaussian:adaptive")
+    assert (p.kind, p.adaptive) == ("gaussian", True)
+    p = SketchPolicy.parse("sjlt:rotate=4,seed=3")
+    assert (p.kind, p.period, p.seed) == ("sjlt", 4, 3)
+    p = SketchPolicy.parse("srht:adaptive=8..64,c=1.5")
+    assert (p.k_min, p.k_max, p.c) == (8, 64, 1.5)
+    p = SketchPolicy.parse("srht:k=12,fixed")
+    assert (p.k, p.schedule) == (12, "fixed")
+
+
+def test_spec_roundtrips_through_spec():
+    for spec in ("srht", "srht:fixed", "srht:rotate=8", "gaussian:adaptive",
+                 "sjlt:rotate=4,seed=3", "srht:adaptive=8..64"):
+        assert SketchPolicy.parse(spec).spec() == spec
+    # spec() is COMPLETE: parsing it reproduces the policy exactly, with
+    # bound k and non-default c included (reports never under-describe)
+    for pol in (SketchPolicy.parse("srht").with_k(17),
+                SketchPolicy.parse("srht:rotate=8,c=3.0").with_k(8),
+                SketchPolicy.parse("srht:adaptive=4..64,c=0.5").with_k(4)):
+        assert SketchPolicy.parse(pol.spec()) == pol
+        assert f"k={pol.k}" in pol.spec()
+
+
+@pytest.mark.parametrize("bad", [
+    "zstd", "srht:rotate", "srht:rotate=0", "srht:warp=2", "srht:adaptive=8",
+])
+def test_spec_grammar_rejects(bad):
+    with pytest.raises(ValueError):
+        SketchPolicy.parse(bad)
+
+
+def test_as_policy_binds_k_without_overriding():
+    assert as_policy("srht", k=8).k == 8
+    assert as_policy("srht:k=12", k=8).k == 12  # explicit spec k wins
+    pol = SketchPolicy.parse("srht").with_k(5)
+    assert as_policy(pol, k=8).k == 5  # pre-bound policy wins
+    with pytest.raises(TypeError):
+        as_policy(17)
+
+
+# ---------------------------------------------------------------------------
+# schedule semantics
+# ---------------------------------------------------------------------------
+
+def test_basis_persistent_predicate():
+    fresh = SketchPolicy.parse("srht")
+    fixed = SketchPolicy.parse("srht:fixed")
+    rot = SketchPolicy.parse("srht:rotate=4")
+    assert not fresh.basis_persistent()
+    assert fixed.basis_persistent()
+    assert rot.basis_persistent()
+    # per-round: a rotating basis persists except across epoch boundaries
+    assert [rot.basis_persistent(t) for t in range(8)] == [
+        True, True, True, False, True, True, True, False]
+    assert not SketchPolicy.parse("srht:rotate=1").basis_persistent()
+    # adaptive-k can resize the payload: never EF-eligible
+    assert not SketchPolicy.parse("srht:adaptive,fixed").basis_persistent()
+    # FedNL-style locally re-derived bases are fresh by construction
+    assert not SketchPolicy.per_round("rank1-eig").basis_persistent()
+
+
+def test_basis_key_schedules():
+    fresh = SketchPolicy.parse("srht")
+    key = jax.random.PRNGKey(3)
+    assert fresh.basis_key(key, 5) is key  # fresh rides the driver key
+
+    rot = SketchPolicy.parse("srht:rotate=4")
+    # within an epoch the basis key ignores the per-round driver key
+    k0 = rot.basis_key(jax.random.PRNGKey(0), 0)
+    k3 = rot.basis_key(jax.random.PRNGKey(99), 3)
+    k4 = rot.basis_key(jax.random.PRNGKey(0), 4)
+    np.testing.assert_array_equal(k0, k3)
+    assert not np.array_equal(np.asarray(k0), np.asarray(k4))
+
+    fixed = SketchPolicy.parse("srht:fixed")
+    np.testing.assert_array_equal(fixed.basis_key(jax.random.PRNGKey(1), 0),
+                                  fixed.basis_key(jax.random.PRNGKey(2), 77))
+    # the seed option picks an independent basis stream
+    other = SketchPolicy.parse("srht:fixed,seed=5")
+    assert not np.array_equal(
+        np.asarray(fixed.basis_key(key, 0)), np.asarray(other.basis_key(key, 0)))
+
+
+def test_sample_unbound_k_raises():
+    with pytest.raises(ValueError, match="no k bound"):
+        SketchPolicy.parse("srht").sample(jax.random.PRNGKey(0), 0, 16)
+
+
+def test_adaptive_resolution_and_ramp():
+    pol = SketchPolicy.parse("srht:adaptive=8..32,c=2.0")
+    r = pol.resolved(d_eff=6.1, cap=100)
+    assert (r.k, r.k_min, r.k_max) == (13, 8, 32)  # ceil(2 * 6.1) = 13
+    assert pol.resolved(d_eff=0.5, cap=100).k == 8  # clipped to k_min
+    assert pol.resolved(d_eff=1000.0, cap=100).k == 32  # clipped to k_max
+    assert pol.resolved(d_eff=1000.0, cap=20).k == 20  # cap wins
+    # ramp doubles toward k_max, saturating there
+    r = r.ramped()
+    assert r.k == 26
+    assert r.ramped().k == 32
+    assert r.ramped().ramped().k == 32
+    # bounds default to (declared k, 8 * k_min) when the spec omits them
+    r = SketchPolicy.parse("srht:adaptive").with_k(4).resolved(d_eff=0.1,
+                                                               cap=100)
+    assert (r.k_min, r.k_max, r.k) == (4, 32, 4)
+    # constant-k policies pass through untouched
+    pol = SketchPolicy.parse("srht").with_k(8)
+    assert pol.resolved(d_eff=50.0, cap=100) is pol
+
+
+# ---------------------------------------------------------------------------
+# the backward-compatibility contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kw", [
+    ("flens", dict(k=8)), ("flens_plus", dict(k=8)), ("fedns", dict(k=8)),
+    ("fedndes", {}),
+])
+def test_default_policy_matches_pre_redesign_golden(small_problem, name, kw):
+    """Fresh basis + constant k reproduces the pre-SketchPolicy
+    trajectories bit for bit, in the no-comm, sync-identity, and
+    async-lockstep drivers alike."""
+    prob, w0, w_star = small_problem
+    h = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=4)
+    np.testing.assert_array_equal(h.loss, np.asarray(GOLDEN_LOSSES[name]))
+    hs = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=4,
+                    comm=CommConfig())
+    np.testing.assert_array_equal(h.loss, hs.loss)
+    ha = run_rounds(make_optimizer(name, **kw), prob, w0, w_star, rounds=4,
+                    comm=CommConfig(async_mode=True))
+    np.testing.assert_array_equal(h.loss, ha.loss)
+
+
+def test_no_ef_eligible_literals_at_optimizer_call_sites():
+    """EF eligibility flows from ``SketchPolicy.basis_persistent`` — no
+    optimizer hardcodes ``ef_eligible=True/False`` at an uplink call
+    site anymore."""
+    from repro.core import first_order, flens, newton_family, sketched
+
+    pat = re.compile(r"ef_eligible\s*=\s*(True|False)")
+    for mod in (flens, sketched, newton_family, first_order):
+        assert not pat.search(inspect.getsource(mod)), mod.__name__
+
+
+def test_policy_object_and_spec_string_are_equivalent(small_problem):
+    prob, w0, w_star = small_problem
+    by_str = run_rounds(make_optimizer("flens", k=8, sketch="srht:rotate=2"),
+                        prob, w0, w_star, rounds=3)
+    by_pol = run_rounds(
+        make_optimizer("flens", k=8,
+                       sketch=SketchPolicy.parse("srht:rotate=2")),
+        prob, w0, w_star, rounds=3)
+    np.testing.assert_array_equal(by_str.loss, by_pol.loss)
+
+
+# ---------------------------------------------------------------------------
+# schedules through the round drivers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["srht:fixed", "srht:rotate=2"])
+def test_persistent_schedules_run_and_stay_lockstep(small_problem, spec):
+    """Fixed/rotating bases converge and keep the sync/async lock-step
+    equivalence (the rotation epoch rides the state's round counter, so
+    both drivers derive the same basis per version)."""
+    prob, w0, w_star = small_problem
+    h = run_rounds(make_optimizer("flens", k=8, sketch=spec), prob, w0,
+                   w_star, rounds=4)
+    assert np.isfinite(h.loss).all()
+    assert h.gap[-1] < h.gap[0]
+    ha = run_rounds(make_optimizer("flens", k=8, sketch=spec), prob, w0,
+                    w_star, rounds=4, comm=CommConfig(async_mode=True))
+    np.testing.assert_array_equal(h.loss, ha.loss)
+
+
+def test_ef_memory_follows_basis_persistence(small_problem):
+    """The EF shape probe allocates memory for sketch-basis payloads
+    exactly when the schedule keeps the basis across rounds."""
+    prob, w0, w_star = small_problem
+
+    def discover(name, **kw):
+        opt = make_optimizer(name, **kw)
+        state = opt.init(prob, w0)
+        sess = CommSession(CommConfig(codecs="topk0.25", error_feedback=True),
+                           m=prob.m)
+        return set(sess.init_error_feedback(
+            lambda cr: opt.round(prob, state, jax.random.PRNGKey(0), comm=cr)))
+
+    assert discover("flens", k=8) == set()  # fresh: ineligible
+    assert discover("flens", k=8, sketch="srht:rotate=4") == {"h_sk", "sg"}
+    assert discover("flens", k=8, sketch="srht:fixed") == {"h_sk", "sg"}
+    assert discover("fedns", k=8) == {"grad"}  # sa fresh, grad always
+    assert discover("fedns", k=8, sketch="srht:fixed") == {"grad", "sa"}
+    # rotate=1 redraws every round: fresh in all but name
+    assert discover("flens", k=8, sketch="srht:rotate=1") == set()
+
+
+def test_rotating_ef_same_bytes_as_fresh(small_problem):
+    """EF on a rotating basis changes which values ride the wire, never
+    how many bytes — the equal-byte comparison the benchmark gate
+    (flens_rot_ef) builds on."""
+    prob, w0, w_star = small_problem
+    codecs = {"h_sk": "topk0.25", "sg": "topk0.5"}
+    fresh = run_rounds(make_optimizer("flens", k=8), prob, w0, w_star,
+                       rounds=4, comm=CommConfig(codecs=codecs, seed=1))
+    rot = run_rounds(make_optimizer("flens", k=8, sketch="srht:rotate=2"),
+                     prob, w0, w_star, rounds=4,
+                     comm=CommConfig(codecs=codecs, error_feedback=True,
+                                     seed=1))
+    np.testing.assert_array_equal(fresh.cumulative_bytes,
+                                  rot.cumulative_bytes)
+    assert np.isfinite(rot.loss).all()
+    assert set(rot.ef_residuals) == {"h_sk", "sg"}
+    assert fresh.ef_residuals == {}
+
+
+# ---------------------------------------------------------------------------
+# adaptive-k: ramping, re-billing, driver support
+# ---------------------------------------------------------------------------
+
+def test_adaptive_k_ramps_on_guard_rejects_and_rebills(small_problem):
+    """The guard-driven ramp doubles k after rejected steps, and BOTH
+    drivers bill the round-varying payload sizes truthfully (the
+    round-trace bytes move with k; the no-comm formula axis derived from
+    the identity plan matches the traced wire exactly)."""
+    prob, w0, w_star = small_problem
+    kw = dict(k=4, sketch="srht:adaptive=4..16,c=0.1")
+    opt = make_optimizer("flens", **kw)
+    hist = run_rounds(opt, prob, w0, w_star, rounds=8, comm=CommConfig())
+    assert opt.policy.k_min == 4 and opt.policy.k_max == 16
+    assert opt.k > 4  # the guard rejected at least once on this problem
+    per_round = [int(t.bytes_up[0]) for t in hist.traces]
+    assert len(set(per_round)) > 1  # round-varying billing
+    # every billed size is (k^2 + k + 1) * 8 for a k in the ramp 4,8,16
+    assert set(per_round) <= {(k * k + k + 1) * 8 for k in (4, 8, 16)}
+    assert per_round == sorted(per_round)  # k never shrinks
+    # the no-comm formula axis re-bills identically
+    hist2 = run_rounds(make_optimizer("flens", **kw), prob, w0, w_star,
+                       rounds=8)
+    np.testing.assert_array_equal(hist.cumulative_bytes,
+                                  hist2.cumulative_bytes)
+
+
+def test_ef_reset_indicator_semantics():
+    rot = SketchPolicy.parse("srht:rotate=4")
+    assert [bool(rot.ef_reset(t)) for t in range(8)] == [
+        True, False, False, False, True, False, False, False]
+    # schedules that never rotate mid-run need no reset
+    assert SketchPolicy.parse("srht").ef_reset(0) is None
+    assert SketchPolicy.parse("srht:fixed").ef_reset(0) is None
+    assert SketchPolicy.parse("srht:rotate=1").ef_reset(0) is None
+
+
+def test_uplink_ef_reset_discards_stale_basis_memory():
+    """At an epoch boundary the EF residual accumulated in the previous
+    basis is zeroed BEFORE compensation: the round behaves exactly like
+    one starting from fresh memory."""
+    from repro.comm import CommRound
+
+    cfg = CommConfig(codecs="topk0.25", error_feedback=True)
+    m, d = 3, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, d), jnp.float64)
+    stale = 0.7 * jnp.ones((m, d), jnp.float64)
+    key = jax.random.PRNGKey(1)
+
+    def run(memory, reset):
+        cr = CommRound(cfg, {}, None, key, memory={"g": memory})
+        decoded = cr.uplink("g", x, ef_reset=reset)
+        return np.asarray(decoded), np.asarray(cr.memory_out["g"])
+
+    dec_reset, mem_reset = run(stale, reset=jnp.asarray(True))
+    dec_zero, mem_zero = run(jnp.zeros_like(stale), reset=None)
+    np.testing.assert_array_equal(dec_reset, dec_zero)
+    np.testing.assert_array_equal(mem_reset, mem_zero)
+    # without the reset the stale memory leaks into the decode
+    dec_stale, _ = run(stale, reset=jnp.asarray(False))
+    assert not np.array_equal(dec_stale, dec_zero)
+
+    # a client absent on the boundary round must STILL drop its old
+    # epoch's residual (the reset is schedule knowledge, not
+    # computation): its frozen row is the post-reset zero, never the
+    # stale pre-reset memory
+    mask = jnp.asarray([1.0, 0.0, 1.0])
+    cr = CommRound(cfg, {}, mask, key, memory={"g": stale})
+    cr.uplink("g", x, ef_reset=jnp.asarray(True))
+    out = np.asarray(cr.memory_out["g"])
+    np.testing.assert_array_equal(out[1], np.zeros(d))  # frozen AT zero
+    assert not np.allclose(out[0], 0.0)  # delivered rows advanced
+
+
+def test_adaptive_ramp_detects_rejects_at_scale_floor(small_problem):
+    """Sitting AT the trust-scale floor means the guard is still
+    rejecting (an accept doubles away from it): the ramp must not go
+    blind once the scale pins there."""
+    prob, w0, _ = small_problem
+    opt = make_optimizer("flens", k=4, sketch="srht:adaptive=4..64")
+    opt.init(prob, w0)
+    opt.policy = opt.policy.with_k(4)
+    floor = jnp.asarray(1.0 / 64.0)
+    opt.round_signature(1, {"scale": floor})  # drop to floor: reject
+    k_after_first = opt.k
+    opt.round_signature(2, {"scale": floor})  # pinned at floor: STILL a reject
+    assert opt.k > k_after_first
+    # a recovery (accept doubled the scale away from the floor) stops it
+    k_now = opt.k
+    opt.round_signature(3, {"scale": floor * 2})
+    assert opt.k == k_now
+
+
+def test_adaptive_rejected_where_nothing_ramps():
+    """Optimizers with no ramp signal refuse adaptive specs instead of
+    silently running constant-k."""
+    from repro.core.distributed import DistributedFLeNS
+    from repro.core.losses import logistic
+
+    with pytest.raises(ValueError, match="adaptive"):
+        make_optimizer("fedns", k=8, sketch="srht:adaptive")
+    with pytest.raises(ValueError, match="adaptive"):
+        make_optimizer("fedndes", sketch="srht:adaptive")
+    # FLeNS without the guard has no ramp signal either
+    with pytest.raises(ValueError, match="restart"):
+        make_optimizer("flens", k=8, sketch="srht:adaptive", restart=False)
+    mesh = jax.make_mesh((1,), ("data",))
+    dist = DistributedFLeNS(mesh=mesh, objective=logistic, dim=16, k=8,
+                            lam=1e-3, client_axes=("data",),
+                            sketch="srht:adaptive")
+    with pytest.raises(ValueError, match="adaptive"):
+        dist.round_fn()
+
+
+def test_adaptive_k_rejected_by_async_driver(small_problem):
+    prob, w0, w_star = small_problem
+    with pytest.raises(NotImplementedError, match="adaptive-k"):
+        run_rounds(make_optimizer("flens", k=4, sketch="srht:adaptive"),
+                   prob, w0, w_star, rounds=2,
+                   comm=CommConfig(async_mode=True))
+
+
+def test_fedndes_adaptive_k_unchanged_by_policy_routing(small_problem):
+    """FedNDES's dimension-efficient k now routes through the shared
+    ``adaptive_k`` rule and lands on the same value as before."""
+    prob, w0, w_star = small_problem
+    opt = make_optimizer("fedndes")
+    opt.init(prob, w0)
+    from repro.core.sketch import effective_dimension
+
+    h = prob.global_hessian(w0)
+    h_loss = h - prob.lam * jnp.eye(prob.dim, dtype=h.dtype)
+    d_lam = float(effective_dimension(h_loss, prob.lam))
+    want = int(min(max(8, int(jnp.ceil(2.0 * d_lam))), prob.X.shape[1]))
+    assert opt.k == want
+
+
+# ---------------------------------------------------------------------------
+# formula bytes == measured wire (NullSession payload-plan probe)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kw", [
+    ("flens", dict(k=8)),  # guarded: 2M + 1 downlink
+    ("fednew", {}),  # w + d_bar broadcast
+    ("distributed_newton", {}),  # w + global-gradient broadcast
+    ("fednl", {}),  # native rank-1 wire shape
+    ("fedavg", {}),
+])
+def test_formula_bytes_match_measured_wire(small_problem, name, kw):
+    """The no-comm byte axis (identity payload-plan probe) equals the
+    traced identity-codec wire — and the corrected per-optimizer
+    float-count formulas agree with both."""
+    prob, w0, w_star = small_problem
+    opt = make_optimizer(name, **kw)
+    plain = run_rounds(opt, prob, w0, w_star, rounds=2)
+    wired = run_rounds(make_optimizer(name, **kw), prob, w0, w_star,
+                       rounds=2, comm=CommConfig())
+    np.testing.assert_array_equal(plain.cumulative_bytes,
+                                  wired.cumulative_bytes)
+    formula = (opt.uplink_floats(prob) + opt.downlink_floats(prob)) \
+        * 8 * prob.m
+    assert float(plain.cumulative_bytes[1]) == float(formula)
+
+
+def test_unguarded_flens_downlink_formula(small_problem):
+    """restart=False drops the w_next broadcast: downlink is M + 1."""
+    prob, _, _ = small_problem
+    assert make_optimizer("flens", k=8).downlink_floats(prob) \
+        == 2 * prob.dim + 1
+    assert make_optimizer("flens", k=8, restart=False).downlink_floats(prob) \
+        == prob.dim + 1
+
+
+def test_schedule_composes_with_lossy_partial_participation(small_problem):
+    """Rotating basis + EF survives dropout/partial cohorts (memory
+    gating spans epochs) and still converges."""
+    prob, w0, w_star = small_problem
+    comm = CommConfig(
+        codecs={"h_sk": "sympack+qint8", "sg": "qint8"},
+        scheduler="uniform:0.7",
+        channel=ChannelModel(dropout_prob=0.15),
+        error_feedback=True,
+        seed=3,
+    )
+    hist = run_rounds(make_optimizer("flens", k=12, sketch="srht:rotate=3"),
+                      prob, w0, w_star, rounds=8, comm=comm)
+    assert np.isfinite(hist.loss).all()
+    assert hist.gap[-1] < hist.gap[0] * 0.5
