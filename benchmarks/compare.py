@@ -1,10 +1,12 @@
-"""CI benchmark regression gate: compare a fresh comm benchmark run
-against the committed baseline.
+"""CI benchmark regression gates: compare fresh benchmark records
+against their committed baselines.
 
-The comm benchmark (``python -m benchmarks.run --only comm``) is fully
-seeded — channel draws, cohorts, and codec randomness are all pure
-functions of ``CommConfig.seed`` — so on a pinned environment any drift
-in its record is a regression, not noise:
+Two gates share one drift-table engine:
+
+**Comm gate** (default). The comm benchmark (``python -m benchmarks.run
+--only comm``) is fully seeded — channel draws, cohorts, and codec
+randomness are all pure functions of ``CommConfig.seed`` — so on a
+pinned environment any drift in its record is a regression, not noise:
 
   * ``cumulative_bytes`` is derived from static payload shapes and codec
     wire formats; it must match the baseline EXACTLY (a byte-accounting
@@ -12,16 +14,32 @@ in its record is a regression, not noise:
   * final losses may move by float-level jitter across jax/BLAS builds,
     so they get a small relative tolerance instead of equality.
 
+**Bench gate** (``--bench``). Gates the perf-trajectory artifact
+``BENCH_round_time.json`` (``python -m benchmarks.run --only
+round_time``): structure and byte/loss fields are exact-or-rtol like the
+comm gate, while wall-clock fields (``exec_s_per_round``,
+``compile_s``) are machine-dependent and only gated against a generous
+slowdown factor (``--time-factor``, default 5x — a real perf cliff, not
+scheduler jitter). Record-then-gate: when the baseline file does not
+exist yet, the current record is INSTALLED as the baseline (exit 0,
+commit it); every later run gates against it.
+
+Both gates print a per-record drift table (baseline vs current,
+relative delta, pass/fail per field) — every comparison is shown, not
+just the first failure.
+
 Usage (exit code 1 on any violation):
 
   python benchmarks/compare.py results/comm.json results/comm_baseline.json
   python benchmarks/compare.py CURRENT BASELINE --loss-rtol 5e-3
+  python benchmarks/compare.py --bench        # BENCH_round_time.json gate
 
-Refreshing the baseline after an INTENTIONAL change (re-runs the seeded
+Refreshing a baseline after an INTENTIONAL change (re-runs the seeded
 benchmark in-process and writes the result as the new baseline — commit
 the file it reports):
 
   python benchmarks/compare.py --update
+  python benchmarks/compare.py --bench --update
 """
 
 from __future__ import annotations
@@ -43,44 +61,204 @@ def _rel_err(a: float, b: float) -> float:
     return abs(a - b) / denom
 
 
-def compare(current: dict, baseline: dict, loss_rtol: float) -> list[str]:
-    """Return a list of human-readable violations (empty = gate passes)."""
-    violations = []
+# ---------------------------------------------------------------------------
+# drift rows + table
+# ---------------------------------------------------------------------------
+
+
+def _row(record: str, field: str, old, new, ok: bool, note: str = "") -> dict:
+    """One drift-table entry: a (record, field) comparison outcome."""
+    rel = None
+    if isinstance(old, (int, float)) and isinstance(new, (int, float)):
+        rel = _rel_err(float(new), float(old))
+    return {
+        "record": record,
+        "field": field,
+        "old": old,
+        "new": new,
+        "rel": rel,
+        "ok": bool(ok),
+        "note": note,
+    }
+
+
+def _fmt_val(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def drift_table(rows: list[dict]) -> str:
+    """Render drift rows as a fixed-width per-record table (every
+    comparison, not just failures)."""
+    if not rows:
+        return "(nothing compared)"
+    header = ("record", "field", "baseline", "current", "rel-delta", "status")
+    body = [
+        (
+            r["record"],
+            r["field"],
+            _fmt_val(r["old"]),
+            _fmt_val(r["new"]),
+            "-" if r["rel"] is None else f"{r['rel']:.2e}",
+            ("PASS" if r["ok"] else "FAIL") + (f" ({r['note']})" if r["note"] else ""),
+        )
+        for r in rows
+    ]
+    widths = [
+        max(len(header[i]), *(len(b[i]) for b in body)) for i in range(len(header))
+    ]
+    lines = [
+        "  ".join(h.ljust(w) for h, w in zip(header, widths)),
+        "  ".join("-" * w for w in widths),
+    ]
+    lines += ["  ".join(c.ljust(w) for c, w in zip(b, widths)) for b in body]
+    return "\n".join(lines)
+
+
+def violations_of(rows: list[dict]) -> list[str]:
+    """Human-readable violation lines for the failing rows."""
+    out = []
+    for r in rows:
+        if r["ok"]:
+            continue
+        msg = (
+            f"{r['record']}: {r['field']} drifted "
+            f"{_fmt_val(r['old'])} -> {_fmt_val(r['new'])}"
+        )
+        if r["note"]:
+            msg += f" ({r['note']})"
+        out.append(msg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# comm gate
+# ---------------------------------------------------------------------------
+
+
+def compare(current: dict, baseline: dict, loss_rtol: float) -> list[dict]:
+    """Compare a comm benchmark record against its baseline; returns
+    drift rows (``violations_of`` extracts the failures)."""
+    rows: list[dict] = []
     cur_vars = current.get("variants", {})
     base_vars = baseline.get("variants", {})
     missing = sorted(set(base_vars) - set(cur_vars))
     if missing:
-        violations.append(f"variants missing from current run: {missing}")
+        rows.append(
+            _row(
+                "(structure)",
+                "variants",
+                sorted(base_vars),
+                sorted(cur_vars),
+                False,
+                f"missing from current run: {missing}",
+            )
+        )
     added = sorted(set(cur_vars) - set(base_vars))
     if added:
-        violations.append(
-            f"variants not in the baseline (refresh it to gate them): {added}"
+        rows.append(
+            _row(
+                "(structure)",
+                "variants",
+                sorted(base_vars),
+                sorted(cur_vars),
+                False,
+                f"not in the baseline (refresh it to gate them): {added}",
+            )
         )
     for name in sorted(set(base_vars) & set(cur_vars)):
         cur, base = cur_vars[name], base_vars[name]
         # --- byte accounting: exact ------------------------------------
         cb, bb = cur["cumulative_bytes"][-1], base["cumulative_bytes"][-1]
-        if cb != bb:
-            violations.append(
-                f"{name}: total bytes drifted {bb} -> {cb} "
-                f"(byte accounting must match the baseline exactly)"
+        rows.append(
+            _row(
+                name,
+                "bytes_total",
+                bb,
+                cb,
+                cb == bb,
+                "" if cb == bb else "byte accounting must match exactly",
             )
+        )
         for key in ("total_bytes_up", "total_bytes_down"):
-            if cur["stats"][key] != base["stats"][key]:
-                violations.append(
-                    f"{name}: stats.{key} drifted "
-                    f"{base['stats'][key]} -> {cur['stats'][key]}"
-                )
+            cs, bs = cur["stats"][key], base["stats"][key]
+            rows.append(_row(name, f"stats.{key}", bs, cs, cs == bs))
         # --- final loss: small relative tolerance ----------------------
         cl, bl = float(cur["loss_final"]), float(base["loss_final"])
         if not (math.isfinite(cl) and math.isfinite(bl)):
-            violations.append(f"{name}: non-finite loss (cur={cl} base={bl})")
-        elif _rel_err(cl, bl) > loss_rtol:
-            violations.append(
-                f"{name}: final loss drifted {bl:.9g} -> {cl:.9g} "
-                f"(rel err {_rel_err(cl, bl):.2e} > rtol {loss_rtol:.0e})"
+            rows.append(_row(name, "loss_final", bl, cl, False, "non-finite"))
+        else:
+            ok = _rel_err(cl, bl) <= loss_rtol
+            rows.append(_row(name, "loss_final", bl, cl, ok, f"rtol {loss_rtol:g}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# bench (perf trajectory) gate
+# ---------------------------------------------------------------------------
+
+# deterministic per-optimizer fields: exact / loss-rtol gated
+_BENCH_EXACT = ("bytes_total", "uplink_floats")
+_BENCH_LOSS = ("loss_final", "loss_at_budget")
+# machine-dependent wall-clock fields: gated only against a generous
+# slowdown RATIO (a relative error is bounded by 1 and cannot express
+# "5x slower", hence a factor, not an rtol)
+_BENCH_TIME = ("exec_s_per_round", "compile_s")
+
+
+def compare_bench(
+    current: dict, baseline: dict, loss_rtol: float, time_factor: float
+) -> list[dict]:
+    """Compare a ``BENCH_round_time.json`` record against its baseline;
+    structure and byte/loss fields are exact-or-rtol, wall-clock fields
+    pass unless they slowed down by more than ``time_factor``x."""
+    rows: list[dict] = []
+    for key in ("schema", "dataset", "rounds", "clients"):
+        cv, bv = current.get(key), baseline.get(key)
+        rows.append(_row("(structure)", key, bv, cv, cv == bv))
+    cur_opts = current.get("optimizers", {})
+    base_opts = baseline.get("optimizers", {})
+    if sorted(cur_opts) != sorted(base_opts):
+        rows.append(
+            _row(
+                "(structure)",
+                "optimizers",
+                sorted(base_opts),
+                sorted(cur_opts),
+                False,
+                "optimizer lineup drifted",
             )
-    return violations
+        )
+    cb, bb = current.get("budget_bytes"), baseline.get("budget_bytes")
+    rows.append(_row("(structure)", "budget_bytes", bb, cb, cb == bb))
+    for name in sorted(set(base_opts) & set(cur_opts)):
+        cur, base = cur_opts[name], base_opts[name]
+        for key in _BENCH_EXACT:
+            rows.append(_row(name, key, base[key], cur[key], cur[key] == base[key]))
+        for key in _BENCH_LOSS:
+            cl, bl = float(cur[key]), float(base[key])
+            finite = math.isfinite(cl) and math.isfinite(bl)
+            ok = finite and _rel_err(cl, bl) <= loss_rtol
+            rows.append(_row(name, key, bl, cl, ok, f"rtol {loss_rtol:g}"))
+        for key in _BENCH_TIME:
+            ct, bt = float(cur[key]), float(base[key])
+            # slowdown-only gate: getting faster always passes
+            ok = ct <= time_factor * max(bt, 1e-9)
+            rows.append(_row(name, key, bt, ct, ok, f"<= {time_factor:g}x baseline"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# baseline refresh
+# ---------------------------------------------------------------------------
+
+
+def _chdir_root() -> None:
+    for p in (_ROOT, _ROOT / "src"):  # plain `python benchmarks/compare.py`
+        if str(p) not in sys.path:
+            sys.path.insert(0, str(p))
+    os.chdir(_ROOT)
 
 
 def update_baseline(baseline: pathlib.Path) -> pathlib.Path:
@@ -93,10 +271,7 @@ def update_baseline(baseline: pathlib.Path) -> pathlib.Path:
     an explicitly-passed relative BASELINE is resolved against the
     caller's CWD first."""
     baseline = baseline.resolve()
-    for p in (_ROOT, _ROOT / "src"):  # plain `python benchmarks/compare.py`
-        if str(p) not in sys.path:
-            sys.path.insert(0, str(p))
-    os.chdir(_ROOT)
+    _chdir_root()
     from benchmarks.run import RESULTS, bench_comm
 
     RESULTS.mkdir(exist_ok=True)
@@ -106,21 +281,37 @@ def update_baseline(baseline: pathlib.Path) -> pathlib.Path:
     return fresh
 
 
+def update_bench_baseline(baseline: pathlib.Path) -> pathlib.Path:
+    """Re-run the seeded round_time benchmark and install its record as
+    the new bench baseline (wall-clock fields come along for the ride —
+    they are only ever ratio-gated)."""
+    baseline = baseline.resolve()
+    _chdir_root()
+    from benchmarks.run import BENCH_PATH, RESULTS, bench_round_time
+
+    RESULTS.mkdir(exist_ok=True)
+    bench_round_time(full=False)
+    shutil.copyfile(BENCH_PATH, baseline)
+    return BENCH_PATH
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
-        description="Fail when the comm benchmark drifts from its baseline."
+        description="Fail when a benchmark record drifts from its baseline."
     )
+    ap.add_argument("current", type=pathlib.Path, nargs="?", default=None)
+    ap.add_argument("baseline", type=pathlib.Path, nargs="?", default=None)
     ap.add_argument(
-        "current",
-        type=pathlib.Path,
-        nargs="?",
-        default=_ROOT / "results" / "comm.json",
-    )
-    ap.add_argument(
-        "baseline",
-        type=pathlib.Path,
-        nargs="?",
-        default=_ROOT / "results" / "comm_baseline.json",
+        "--bench",
+        action="store_true",
+        help="gate BENCH_round_time.json (perf trajectory) instead of the "
+        "comm record; record-then-gate — a missing baseline is installed "
+        "from the current record",
     )
     ap.add_argument(
         "--loss-rtol",
@@ -130,37 +321,84 @@ def main(argv: list[str] | None = None) -> int:
         "(absorbs BLAS/jax build jitter; default 5e-3)",
     )
     ap.add_argument(
+        "--time-factor",
+        type=float,
+        default=5.0,
+        help="--bench only: allowed wall-clock slowdown factor vs baseline "
+        "(default 5x; speedups always pass)",
+    )
+    ap.add_argument(
         "--update",
         action="store_true",
-        help="regenerate the baseline: re-run the seeded comm benchmark "
+        help="regenerate the baseline: re-run the seeded benchmark "
         "and write its record to BASELINE (commit the result)",
     )
     args = ap.parse_args(argv)
 
+    if args.bench:
+        current = args.current or (_ROOT / "BENCH_round_time.json")
+        baseline = args.baseline or (
+            _ROOT / "results" / "bench_round_time_baseline.json"
+        )
+    else:
+        current = args.current or (_ROOT / "results" / "comm.json")
+        baseline = args.baseline or (_ROOT / "results" / "comm_baseline.json")
+
     if args.update:
-        fresh = update_baseline(args.baseline)
-        n = len(json.loads(args.baseline.read_text()).get("variants", {}))
+        if args.bench:
+            fresh = update_bench_baseline(baseline)
+            n = len(json.loads(baseline.read_text()).get("optimizers", {}))
+            what = "optimizers"
+        else:
+            fresh = update_baseline(baseline)
+            n = len(json.loads(baseline.read_text()).get("variants", {}))
+            what = "variants"
         print(
-            f"baseline refreshed: {fresh} -> {args.baseline} "
-            f"({n} variants); commit the new baseline"
+            f"baseline refreshed: {fresh} -> {baseline} "
+            f"({n} {what}); commit the new baseline"
         )
         return 0
 
-    current = json.loads(args.current.read_text())
-    baseline = json.loads(args.baseline.read_text())
-    violations = compare(current, baseline, args.loss_rtol)
+    cur_doc = json.loads(current.read_text())
+    if args.bench and not baseline.exists():
+        # record-then-gate: first run installs the baseline
+        baseline.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(current, baseline)
+        n = len(cur_doc.get("optimizers", {}))
+        print(
+            f"bench baseline recorded: {current} -> {baseline} "
+            f"({n} optimizers); commit it — later runs gate against it"
+        )
+        return 0
+    base_doc = json.loads(baseline.read_text())
+
+    if args.bench:
+        rows = compare_bench(cur_doc, base_doc, args.loss_rtol, args.time_factor)
+        gate = f"bench gate (time factor {args.time_factor:g}x)"
+        n = len(base_doc.get("optimizers", {}))
+        unit = "optimizers"
+    else:
+        rows = compare(cur_doc, base_doc, args.loss_rtol)
+        gate = "comm gate"
+        n = len(base_doc.get("variants", {}))
+        unit = "variants"
+
+    print(drift_table(rows))
+    violations = violations_of(rows)
     if violations:
-        print(f"BENCHMARK REGRESSION GATE FAILED ({len(violations)} violation(s)):")
+        print(f"\nBENCHMARK REGRESSION GATE FAILED ({len(violations)} violation(s)):")
         for v in violations:
             print(f"  - {v}")
+        update_cmd = "python benchmarks/compare.py " + (
+            "--bench --update" if args.bench else "--update"
+        )
         print(
             "If the change is intentional, refresh the baseline: "
-            "python benchmarks/compare.py --update  (and commit it)"
+            f"{update_cmd}  (and commit it)"
         )
         return 1
-    n = len(baseline.get("variants", {}))
     print(
-        f"benchmark gate OK: {n} variants match the baseline "
+        f"\n{gate} OK: {n} {unit} match the baseline "
         f"(bytes exact, loss rtol {args.loss_rtol:g})"
     )
     return 0

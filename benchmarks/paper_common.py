@@ -116,11 +116,15 @@ def check_async_lockstep_anchor(make_opt, prob, w0, w_star, channel, *,
 
 
 def sync_async_race(make_opt, prob, w0, w_star, channel, *, rounds: int,
-                    seed: int = 1, buffer_size: "int | None" = None) -> dict:
+                    seed: int = 1, buffer_size: "int | None" = None,
+                    obs_for=None) -> dict:
     """The canonical three-driver race on one channel/seed: lock-step
     sync, a FedBuff-style buffer (default K = m/4, 4x the commits), and
     a 50%-quantile quorum (3x the commits), both with inverse staleness
-    weighting. Returns ``{name: History}`` in run order (sync first)."""
+    weighting. Returns ``{name: History}`` in run order (sync first).
+
+    ``obs_for(name) -> TelemetryConfig | None`` opts each driver into
+    the ``repro.obs`` telemetry layer (default: uninstrumented)."""
     buf = buffer_size if buffer_size is not None else max(2, prob.m // 4)
     runs = [
         ("sync", rounds, CommConfig(channel=channel, seed=seed)),
@@ -132,7 +136,8 @@ def sync_async_race(make_opt, prob, w0, w_star, channel, *, rounds: int,
             staleness="inverse")),
     ]
     return {name: run_rounds(make_opt(), prob, w0, w_star, rounds=r,
-                             comm=comm)
+                             comm=comm,
+                             obs=obs_for(name) if obs_for else None)
             for name, r, comm in runs}
 
 

@@ -397,6 +397,121 @@ def bench_async(full: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Perf trajectory: per-optimizer compile/exec wall-clock + bytes + loss
+# ---------------------------------------------------------------------------
+
+# the representative per-family lineup the perf trajectory tracks (one
+# first-order, one exact-Newton, and the three sketched-Newton variants
+# the paper headlines); kwargs as in fig1_methods
+_ROUND_TIME_OPTS = [
+    ("fedavg", lambda k: dict(lr=2.0, local_steps=5)),
+    ("fednewton", lambda k: {}),
+    ("fedns", lambda k: dict(k=k)),
+    ("flens", lambda k: dict(k=k)),
+    ("flens_plus", lambda k: dict(k=k)),
+]
+
+# committed at the repo root: the tracked perf-trajectory artifact
+# (schema-checked by `python -m repro.obs.report --check-schema`, gated
+# by `python benchmarks/compare.py --bench`)
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / (
+    "BENCH_round_time.json")
+
+
+def bench_round_time(full: bool) -> None:
+    """The tracked wall-clock axis: run the representative optimizer
+    lineup through the instrumented round driver and emit
+    ``BENCH_round_time.json`` (repo root) with, per optimizer, the
+    compile-vs-execute wall-clock split (from ``repro.obs`` telemetry —
+    first jitted-round call billed as compile), the exact transported
+    bytes, and the loss reached at a common byte budget (the smallest
+    total any optimizer transmitted, so every method is compared at
+    bytes it actually reached). Bytes and losses are pure functions of
+    ``CommConfig.seed`` — deterministic, gated against the committed
+    baseline by ``benchmarks/compare.py --bench``; wall-clock fields are
+    machine-dependent and gated only by a generous slowdown factor.
+
+    The full per-round telemetry stream (phase timings, per-round
+    records) lands in ``results/telemetry_round_time.jsonl`` — one
+    artifact, one run per optimizer label, rendered by
+    ``python -m repro.obs.report``. When roofline dry-run artifacts are
+    present (``results/dryrun*``), their per-arch dominant-term summary
+    is attached under ``"roofline"`` so the accelerator-model axis rides
+    the same tracked file.
+    """
+    from benchmarks.paper_common import build_problem
+    from benchmarks.roofline import aggregate
+    from repro.comm import CommConfig
+    from repro.core import make_optimizer, run_rounds
+    from repro.obs import TelemetryConfig
+    from repro.obs.report import BENCH_SCHEMA
+
+    spec, prob, w0, w_star = build_problem("phishing",
+                                           n_cap=None if full else 20000)
+    rounds = 20 if full else 12
+    k = spec.sketch_k
+    telemetry_path = RESULTS / "telemetry_round_time.jsonl"
+    telemetry_path.unlink(missing_ok=True)  # the jsonl sink appends
+
+    opts: dict = {}
+    hists: dict = {}
+    for name, kw_fn in _ROUND_TIME_OPTS:
+        hist = run_rounds(
+            make_optimizer(name, **kw_fn(k)), prob, w0, w_star,
+            rounds=rounds, comm=CommConfig(seed=1),
+            obs=TelemetryConfig(sink=f"jsonl:{telemetry_path}", label=name))
+        tel = hist.telemetry
+        hists[name] = hist
+        opts[name] = {
+            # wall-clock (machine-dependent; gated by ratio only)
+            "compile_s": tel["compile_s"],
+            "exec_s": tel["exec_s"],
+            "exec_s_per_round": tel["exec_s_per_round"],
+            "wall_time_s": hist.wall_time_s,
+            # deterministic (gated exactly / at loss rtol)
+            "bytes_total": float(hist.cumulative_bytes[-1]),
+            "uplink_floats": int(hist.uplink_floats),
+            "loss_final": float(hist.loss[-1]),
+        }
+        _csv(f"round_time/{name}", tel["exec_s_per_round"] * 1e6,
+             f"compile_s={tel['compile_s']:.3f};"
+             f"bytes_total={hist.cumulative_bytes[-1]:.0f};"
+             f"loss_final={hist.loss[-1]:.6f}")
+
+    # loss at the common byte budget: the smallest total transmitted —
+    # every optimizer's curve is interpolated at bytes it reached
+    budget = min(row["bytes_total"] for row in opts.values())
+    for name, hist in hists.items():
+        opts[name]["loss_at_budget"] = float(
+            np.interp(budget, hist.cumulative_bytes, hist.loss))
+
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "dataset": spec.name,
+        "rounds": rounds,
+        "clients": prob.m,
+        "budget_bytes": budget,
+        "optimizers": opts,
+    }
+    dryrun = RESULTS / ("dryrun_opt" if (RESULTS / "dryrun_opt").exists()
+                        else "dryrun")
+    if dryrun.exists():
+        doc["roofline"] = [
+            {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+             "status": r["status"],
+             **({"dominant": r["roofline"]["dominant"],
+                 "compute_s": r["roofline"]["compute_s"],
+                 "memory_s": r["roofline"]["memory_s"],
+                 "collective_s": r["roofline"]["collective_s"]}
+                if r["status"] == "ok" else {})}
+            for r in aggregate(dryrun)
+        ]
+    BENCH_PATH.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    _csv("round_time/artifact", 0.0,
+         f"budget_MB={budget / 1e6:.3f};wrote={BENCH_PATH.name}")
+
+
+# ---------------------------------------------------------------------------
 # Kernel micro-benchmarks (CPU timings of the portable paths)
 # ---------------------------------------------------------------------------
 
@@ -505,6 +620,7 @@ BENCHES = {
     "table1": bench_table1_communication,
     "comm": bench_comm,
     "async": bench_async,
+    "round_time": bench_round_time,
     "sketch_types": bench_sketch_types,
     "ablation": bench_flens_ablation,
     "kernels": bench_kernels,

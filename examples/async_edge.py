@@ -21,12 +21,22 @@ The channel, the anchor check, and the three-driver race all live in
 with ``benchmarks/run.py --only async`` — tune them there and both
 consumers move together.
 
+Every run is instrumented with the ``repro.obs`` telemetry layer
+(``obs=TelemetryConfig(...)``), the trajectories are exported with
+``History.to_jsonl`` (one self-describing artifact per driver, loss /
+byte / staleness curves plus per-commit ``RoundTrace`` lines — load
+them back with ``History.from_jsonl``), and the shared telemetry
+stream can be rendered with::
+
+  PYTHONPATH=src python -m repro.obs.report results/examples/async_edge_telemetry.jsonl
+
+Run me::
+
   PYTHONPATH=src python examples/async_edge.py
   PYTHONPATH=src python examples/async_edge.py --rounds 16 --buffer 8
 """
 
 import argparse
-import json
 import pathlib
 import sys
 
@@ -41,12 +51,13 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 from benchmarks.paper_common import (
     build_problem,
     check_async_lockstep_anchor,
-    hist_record,
     loss_at,
     straggler_edge_channel,
     sync_async_race,
 )
 from repro.core import make_optimizer
+from repro.core.base import History
+from repro.obs import TelemetryConfig
 
 
 def main() -> None:
@@ -74,8 +85,24 @@ def main() -> None:
     assert anchored
 
     # --- the race: same channel, same seed, three drivers ------------------
+    # every driver shares one telemetry artifact (records carry the
+    # driver name as their label); instrumentation is null-overhead on
+    # the optimization itself — trajectories stay bit-identical
+    dest = pathlib.Path("results/examples")
+    dest.mkdir(parents=True, exist_ok=True)
+    telemetry_path = dest / "async_edge_telemetry.jsonl"
+    telemetry_path.unlink(missing_ok=True)  # the jsonl sink appends
     hists = sync_async_race(
-        fedavg, prob, w0, w_star, chan, rounds=args.rounds, buffer_size=args.buffer
+        fedavg,
+        prob,
+        w0,
+        w_star,
+        chan,
+        rounds=args.rounds,
+        buffer_size=args.buffer,
+        obs_for=lambda name: TelemetryConfig(
+            sink=f"jsonl:{telemetry_path}", label=name
+        ),
     )
     print(
         f"\n=== {spec.name}: M={prob.dim} m={m} | 30% stragglers x10, "
@@ -85,7 +112,6 @@ def main() -> None:
         f"{'driver':>16} {'commits':>7} {'sim_s':>7} {'s/commit':>8} "
         f"{'loss_final':>10} {'mean_tau':>8}"
     )
-    out = {}
     for name, hist in hists.items():
         r = hist.rounds
         tau = float(np.nanmean(hist.staleness)) if hist.staleness is not None else 0.0
@@ -93,7 +119,6 @@ def main() -> None:
             f"{name:>16} {r:>7d} {hist.sim_time_s[-1]:>7.2f} "
             f"{hist.sim_time_s[-1] / r:>8.3f} {hist.loss[-1]:>10.6f} {tau:>8.2f}"
         )
-        out[name] = hist_record(hist)
 
     sync_h = hists["sync"]
     print("\n--- loss at common simulated-time points ---")
@@ -112,10 +137,20 @@ def main() -> None:
             f"{margin:.2e} loss (best: {best})"
         )
 
-    dest = pathlib.Path("results/examples")
-    dest.mkdir(parents=True, exist_ok=True)
-    (dest / "async_edge.json").write_text(json.dumps(out, indent=1))
-    print("wrote results/examples/async_edge.json")
+    # --- export: one self-describing JSONL per driver ----------------------
+    # History.to_jsonl replaces the old ad-hoc curve dump: the artifact
+    # round-trips through History.from_jsonl with every per-commit
+    # RoundTrace (incl. staleness) and the telemetry summary intact
+    print()
+    for name, hist in hists.items():
+        path = hist.to_jsonl(dest / f"async_edge_{name}.jsonl")
+        back = History.from_jsonl(path)
+        assert np.array_equal(hist.loss, back.loss)
+        print(f"wrote {path} ({len(back.traces or [])} round traces)")
+    print(
+        f"wrote {telemetry_path} (render with "
+        f"`python -m repro.obs.report {telemetry_path}`)"
+    )
 
 
 if __name__ == "__main__":

@@ -65,7 +65,6 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-import warnings
 from typing import Any, Callable, Dict, List
 
 import jax
@@ -74,6 +73,8 @@ import numpy as np
 
 from repro.comm import feedback
 from repro.comm.metrics import RoundTrace
+from repro.obs import NULL_TELEMETRY
+from repro.obs import log as obs_log
 
 # a dropped upload is retried with fresh channel coins; after this many
 # consecutive drops the delivery is forced so the simulation cannot spin
@@ -138,9 +139,11 @@ class AsyncSession:
         keys: jax.Array,  # (rounds, 2) per-version optimizer round keys
         state0: Any = None,
         mask_dtype=jnp.float64,
+        obs=NULL_TELEMETRY,
     ):
         self.config = config
         self.m = m
+        self.obs = obs
         self.client_weights = np.asarray(client_weights, dtype=np.float64)
         self.keys = keys
         self._state0 = state0
@@ -168,7 +171,7 @@ class AsyncSession:
         self._snapshots: Dict[int, Any] = {}
         self._heap: list = []  # (time, seq, _Flight)
         self._seq = 0
-        self._buffer: List[tuple] = []  # (client, version, straggler)
+        self._buffer: List[tuple] = []  # (client, version, straggler, t_arr)
         self._idle: set = set()
         self._quorum_capped = False
         self._pending_down = np.zeros(m, dtype=np.float64)
@@ -235,6 +238,11 @@ class AsyncSession:
     def finalize(self):
         from repro.comm.metrics import transport_from_traces
 
+        if self.obs.enabled:
+            ef_bytes = sum(
+                int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+                for a in jax.tree_util.tree_leaves(self.ef_memory))
+            self.obs.metrics.gauge("ef_memory_bytes").set(float(ef_bytes))
         return transport_from_traces(
             self.traces,
             staleness=np.array([tr.mean_staleness for tr in self.traces]),
@@ -292,6 +300,11 @@ class AsyncSession:
         flight = _Flight(client=j, version=self.version,
                          straggler=straggler, dropped=dropped, retry=retry)
         heapq.heappush(self._heap, (now + dt, self._seq, flight))
+        self.obs.flight.record(
+            "dispatch", now, client=j, version=self.version,
+            eta=now + dt, straggler=straggler, retry=retry)
+        if retry:
+            self.obs.metrics.counter("upload_retries").inc()
 
     def _pump(self) -> float:
         """Advance the event clock until the commit quorum buffers;
@@ -308,10 +321,12 @@ class AsyncSession:
             need = max(1, min(self.quorum, len(self._buffer) + len(self._heap)))
             if need < self.quorum and not self._quorum_capped:
                 self._quorum_capped = True
-                warnings.warn(
+                obs_log.warn_with_context(
                     f"async commit quorum capped at {need} (< configured "
                     f"{self.quorum}): the scheduler keeps fewer clients in "
-                    f"flight than the quorum asks for", stacklevel=2)
+                    f"flight than the quorum asks for",
+                    server_version=self.version, quorum=self.quorum,
+                    capped_to=need)
             if len(self._buffer) >= need:
                 return t
             if not self._heap:
@@ -322,10 +337,18 @@ class AsyncSession:
             t, _, flight = heapq.heappop(self._heap)
             if flight.dropped:
                 self._pending_dropped[flight.client] = True
+                self.obs.flight.record(
+                    "drop", t, client=flight.client, version=flight.version,
+                    retry=flight.retry)
                 self._redispatch(flight.client, t, flight.retry + 1)
             else:
                 self._buffer.append(
-                    (flight.client, flight.version, flight.straggler))
+                    (flight.client, flight.version, flight.straggler, t))
+                self.obs.flight.record(
+                    "arrival", t, client=flight.client,
+                    version=flight.version,
+                    server_version=self.version,
+                    buffered=len(self._buffer))
 
     # -- one server commit --------------------------------------------------
     def step(self, round_fn) -> Any:
@@ -334,10 +357,12 @@ class AsyncSession:
         codec_key) -> (state, memory)`` is the jitted optimizer round."""
         commit_time = self._pump()
         committed, self._buffer = self._buffer, []
+        if self.obs.enabled:
+            self._observe_commit(committed, commit_time)
 
         # group arrivals by the model version they computed on
         groups: Dict[int, List[tuple]] = {}
-        for client, version, straggler in committed:
+        for client, version, straggler, _ in committed:
             groups.setdefault(version, []).append((client, straggler))
         order = sorted(groups, reverse=True)  # freshest first
 
@@ -399,15 +424,31 @@ class AsyncSession:
         self._snapshots[self.version] = state_new
         self._gc_snapshots()
         self._dispatch_cohort(
-            sorted({c for c, _, _ in committed} | self._idle),
+            sorted({c for c, _, _, _ in committed} | self._idle),
             now=commit_time)
         return state_new
+
+    def _observe_commit(self, committed, commit_time: float) -> None:
+        """Populate commit-time telemetry (host-side, before aggregation;
+        only called when telemetry is enabled)."""
+        mt = self.obs.metrics
+        mt.histogram("commit_buffer_depth").observe(len(committed))
+        mt.histogram("inflight_depth").observe(len(self._heap))
+        mt.histogram("staleness").observe_many(
+            float(self.version - v) for _, v, _, _ in committed)
+        mt.histogram("buffered_upload_age_s").observe_many(
+            commit_time - t_arr for _, _, _, t_arr in committed)
+        self.obs.flight.record(
+            "commit", commit_time, version=self.version + 1,
+            server_version=self.version,
+            clients=sorted(c for c, _, _, _ in committed),
+            inflight=len(self._heap))
 
     def _record_trace(self, committed, commit_time: float) -> None:
         mask = np.zeros(self.m, dtype=bool)
         straggler = np.zeros(self.m, dtype=bool)
         stale = np.full(self.m, np.nan)
-        for client, version, was_straggler in committed:
+        for client, version, was_straggler, _ in committed:
             mask[client] = True
             straggler[client] = was_straggler
             stale[client] = float(self.version - version)
@@ -426,6 +467,22 @@ class AsyncSession:
             staleness=stale,
             version=self.version + 1,
         ))
+        if self.obs.enabled:
+            tr = self.traces[-1]
+            mt = self.obs.metrics
+            mt.counter("bytes_up").inc(float(tr.bytes_up.sum()))
+            mt.counter("bytes_down").inc(float(tr.bytes_down.sum()))
+            mt.counter("delivered_client_rounds").inc(float(mask.sum()))
+            mt.counter("dropped_client_rounds").inc(
+                float(self._pending_dropped.sum()))
+            mt.counter("straggler_client_rounds").inc(float(straggler.sum()))
+            self.obs.annotate(
+                bytes_up=float(tr.bytes_up.sum()),
+                bytes_down=float(tr.bytes_down.sum()),
+                delivered=int(mask.sum()),
+                version=self.version + 1,
+                mean_staleness=tr.mean_staleness,
+                sim_time_s=float(tr.sim_time_s))
         self._pending_down = np.zeros(self.m, dtype=np.float64)
         self._pending_dropped = np.zeros(self.m, dtype=bool)
 
@@ -433,7 +490,7 @@ class AsyncSession:
         """Drop model snapshots no in-flight or buffered cycle references."""
         alive = {self.version}
         alive.update(f.version for _, _, f in self._heap if not f.dropped)
-        alive.update(v for _, v, _ in self._buffer)
+        alive.update(v for _, v, _, _ in self._buffer)
         for v in [v for v in self._snapshots if v not in alive]:
             del self._snapshots[v]
 

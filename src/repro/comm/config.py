@@ -56,6 +56,7 @@ from repro.comm.channel import ChannelModel
 from repro.comm.codecs import Codec, IdentityCodec, make_codec
 from repro.comm.metrics import RoundTrace, Transport, transport_from_traces
 from repro.comm.scheduler import Scheduler, make_scheduler
+from repro.obs import NULL_TELEMETRY
 
 # payload-name prefix that selects the downlink (server -> client)
 # direction in codec specs and in the byte plan
@@ -424,9 +425,11 @@ class CommSession:
         mask_dtype=jnp.float64,
         keys: "jax.Array | None" = None,
         state0: Any = None,
+        obs=NULL_TELEMETRY,
     ):
         self.config = config
         self.m = m
+        self.obs = obs
         # keyed by payload occurrence (``name`` / ``name#i``, downlink
         # occurrences under ``down:name``): a round uplinking the same
         # name twice accumulates both, it does not overwrite the first
@@ -513,6 +516,12 @@ class CommSession:
         return self._state
 
     def finalize(self) -> Transport:
+        if self.obs.enabled:
+            # final EF memory footprint (bytes held across all clients)
+            ef_bytes = sum(
+                int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+                for a in jax.tree_util.tree_leaves(self.ef_memory))
+            self.obs.metrics.gauge("ef_memory_bytes").set(float(ef_bytes))
         return transport_from_traces(
             self.traces, ef_residuals=self.ef_residual_norms())
 
@@ -580,4 +589,27 @@ class CommSession:
         )
         self.traces.append(trace)
         self._pending = None
+        if self.obs.enabled:
+            self._observe(trace)
         return trace
+
+    def _observe(self, trace: RoundTrace) -> None:
+        """Populate per-round telemetry (host-side, after the round ran)."""
+        mt = self.obs.metrics
+        up = float(trace.bytes_up.sum())
+        down = float(trace.bytes_down.sum())
+        mt.counter("bytes_up").inc(up)
+        mt.counter("bytes_down").inc(down)
+        mt.counter("scheduled_client_rounds").inc(
+            float(trace.scheduled.sum()))
+        mt.counter("delivered_client_rounds").inc(
+            float(trace.delivered.sum()))
+        mt.counter("dropped_client_rounds").inc(
+            float((trace.scheduled & ~trace.delivered).sum()))
+        mt.counter("straggler_client_rounds").inc(
+            float(trace.straggler.sum()))
+        self.obs.annotate(
+            bytes_up=up, bytes_down=down,
+            delivered=int(trace.delivered.sum()),
+            dropped=int((trace.scheduled & ~trace.delivered).sum()),
+            sim_time_s=float(trace.sim_time_s))

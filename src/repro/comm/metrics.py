@@ -54,11 +54,54 @@ class RoundTrace:
 
     @property
     def mean_staleness(self) -> float:
-        """Mean staleness over committed clients (0.0 for sync rounds)."""
+        """Mean staleness over committed clients (0.0 for sync rounds).
+
+        All-NaN rows (a commit that delivered nobody — only possible in
+        degenerate configs, but representable) are defined as 0.0, not
+        NaN: the mean is over committed clients and an empty cohort has
+        no lag to report.
+        """
         if self.staleness is None:
             return 0.0
         hit = ~np.isnan(self.staleness)
         return float(self.staleness[hit].mean()) if hit.any() else 0.0
+
+    def to_dict(self) -> dict:
+        """JSON-able record of this trace (``History.to_jsonl`` line).
+
+        Per-client NaN staleness (clients absent from the commit) is
+        encoded as ``null`` — strict JSON has no NaN token.
+        """
+        return {
+            "round": int(self.round),
+            "scheduled": [bool(v) for v in self.scheduled],
+            "delivered": [bool(v) for v in self.delivered],
+            "straggler": [bool(v) for v in self.straggler],
+            "bytes_up": [float(v) for v in self.bytes_up],
+            "bytes_down": [float(v) for v in self.bytes_down],
+            "sim_time_s": float(self.sim_time_s),
+            "staleness": (None if self.staleness is None else
+                          [None if np.isnan(v) else float(v)
+                           for v in self.staleness]),
+            "version": int(self.version),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RoundTrace":
+        stale = d.get("staleness")
+        return cls(
+            round=int(d["round"]),
+            scheduled=np.asarray(d["scheduled"], dtype=bool),
+            delivered=np.asarray(d["delivered"], dtype=bool),
+            straggler=np.asarray(d["straggler"], dtype=bool),
+            bytes_up=np.asarray(d["bytes_up"], dtype=np.float64),
+            bytes_down=np.asarray(d["bytes_down"], dtype=np.float64),
+            sim_time_s=float(d["sim_time_s"]),
+            staleness=(None if stale is None else np.asarray(
+                [np.nan if v is None else v for v in stale],
+                dtype=np.float64)),
+            version=int(d.get("version", -1)),
+        )
 
 
 def summarize(traces: "list[RoundTrace]") -> dict:

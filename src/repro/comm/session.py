@@ -38,7 +38,6 @@ protocol — not deepening a branch in ``run_rounds``.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Any, Optional
 
 import numpy as np
@@ -52,6 +51,8 @@ from repro.comm.config import (
     probe_round,
 )
 from repro.comm.metrics import Transport
+from repro.obs import NULL_TELEMETRY
+from repro.obs import log as obs_log
 
 
 class Session:
@@ -83,7 +84,8 @@ class NullSession(Session):
     variants re-probe, so the formula axis is round-varying too."""
 
     def __init__(self, keys, state0, formula_bytes_per_round: float,
-                 m: "int | None" = None, mask_dtype=None):
+                 m: "int | None" = None, mask_dtype=None,
+                 obs=NULL_TELEMETRY):
         self.keys = keys
         self._state = state0
         self._formula = float(formula_bytes_per_round)
@@ -92,6 +94,7 @@ class NullSession(Session):
         self._plans: dict = {}
         self._per_round: "list[float]" = []
         self._t = 0
+        self.obs = obs
 
     def prepare(self, trace_round) -> None:
         pass
@@ -102,15 +105,17 @@ class NullSession(Session):
         if sig not in self._plans:
             plan: dict = {}
             try:
-                probe_round(CommConfig(), self.m, self._mask_dtype, plan,
-                            trace_round, full_cohort=True)
+                with self.obs.trace.span("probe_plan"):
+                    probe_round(CommConfig(), self.m, self._mask_dtype, plan,
+                                trace_round, full_cohort=True)
             except Exception as e:  # un-traceable round: formula fallback
                 plan = None
-                warnings.warn(
+                obs_log.warn_with_context(
                     f"payload-plan probe failed ({e!r}); the no-comm byte "
                     f"axis falls back to the per-optimizer float-count "
                     f"formulas for this run (these can undercount the "
-                    f"wire)", stacklevel=2)
+                    f"wire)", round=self._t, variant=sig)
+                self.obs.metrics.counter("plan_probe_fallbacks").inc()
             self._plans[sig] = plan
         plan = self._plans[sig]
         if plan is not None:
@@ -126,6 +131,9 @@ class NullSession(Session):
                                   None, None)
         self._per_round.append(self._formula)
         self._t += 1
+        if self.obs.enabled:
+            self.obs.metrics.counter("formula_bytes").inc(self._formula)
+            self.obs.annotate(formula_bytes=self._formula)
         return self._state
 
     def finalize(self) -> Transport:
@@ -145,14 +153,17 @@ def make_session(
     keys,
     state0,
     formula_bytes_per_round: float,
+    obs=NULL_TELEMETRY,
 ) -> Session:
     """Resolve a ``CommConfig`` (or None) to its driver session — the
-    single place mode dispatch happens."""
+    single place mode dispatch happens. ``obs`` is the live telemetry
+    runtime (``repro.obs.Telemetry``) or the shared no-op."""
     if comm is None:
         return NullSession(keys, state0, formula_bytes_per_round,
-                           m=m, mask_dtype=mask_dtype)
+                           m=m, mask_dtype=mask_dtype, obs=obs)
     if comm.async_mode:
         return AsyncSession(comm, m=m, client_weights=client_weights,
-                            keys=keys, state0=state0, mask_dtype=mask_dtype)
+                            keys=keys, state0=state0, mask_dtype=mask_dtype,
+                            obs=obs)
     return CommSession(comm, m=m, mask_dtype=mask_dtype, keys=keys,
-                       state0=state0)
+                       state0=state0, obs=obs)

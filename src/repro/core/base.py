@@ -36,16 +36,19 @@ clock differs.
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 import time
-import warnings
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import CommConfig, make_session
+from repro.comm import CommConfig, RoundTrace, make_session
 from repro.core.federated import FederatedProblem
+from repro.obs import NULL_TELEMETRY, Telemetry, TelemetryConfig
+from repro.obs import log as obs_log
 
 OptState = Dict[str, Any]
 
@@ -109,6 +112,97 @@ class History:
     # final error-feedback memory norms per payload (comm runs with EF;
     # empty dict when EF is off or nothing was eligible)
     ef_residuals: Optional[dict] = None
+    # telemetry run summary (repro.obs) when run_rounds was given an
+    # ``obs=TelemetryConfig(...)``; None on uninstrumented runs
+    telemetry: Optional[dict] = None
+
+    # -- JSONL export/import -------------------------------------------------
+    # One ``history`` header line with every scalar/curve field, then one
+    # ``round_trace`` line per RoundTrace — so benchmark curves (and the
+    # staleness axis) can be re-plotted without re-running the trajectory.
+
+    _JSONL_SCHEMA = "repro.history/v1"
+
+    def to_jsonl(self, path) -> pathlib.Path:
+        """Write this trajectory as JSONL (see ``from_jsonl``)."""
+
+        def arr(a):
+            # strict JSON has no NaN/Infinity token: non-finite entries
+            # (diverged runs, absent staleness) travel as null
+            if a is None:
+                return None
+            return [None if (isinstance(v, float) and not np.isfinite(v))
+                    else v
+                    for v in np.asarray(a, dtype=np.float64).tolist()]
+
+        header = {
+            "type": "history",
+            "schema": self._JSONL_SCHEMA,
+            "name": self.name,
+            "rounds": int(self.rounds),
+            "uplink_floats": int(self.uplink_floats),
+            "downlink_floats": int(self.downlink_floats),
+            "wall_time_s": float(self.wall_time_s),
+            "clients": int(self.clients),
+            "itemsize": int(self.itemsize),
+            "loss": arr(self.loss),
+            "gap": arr(self.gap),
+            "grad_norm": arr(self.grad_norm),
+            "cumulative_bytes": arr(self.cumulative_bytes),
+            "sim_time_s": arr(self.sim_time_s),
+            "staleness": arr(self.staleness),
+            "ef_residuals": self.ef_residuals,
+            "telemetry": self.telemetry,
+        }
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with path.open("w") as f:
+            f.write(json.dumps(header, allow_nan=False) + "\n")
+            for tr in self.traces or []:
+                f.write(json.dumps({"type": "round_trace", **tr.to_dict()},
+                                   allow_nan=False) + "\n")
+        return path
+
+    @classmethod
+    def from_jsonl(cls, path) -> "History":
+        """Reconstruct a ``History`` written by ``to_jsonl`` (including
+        per-round ``RoundTrace`` records and the staleness axis)."""
+
+        def arr(v):
+            if v is None:
+                return None
+            return np.asarray([np.nan if x is None else x for x in v],
+                              dtype=np.float64)
+
+        with pathlib.Path(path).open() as f:
+            lines = [json.loads(line) for line in f if line.strip()]
+        if not lines or lines[0].get("type") != "history":
+            raise ValueError(f"{path}: not a History JSONL (missing header)")
+        h = lines[0]
+        if h.get("schema") != cls._JSONL_SCHEMA:
+            raise ValueError(
+                f"{path}: schema {h.get('schema')!r} != "
+                f"{cls._JSONL_SCHEMA!r}")
+        traces = [RoundTrace.from_dict(rec) for rec in lines[1:]
+                  if rec.get("type") == "round_trace"]
+        return cls(
+            name=h["name"],
+            loss=arr(h["loss"]),
+            gap=arr(h["gap"]),
+            grad_norm=arr(h["grad_norm"]),
+            uplink_floats=int(h["uplink_floats"]),
+            downlink_floats=int(h["downlink_floats"]),
+            wall_time_s=float(h["wall_time_s"]),
+            rounds=int(h["rounds"]),
+            cumulative_bytes=arr(h["cumulative_bytes"]),
+            sim_time_s=arr(h["sim_time_s"]),
+            traces=traces or None,
+            staleness=arr(h["staleness"]),
+            clients=int(h["clients"]),
+            itemsize=int(h["itemsize"]),
+            ef_residuals=h.get("ef_residuals"),
+            telemetry=h.get("telemetry"),
+        )
 
     @property
     def cumulative_uplink(self) -> np.ndarray:
@@ -121,6 +215,39 @@ class History:
         return np.arange(len(self.loss)) * per_round
 
 
+class _ProfilerHook:
+    """Opt-in ``jax.profiler`` trace around the first N executed rounds
+    (``TelemetryConfig.profile_rounds``). Host-side start/stop only —
+    the traced round functions are untouched."""
+
+    def __init__(self, obs: "TelemetryConfig | None", rounds: int):
+        self._remaining = 0
+        if obs is None or obs.profile_rounds <= 0 or rounds <= 0:
+            return
+        try:
+            jax.profiler.start_trace(obs.profile_dir)
+        except Exception as e:  # profiler backend unavailable: degrade
+            obs_log.warn_with_context(
+                f"jax.profiler trace hook unavailable ({e!r}); continuing "
+                f"without a device trace", profile_dir=obs.profile_dir)
+            return
+        self._remaining = min(int(obs.profile_rounds), rounds)
+        obs_log.info("jax.profiler trace started",
+                     profile_dir=obs.profile_dir, rounds=self._remaining)
+
+    def after_round(self) -> None:
+        if self._remaining > 0:
+            self._remaining -= 1
+            if self._remaining == 0:
+                jax.profiler.stop_trace()
+
+    def close(self) -> None:
+        """Stop a still-open trace (fewer executed rounds than asked)."""
+        if self._remaining > 0:
+            self._remaining = 0
+            jax.profiler.stop_trace()
+
+
 def run_rounds(
     opt: FederatedOptimizer,
     problem: FederatedProblem,
@@ -129,6 +256,7 @@ def run_rounds(
     rounds: int,
     seed: int = 0,
     comm: Optional[CommConfig] = None,
+    obs: Optional[TelemetryConfig] = None,
 ) -> History:
     """Drive ``rounds`` communication rounds and record the trajectory.
 
@@ -137,7 +265,19 @@ def run_rounds(
     through the simulated transport and the returned ``History`` carries
     per-round ``RoundTrace`` records. All modes run the same loop: the
     ``Session`` protocol (``repro.comm.session``) owns the clock.
+
+    ``obs=TelemetryConfig(...)`` turns on the ``repro.obs`` telemetry
+    layer: host-side phase spans around the jit boundaries
+    (schedule / client round / account / retrace / eval — never inside
+    traced code), a compile-vs-execute wall-clock split (the first call
+    of each jitted round variant is billed as compile), session metrics
+    (bytes, deliveries, staleness distribution, async queue depths), and
+    the async flight recorder. The default (``obs=None``) is the shared
+    no-op telemetry: zero overhead and bit-identical trajectories —
+    instrumentation can never perturb the optimization (tested). The
+    run summary lands on ``History.telemetry``.
     """
+    telemetry = Telemetry(obs) if obs is not None else NULL_TELEMETRY
     loss_fn = jax.jit(problem.global_value)
     grad_fn = jax.jit(problem.global_grad)
 
@@ -157,6 +297,7 @@ def run_rounds(
         keys=keys,
         state0=state,
         formula_bytes_per_round=formula_bytes,
+        obs=telemetry,
     )
 
     # Adaptive-k policies change payload sizes mid-trajectory; the async
@@ -177,13 +318,14 @@ def run_rounds(
             # a rotation boundary and briefly compensate across bases
             # (EF21 re-contracts within the epoch). Per-version memory
             # would fix it properly — a known follow-up.
-            warnings.warn(
+            obs_log.warn_with_context(
                 "async driver + rotating sketch policy + error feedback: "
                 "commit groups based on pre-rotation model versions share "
                 "the EF memory of the new epoch, so residuals can briefly "
                 "straddle a rotation boundary under stale commits; the "
                 "synchronous driver keeps the epoch-reset invariant exact",
-                stacklevel=2)
+                optimizer=opt.name,
+                policy=getattr(policy, "spec", lambda: None)())
 
     # The one jitted round function every driver mode shares. The EF21
     # memory rides through as a pytree next to the optimizer state;
@@ -205,7 +347,8 @@ def run_rounds(
     def trace_with(s):
         return lambda cr: opt.round(problem, s, probe_key, comm=cr)
 
-    session.prepare(trace_with(state))
+    with telemetry.trace.span("prepare"):
+        session.prepare(trace_with(state))
 
     losses = [float(loss_fn(state["w"]))]
     gnorms = [float(jnp.linalg.norm(grad_fn(state["w"])))]
@@ -214,23 +357,54 @@ def run_rounds(
     # sketch policy announces each k change here, and the session probes
     # that variant's byte plan so per-round traces bill the true sizes
     round_fns: Dict[Any, Any] = {}
+    retraces = telemetry.metrics.counter("variant_retraces")
+    profiler = _ProfilerHook(obs, rounds)
     sig_prev = object()  # sentinel: no signature compares equal to it
     t0 = time.perf_counter()
     for t in range(rounds):
         sig = opt.round_signature(t, state)
-        if sig != sig_prev:
-            session.begin_variant(sig, trace_with(state))
-            sig_prev = sig
-        fn = round_fns.get(sig)
-        if fn is None:
-            fn = round_fns[sig] = jax.jit(_round)
-        state = session.step(fn)
-        losses.append(float(loss_fn(state["w"])))
-        gnorms.append(float(jnp.linalg.norm(grad_fn(state["w"]))))
+        # host wall-clock attribution wraps the jit BOUNDARIES only:
+        # begin_variant/step/eval run exactly the code they always ran —
+        # the spans never reach inside traced functions
+        with telemetry.round(t, compile_expected=sig not in round_fns):
+            if sig != sig_prev:
+                with telemetry.trace.span("begin_variant"):
+                    session.begin_variant(sig, trace_with(state))
+                sig_prev = sig
+            fn = round_fns.get(sig)
+            if fn is None:
+                if round_fns:  # a NEW variant after the first = a retrace
+                    retraces.inc()
+                fn = round_fns[sig] = jax.jit(_round)
+            with telemetry.trace.span("step"):
+                state = session.step(fn)
+                if telemetry.enabled:
+                    # honest span timing: settle async dispatch before
+                    # the host timer stops (device values are unchanged)
+                    jax.block_until_ready(state["w"])
+            with telemetry.trace.span("eval"):
+                losses.append(float(loss_fn(state["w"])))
+                gnorms.append(float(jnp.linalg.norm(grad_fn(state["w"]))))
+        profiler.after_round()
     wall = time.perf_counter() - t0
+    profiler.close()
 
-    transport = session.finalize()
+    with telemetry.trace.span("finalize"):
+        transport = session.finalize()
     losses = np.asarray(losses)
+    total_bytes = (float(transport.cumulative_bytes[-1])
+                   if len(transport.cumulative_bytes) else 0.0)
+    summary = telemetry.finalize(extra={
+        "optimizer": opt.name,
+        "driver": ("null" if comm is None
+                   else "async" if comm.async_mode else "sync"),
+        "rounds_requested": rounds,
+        "clients": problem.m,
+        "total_bytes": total_bytes,
+        "sim_time_s": float(transport.sim_time_s[-1])
+        if len(transport.sim_time_s) else 0.0,
+        "wall_time_s": wall,
+    })
     return History(
         name=opt.name,
         loss=losses,
@@ -247,4 +421,5 @@ def run_rounds(
         clients=problem.m,
         itemsize=itemsize,
         ef_residuals=transport.ef_residuals,
+        telemetry=summary,
     )

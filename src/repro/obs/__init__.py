@@ -1,0 +1,62 @@
+"""`repro.obs` — the observability layer.
+
+Host-side telemetry for the federated round drivers: a nestable span
+tracer (jit-boundary wall-clock only, never traced code), a metrics
+registry (counters / gauges / histograms the Sessions populate), an
+async flight recorder (bounded ring of dispatch/arrival/drop/commit
+events), pluggable record sinks (``null`` / ``stdout`` /
+``jsonl:<path>``), and a structured driver logger.
+
+Entry point: ``run_rounds(..., obs=TelemetryConfig(...))``. The default
+(``obs=None``) is the shared ``NULL_TELEMETRY`` no-op — zero overhead
+and bit-identical trajectories (tested). Render or schema-check the
+emitted artifacts with ``python -m repro.obs.report``.
+"""
+from repro.obs.flight import (
+    EVENT_KINDS,
+    NULL_FLIGHT,
+    FlightRecorder,
+    NullFlightRecorder,
+)
+from repro.obs.metrics import (
+    NULL_METRICS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullMetricsRegistry,
+)
+from repro.obs.sinks import JsonlSink, NullSink, StdoutSink, make_sink
+from repro.obs.telemetry import (
+    NULL_TELEMETRY,
+    SCHEMA,
+    NullTelemetry,
+    Telemetry,
+    TelemetryConfig,
+)
+from repro.obs.trace import NULL_TRACER, NullTracer, Tracer
+
+__all__ = [
+    "Counter",
+    "EVENT_KINDS",
+    "FlightRecorder",
+    "Gauge",
+    "Histogram",
+    "JsonlSink",
+    "MetricsRegistry",
+    "NULL_FLIGHT",
+    "NULL_METRICS",
+    "NULL_TELEMETRY",
+    "NULL_TRACER",
+    "NullFlightRecorder",
+    "NullMetricsRegistry",
+    "NullSink",
+    "NullTelemetry",
+    "NullTracer",
+    "SCHEMA",
+    "StdoutSink",
+    "Telemetry",
+    "TelemetryConfig",
+    "Tracer",
+    "make_sink",
+]
