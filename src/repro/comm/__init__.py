@@ -25,7 +25,11 @@ Entry point: build a :class:`CommConfig` and pass it to
 ``repro.core.run_rounds(..., comm=cfg)``. See ``examples/edge_clients.py``
 and ``examples/async_edge.py``.
 """
-from repro.comm.async_driver import AsyncSession, make_staleness
+from repro.comm.async_driver import (
+    AsyncSession,
+    PopulationAsyncSession,
+    make_staleness,
+)
 from repro.comm.channel import ChannelDraw, ChannelModel
 from repro.comm.codecs import (
     CastCodec,
@@ -36,8 +40,15 @@ from repro.comm.codecs import (
     TopKCodec,
     make_codec,
 )
-from repro.comm.config import NULL_COMM, CommConfig, CommRound, CommSession
+from repro.comm.config import (
+    NULL_COMM,
+    CommConfig,
+    CommRound,
+    CommSession,
+    PopulationCommSession,
+)
 from repro.comm.feedback import (
+    BoundedMemory,
     compensate,
     init_memory,
     residual_norms,
@@ -63,6 +74,7 @@ from repro.comm.scheduler import (
 __all__ = [
     "AsyncSession",
     "BandwidthAware",
+    "BoundedMemory",
     "CastCodec",
     "ChannelDraw",
     "ChannelModel",
@@ -74,6 +86,8 @@ __all__ = [
     "IdentityCodec",
     "NULL_COMM",
     "NullSession",
+    "PopulationAsyncSession",
+    "PopulationCommSession",
     "QInt8Codec",
     "RoundTrace",
     "Scheduler",

@@ -65,6 +65,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+from collections import defaultdict
 from typing import Any, Callable, Dict, List
 
 import jax
@@ -497,3 +498,292 @@ class AsyncSession:
     def ef_residual_norms(self) -> Dict[str, float]:
         """Per-payload Frobenius norm of the current EF residuals."""
         return feedback.residual_norms(self.ef_memory)
+
+
+class PopulationAsyncSession(AsyncSession):
+    """Event-driven driver over a lazy ``ClientPopulation``.
+
+    Same event machinery as ``AsyncSession`` (heap, buffer, versioned
+    snapshots, staleness-weighted delta commits) with the client axis
+    replaced by sampled cohorts:
+
+      * each new model version samples its cohort ids from the
+        population (``Scheduler.sample_ids`` on the SAME
+        ``fold_in(seed, version)`` stream the sync population driver
+        uses, so both drivers schedule identical cohorts) and dispatches
+        the ids not already in flight; landed clients return to the
+        anonymous pool instead of being tracked per id;
+      * dropped uploads are *replaced*, not retried: the client goes
+        back to the pool and the next version's draw samples fresh ids —
+        the realistic cross-device semantic (FedBuff-style systems
+        replace failed clients). If every in-flight upload drops, the
+        current version's cohort redraws its channel coins with a
+        folded attempt counter (forced delivery after ``MAX_RETRIES``
+        attempts) so the clock always advances;
+      * each commit group materializes its members' shards on demand,
+        padded to the scheduler's fixed cohort size (pad rows duplicate
+        the first member under a zero delivery mask), so every group of
+        every round reuses one jaxpr;
+      * EF memory lives in the bounded LRU hot-set store
+        (``feedback.BoundedMemory``): rows are gathered for the group,
+        gated by the group's delivery mask inside the round, and
+        scattered back for the real members only.
+
+    Lock-step configs (full scheduler, no dropout, full quorum) sample
+    the whole population as one cohort with ``mask=None`` — the
+    identical jaxpr and key schedule as ``PopulationCommSession``, hence
+    bit-identical across the drivers.
+    """
+
+    def __init__(self, config, population, *, keys, state0=None,
+                 mask_dtype=jnp.float64, obs=NULL_TELEMETRY,
+                 client_mesh=None):
+        super().__init__(config, m=population.m,
+                         client_weights=population.client_weights,
+                         keys=keys, state0=None, mask_dtype=mask_dtype,
+                         obs=obs)
+        self.population = population
+        self.client_mesh = client_mesh
+        self.cohort_size = config.scheduler.cohort_size(population.m)
+        self.ef_store: "feedback.BoundedMemory | None" = None
+        # quorum counts against what can actually be in flight — one
+        # cohort — not against the population
+        if config.buffer_size is not None:
+            self.quorum = min(self.cohort_size, int(config.buffer_size))
+        else:
+            self.quorum = max(1, min(self.cohort_size, int(math.ceil(
+                config.async_quantile * self.cohort_size))))
+        self.lockstep = (config.scheduler.is_full
+                         and config.channel.dropout_prob == 0.0
+                         and self.quorum == self.m)
+        # population-mode event bookkeeping: O(in-flight), never O(m)
+        self._in_flight: set = set()
+        # client id -> dispatched broadcast bytes (defaultdict: the
+        # inherited _launch accumulates with `+=`)
+        self._pending_down = defaultdict(float)
+        self._pending_dropped = {}  # client id -> True (lost this window)
+        self._attempt = 0  # channel redraws of the current version's cohort
+        self._state0 = state0
+
+    # -- trace-time discovery ------------------------------------------------
+    def prepare(self, trace_round) -> None:
+        from repro.comm.config import probe_round
+
+        spec = probe_round(self.config, self.cohort_size, self._mask_dtype,
+                           self.plan, trace_round, full_cohort=self.lockstep)
+        if spec:
+            capacity = self.config.ef_capacity
+            if capacity is None:
+                capacity = min(self.m, 8 * self.cohort_size)
+            self.ef_store = feedback.BoundedMemory(
+                spec, max(capacity, self.cohort_size))
+        self.ef_memory = {}
+        if self._state0 is not None:
+            self.start(self._state0)
+
+    # -- event machinery -----------------------------------------------------
+    def start(self, state) -> None:
+        self._snapshots[0] = state
+        self._dispatch_cohort((), now=0.0)
+
+    def _dispatch_cohort(self, clients, now: float) -> None:
+        """Sample the current version's cohort and replenish the flight
+        pool up to the cohort size. ``clients`` (the dense driver's
+        landed set) is ignored: population clients are anonymous between
+        cycles.
+
+        The concurrency cap mirrors the dense driver, where only landed
+        clients are re-dispatched so at most one cohort is ever in the
+        air: without it every commit would add a full cohort while
+        consuming only a quorum, the backlog would grow without bound,
+        and staleness would diverge linearly in the round count."""
+        budget = self.cohort_size - len(self._in_flight)
+        if budget <= 0:
+            return
+        k_sched, k_chan, _ = self._round_keys(self.version)
+        ids = self.config.scheduler.sample_ids(
+            k_sched, self.version, self.m, self.config.channel)
+        cohort = np.asarray(
+            [j for j in ids if int(j) not in self._in_flight][:budget],
+            dtype=np.int64)
+        if cohort.size == 0:
+            return
+        attempt = self._attempt
+        self._attempt += 1
+        if attempt:
+            # the whole previous dispatch of this version dropped:
+            # redraw the coins deterministically, forcing delivery once
+            # the attempt budget is spent so the clock cannot stall
+            k_chan = jax.random.fold_in(k_chan, attempt)
+        draw = self.config.channel.draw_for(k_chan, cohort)
+        if attempt >= MAX_RETRIES:
+            draw = dataclasses.replace(
+                draw, dropout=np.zeros_like(draw.dropout))
+        per_up = float(self.bytes_up_per_client)
+        per_down = float(self.bytes_down_per_client)
+        times = self.config.channel.client_times_for(
+            cohort, self.m, draw,
+            np.full(cohort.size, per_up), np.full(cohort.size, per_down))
+        for i, j in enumerate(cohort):
+            j = int(j)
+            self._in_flight.add(j)
+            self._launch(j, now, float(times[i]), bool(draw.straggler[i]),
+                         bool(draw.dropout[i]), retry=attempt)
+
+    def _redispatch(self, j: int, now: float, retry: int) -> None:
+        """A dropped upload landed: the client returns to the pool (the
+        scheduler replaces it from the population at the next version).
+        ``_pump`` already marked it in ``_pending_dropped``."""
+        self._in_flight.discard(j)
+        if not self._heap and not self._buffer:
+            # every in-flight upload dropped: redraw this version's
+            # cohort (attempt counter folded into the coins)
+            self._dispatch_cohort((), now=now)
+
+    # -- one server commit ---------------------------------------------------
+    def step(self, round_fn) -> Any:
+        """Population-mode commit: groups materialize their members'
+        shards on demand. ``round_fn(cohort, state, memory, key, mask,
+        codec_key) -> (state, memory)`` is the jitted cohort round."""
+        commit_time = self._pump()
+        committed, self._buffer = self._buffer, []
+        if self.obs.enabled:
+            self._observe_commit(committed, commit_time)
+
+        groups: Dict[int, List[tuple]] = {}
+        for client, version, straggler, _ in committed:
+            groups.setdefault(version, []).append((client, straggler))
+        order = sorted(groups, reverse=True)  # freshest first
+
+        outputs: Dict[int, Any] = {}
+        for v in order:
+            members = [c for c, _ in groups[v]]
+            n_real = len(members)
+            # fixed-width cohort: pad with the first member's id under a
+            # zero delivery mask, so every group reuses one jaxpr
+            padded = members + [members[0]] * (self.cohort_size - n_real)
+            cohort = self.population.materialize(np.asarray(padded))
+            if self.client_mesh is not None:
+                from repro.sharding.rules import shard_cohort
+
+                cohort = shard_cohort(self.client_mesh, cohort)
+            if self.lockstep:
+                mask = None
+            else:
+                mvec = np.zeros(self.cohort_size)
+                mvec[:n_real] = 1.0
+                mask = jnp.asarray(mvec, self._mask_dtype)
+            memory = self.ef_store.gather(padded) if self.ef_store else {}
+            _, _, k_codec = self._round_keys(v)
+            outputs[v], mem_out = round_fn(
+                cohort, self._snapshots[v], memory, self.keys[v], mask,
+                k_codec)
+            if self.ef_store is not None:
+                # real members only: pad rows are frozen duplicates
+                self.ef_store.scatter(members, mem_out)
+
+        fresh = order[0]
+        eta = float(self.config.server_lr)
+        if len(order) == 1 and fresh == self.version and eta == 1.0:
+            state_new = outputs[fresh]
+        else:
+            # same commit combination as the dense driver: staleness
+            # damps, participation mass renormalizes over the commit
+            p_mass = {
+                v: float(self.client_weights[[c for c, _ in groups[v]]].sum())
+                for v in order
+            }
+            p_total = sum(p_mass.values())
+            w_cur = self._snapshots[self.version]["w"]
+            w_new = w_cur
+            for v in order:
+                c = (eta * self._staleness(float(self.version - v))
+                     * p_mass[v] / p_total)
+                delta = outputs[v]["w"] - self._snapshots[v]["w"]
+                w_new = w_new + c * delta
+            base = (outputs[fresh] if fresh == self.version
+                    else self._snapshots[self.version])
+            state_new = dict(base)
+            state_new["w"] = w_new
+
+        self._record_trace(committed, commit_time)
+        for client, _, _, _ in committed:
+            self._in_flight.discard(client)
+        self.version += 1
+        self._attempt = 0
+        self.server_clock = commit_time
+        self._snapshots[self.version] = state_new
+        self._gc_snapshots()
+        self._dispatch_cohort((), now=commit_time)
+        return state_new
+
+    def _record_trace(self, committed, commit_time: float) -> None:
+        down = dict(self._pending_down)
+        dropped = set(self._pending_dropped)
+        ids = sorted({c for c, _, _, _ in committed} | dropped | set(down))
+        index = {cid: i for i, cid in enumerate(ids)}
+        n = len(ids)
+        delivered = np.zeros(n, dtype=bool)
+        straggler = np.zeros(n, dtype=bool)
+        stale = np.full(n, np.nan)
+        for client, version, was_straggler, _ in committed:
+            i = index[client]
+            delivered[i] = True
+            straggler[i] = was_straggler
+            stale[i] = float(self.version - version)
+        scheduled = delivered.copy()
+        for cid in dropped:
+            scheduled[index[cid]] = True
+        bytes_up = (float(self.bytes_up_per_client)
+                    * delivered.astype(np.float64))
+        bytes_down = np.asarray([down.get(cid, 0.0) for cid in ids])
+        tr = RoundTrace(
+            round=self.version,
+            scheduled=scheduled,
+            delivered=delivered,
+            straggler=straggler,
+            bytes_up=bytes_up,
+            bytes_down=bytes_down,
+            sim_time_s=commit_time - self.server_clock,
+            staleness=stale,
+            version=self.version + 1,
+            ids=np.asarray(ids, dtype=np.int64),
+            population=self.m,
+        )
+        self.traces.append(tr)
+        if self.obs.enabled:
+            mt = self.obs.metrics
+            mt.counter("bytes_up").inc(float(tr.bytes_up.sum()))
+            mt.counter("bytes_down").inc(float(tr.bytes_down.sum()))
+            mt.counter("delivered_client_rounds").inc(float(delivered.sum()))
+            mt.counter("dropped_client_rounds").inc(float(len(dropped)))
+            mt.counter("straggler_client_rounds").inc(float(straggler.sum()))
+            self.obs.annotate(
+                bytes_up=float(tr.bytes_up.sum()),
+                bytes_down=float(tr.bytes_down.sum()),
+                delivered=int(delivered.sum()),
+                version=self.version + 1,
+                mean_staleness=tr.mean_staleness,
+                sim_time_s=float(tr.sim_time_s))
+        self._pending_down = defaultdict(float)
+        self._pending_dropped = {}
+
+    def finalize(self):
+        from repro.comm.metrics import transport_from_traces
+
+        if self.obs.enabled:
+            ef_bytes = self.ef_store.nbytes if self.ef_store else 0
+            self.obs.metrics.gauge("ef_memory_bytes").set(float(ef_bytes))
+            if self.ef_store is not None:
+                self.obs.metrics.gauge("ef_hot_set_evictions").set(
+                    float(self.ef_store.evictions))
+        return transport_from_traces(
+            self.traces,
+            staleness=np.array([tr.mean_staleness for tr in self.traces]),
+            ef_residuals=self.ef_residual_norms(),
+        )
+
+    def ef_residual_norms(self) -> Dict[str, float]:
+        if self.ef_store is not None:
+            return self.ef_store.residual_norms()
+        return {}

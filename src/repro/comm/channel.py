@@ -12,29 +12,107 @@ wall-clock — the server waits for the slowest delivering client
 advances a persistent per-client clock from it, so fast clients lap
 slow ones instead of waiting.
 
-``compute_s`` models per-client local computation time explicitly
-(scalar or per-client ``(m,)`` — heterogeneous devices), instead of
-folding compute into link latency; stragglers slow the whole cycle,
-compute included.
+Per-client fields (``uplink_bytes_per_s`` / ``downlink_bytes_per_s`` /
+``latency_s`` / ``compute_s``) accept, uniformly:
 
-All draws are deterministic functions of a PRNG key, so a trajectory is
-exactly reproducible from ``(CommConfig.seed, round index)``.
+* a scalar — every client identical;
+* an ``(m,)`` array — explicit per-client values (workstation-scale
+  populations only; wrong lengths raise a field-named error);
+* a distribution spec string — ``"loguniform:lo,hi"``,
+  ``"lognormal:median,sigma"``, ``"uniform:lo,hi"``, ``"const:v"`` —
+  drawn *per client id* from a field-keyed PRNG stream
+  (``attr_seed`` + a stable hash of the field name), so client ``j``'s
+  bandwidth is a pure function of the spec and ``j``: populations of
+  10⁴–10⁶ clients never store an ``(m,)`` array, and a client keeps the
+  same link no matter which cohort samples it.
+
+All draws are deterministic functions of a PRNG key (round coins) or of
+the client id (static attributes), so a trajectory is exactly
+reproducible from ``(CommConfig.seed, round index)`` and per-client
+attributes are reproducible across runs and drivers.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import zlib
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+FIELD_DISTRIBUTIONS = ("loguniform", "lognormal", "uniform", "const")
 
-def _per_client(x, m: int) -> np.ndarray:
-    """Broadcast a scalar or (m,) array-like to a float64 (m,) vector."""
+
+def _parse_spec(spec: str) -> "tuple[str, tuple[float, ...]]":
+    kind, _, rest = spec.partition(":")
+    if kind not in FIELD_DISTRIBUTIONS:
+        raise ValueError(
+            f"unknown channel distribution {spec!r}; expected one of "
+            f"{', '.join(k + ':...' for k in FIELD_DISTRIBUTIONS)}")
+    try:
+        params = tuple(float(p) for p in rest.split(",") if p != "")
+    except ValueError:
+        raise ValueError(f"bad parameters in channel distribution {spec!r}")
+    want = 1 if kind == "const" else 2
+    if len(params) != want:
+        raise ValueError(
+            f"channel distribution {spec!r} wants {want} parameter(s), "
+            f"got {len(params)}")
+    return kind, params
+
+
+@functools.lru_cache(maxsize=None)
+def _spec_sampler(spec: str, salt: int):
+    """Compiled per-id sampler for one (distribution spec, field salt).
+
+    Client ``j``'s value is a pure function of ``(spec, salt, j)`` —
+    independent of cohort composition, round, and driver.
+    """
+    kind, params = _parse_spec(spec)
+    key0 = jax.random.PRNGKey(np.uint32(salt))
+
+    def one(cid):
+        k = jax.random.fold_in(key0, cid)
+        if kind == "const":
+            return jnp.float64(params[0]) if jax.config.jax_enable_x64 \
+                else jnp.float32(params[0])
+        if kind == "uniform":
+            lo, hi = params
+            return lo + (hi - lo) * jax.random.uniform(k)
+        if kind == "loguniform":
+            lo, hi = params
+            u = jax.random.uniform(k)
+            return jnp.exp(jnp.log(lo) + u * (jnp.log(hi) - jnp.log(lo)))
+        median, sigma = params
+        return median * jnp.exp(sigma * jax.random.normal(k))
+
+    return jax.jit(jax.vmap(one))
+
+
+def _draw_spec(spec: str, ids: np.ndarray, field: str, seed: int) -> np.ndarray:
+    salt = (zlib.crc32(field.encode()) ^ (seed & 0xFFFFFFFF)) & 0xFFFFFFFF
+    vals = _spec_sampler(spec, salt)(jnp.asarray(ids, jnp.uint32))
+    return np.asarray(vals, dtype=np.float64)
+
+
+def _per_client(x, m: int, field: str = "per-client value",
+                seed: int = 0) -> np.ndarray:
+    """Resolve a channel field to a float64 ``(m,)`` vector.
+
+    Scalars broadcast; distribution specs draw per client id; arrays
+    must already be ``(m,)`` — anything else raises naming the field.
+    """
+    if isinstance(x, str):
+        return _draw_spec(x, np.arange(m), field, seed)
     arr = np.asarray(x, dtype=np.float64)
     if arr.ndim == 0:
         return np.full((m,), float(arr))
     if arr.shape != (m,):
-        raise ValueError(f"per-client value has shape {arr.shape}, want ({m},)")
+        raise ValueError(
+            f"channel field {field!r} has shape {arr.shape}, want ({m},) "
+            f"— pass a scalar, an (m,) array, or a distribution spec "
+            f"like 'loguniform:lo,hi'")
     return arr
 
 
@@ -50,26 +128,66 @@ class ChannelDraw:
 class ChannelModel:
     """Synchronous-round link model.
 
-    ``uplink_bytes_per_s`` / ``downlink_bytes_per_s`` may be scalars or
-    per-client (m,) arrays (heterogeneous edge links).
+    ``uplink_bytes_per_s`` / ``downlink_bytes_per_s`` / ``latency_s`` /
+    ``compute_s`` uniformly accept scalars, per-client ``(m,)`` arrays
+    (heterogeneous edge links), or distribution spec strings drawn per
+    client id (population-scale heterogeneity without ``(m,)`` storage).
     """
 
-    uplink_bytes_per_s: "float | np.ndarray" = 1.25e6  # ~10 Mbit/s edge uplink
-    downlink_bytes_per_s: "float | np.ndarray" = 1.25e7  # ~100 Mbit/s down
-    latency_s: float = 0.05
-    compute_s: "float | np.ndarray" = 0.0  # per-client local compute time
+    uplink_bytes_per_s: "float | np.ndarray | str" = 1.25e6  # ~10 Mbit/s up
+    downlink_bytes_per_s: "float | np.ndarray | str" = 1.25e7  # ~100 Mbit/s
+    latency_s: "float | np.ndarray | str" = 0.05
+    compute_s: "float | np.ndarray | str" = 0.0  # per-client local compute
     straggler_prob: float = 0.0
     straggler_slowdown: float = 10.0
     dropout_prob: float = 0.0
+    attr_seed: int = 0  # stream seed for distribution-spec fields
+
+    # -- dense (m,) views ----------------------------------------------------
+    def _field(self, name: str, ids: "np.ndarray | None", m: int) -> np.ndarray:
+        """Values of one field for ``ids`` (default: all m clients)."""
+        x = getattr(self, name)
+        if ids is None:
+            return _per_client(x, m, field=name, seed=self.attr_seed)
+        ids = np.asarray(ids, dtype=np.int64)
+        if isinstance(x, str):
+            return _draw_spec(x, ids, name, self.attr_seed)
+        arr = np.asarray(x, dtype=np.float64)
+        if arr.ndim == 0:
+            return np.full((len(ids),), float(arr))
+        if arr.shape != (m,):
+            raise ValueError(
+                f"channel field {name!r} has shape {arr.shape}, want ({m},) "
+                f"— pass a scalar, an (m,) array over the population, or a "
+                f"distribution spec like 'loguniform:lo,hi'")
+        return arr[ids]
 
     def uplink_rates(self, m: int) -> np.ndarray:
-        return _per_client(self.uplink_bytes_per_s, m)
+        return self._field("uplink_bytes_per_s", None, m)
 
     def downlink_rates(self, m: int) -> np.ndarray:
-        return _per_client(self.downlink_bytes_per_s, m)
+        return self._field("downlink_bytes_per_s", None, m)
 
     def compute_times(self, m: int) -> np.ndarray:
-        return _per_client(self.compute_s, m)
+        return self._field("compute_s", None, m)
+
+    def latencies(self, m: int) -> np.ndarray:
+        return self._field("latency_s", None, m)
+
+    # -- cohort views (population mode) -------------------------------------
+    def uplink_rates_for(self, ids, m: int) -> np.ndarray:
+        """(c,) uplink rates of the cohort ``ids`` from an m-client
+        population — per-id deterministic for spec fields."""
+        return self._field("uplink_bytes_per_s", ids, m)
+
+    def downlink_rates_for(self, ids, m: int) -> np.ndarray:
+        return self._field("downlink_bytes_per_s", ids, m)
+
+    def compute_times_for(self, ids, m: int) -> np.ndarray:
+        return self._field("compute_s", ids, m)
+
+    def latencies_for(self, ids, m: int) -> np.ndarray:
+        return self._field("latency_s", ids, m)
 
     def draw(self, key: jax.Array, m: int) -> ChannelDraw:
         """Deterministic straggler/dropout coin flips for one round."""
@@ -79,6 +197,22 @@ class ChannelModel:
         dropout = np.asarray(
             jax.random.bernoulli(k_drop, self.dropout_prob, (m,)))
         return ChannelDraw(straggler=straggler, dropout=dropout)
+
+    def draw_for(self, key: jax.Array, ids) -> ChannelDraw:
+        """Cohort coin flips, keyed per client id: client ``j``'s coins
+        this round depend on ``(key, j)`` only, never on which other
+        clients ride the cohort — so sync and async drivers sampling the
+        same cohort from the same round key see identical coins."""
+        ids_j = jnp.asarray(np.asarray(ids, dtype=np.int64), jnp.uint32)
+
+        def one(cid):
+            ks, kd = jax.random.split(jax.random.fold_in(key, cid))
+            return (jax.random.bernoulli(ks, self.straggler_prob),
+                    jax.random.bernoulli(kd, self.dropout_prob))
+
+        straggler, dropout = jax.vmap(one)(ids_j)
+        return ChannelDraw(straggler=np.asarray(straggler),
+                           dropout=np.asarray(dropout))
 
     def client_times(
         self,
@@ -93,8 +227,23 @@ class ChannelModel:
         m = draw.straggler.shape[0]
         up = self.uplink_rates(m)
         down = self.downlink_rates(m)
-        t = (self.latency_s + bytes_down / down + self.compute_times(m)
+        t = (self.latencies(m) + bytes_down / down + self.compute_times(m)
              + bytes_up / up)
+        return np.where(draw.straggler, t * self.straggler_slowdown, t)
+
+    def client_times_for(
+        self,
+        ids,
+        m: int,
+        draw: ChannelDraw,  # cohort-length coins (from draw_for)
+        bytes_up: np.ndarray,  # (c,) uplink bytes
+        bytes_down: np.ndarray,  # (c,) broadcast bytes
+    ) -> np.ndarray:
+        """(c,) cycle times of one cohort from an m-client population."""
+        up = self.uplink_rates_for(ids, m)
+        down = self.downlink_rates_for(ids, m)
+        t = (self.latencies_for(ids, m) + bytes_down / down
+             + self.compute_times_for(ids, m) + bytes_up / up)
         return np.where(draw.straggler, t * self.straggler_slowdown, t)
 
     def round_time(
@@ -107,5 +256,22 @@ class ChannelModel:
         """Simulated wall-clock: slowest delivering client closes the round."""
         t = self.client_times(draw, bytes_up, bytes_down)
         if not delivered.any():
-            return float(self.latency_s)
+            # empty round still costs a propagation delay
+            return float(np.mean(self.latencies(draw.straggler.shape[0])))
+        return float(np.max(t[delivered]))
+
+    def round_time_for(
+        self,
+        ids,
+        m: int,
+        draw: ChannelDraw,
+        delivered: np.ndarray,  # (c,) bool
+        bytes_up: np.ndarray,
+        bytes_down: np.ndarray,
+    ) -> float:
+        """Cohort round wall-clock (population mode)."""
+        if not delivered.any():
+            lat = self.latencies_for(ids, m)
+            return float(np.mean(lat)) if len(lat) else 0.0
+        t = self.client_times_for(ids, m, draw, bytes_up, bytes_down)
         return float(np.max(t[delivered]))

@@ -111,7 +111,11 @@ class CommConfig:
     entirely with ``uplink(..., ef_eligible=False)`` (per-round random
     sketch bases). ``ef_variant`` picks the recursion: ``"ef21"``
     (compressed-estimate tracking, default) or ``"ef14"`` (classic
-    residual compensation).
+    residual compensation). ``ef_capacity`` bounds EF state in
+    population mode (``run_rounds`` over a ``ClientPopulation``): dense
+    memory rows are kept only for an LRU hot set of that many client
+    ids, the long tail re-entering with a zero row (on-sample reset);
+    default is ``min(m, 8 × cohort size)``. Dense-``m`` runs ignore it.
 
     ``async_mode=True`` swaps the synchronous lock-step driver for the
     event-driven async driver (``repro.comm.async_driver``): each client
@@ -138,6 +142,7 @@ class CommConfig:
     seed: int = 0
     error_feedback: "bool | str | Dict[str, bool] | tuple | frozenset" = False
     ef_variant: str = "ef21"
+    ef_capacity: "int | None" = None  # EF hot-set size (population mode)
     async_mode: bool = False
     buffer_size: "int | None" = None
     async_quantile: float = 1.0
@@ -169,6 +174,9 @@ class CommConfig:
         if self.buffer_size is not None and self.buffer_size < 1:
             raise ValueError(
                 f"buffer_size must be >= 1, got {self.buffer_size}")
+        if self.ef_capacity is not None and self.ef_capacity < 1:
+            raise ValueError(
+                f"ef_capacity must be >= 1, got {self.ef_capacity}")
         if not 0.0 < self.async_quantile <= 1.0:
             raise ValueError(
                 f"async_quantile must be in (0, 1], got {self.async_quantile}")
@@ -450,7 +458,15 @@ class CommSession:
         # static decision: identical jit trace structure for every round
         self._always_full = (
             config.scheduler.is_full and config.channel.dropout_prob == 0.0)
+        # probe geometry: subclasses with a cohort axis narrower than m
+        # (population mode) override these so abstract probes trace the
+        # same shapes the real rounds will
+        self._probe_m = m
         self._pending = None
+
+    @property
+    def _probe_full(self) -> bool:
+        return self._always_full
 
     @property
     def bytes_up_per_client(self) -> int:
@@ -492,8 +508,8 @@ class CommSession:
         plan = self._plans.get(sig)
         if plan is None:
             plan = {}
-            probe_round(self.config, self.m, self._mask_dtype, plan,
-                        trace_round, full_cohort=self._always_full)
+            probe_round(self.config, self._probe_m, self._mask_dtype, plan,
+                        trace_round, full_cohort=self._probe_full)
             self._plans[sig] = plan
         self.plan.clear()
         self.plan.update(plan)
@@ -535,8 +551,8 @@ class CommSession:
         one probe suffices. With no EF-eligible payloads the memory
         stays an empty pytree and the jitted round's jaxpr is unchanged.
         """
-        spec = probe_round(self.config, self.m, self._mask_dtype, {},
-                           trace_round, full_cohort=self._always_full)
+        spec = probe_round(self.config, self._probe_m, self._mask_dtype, {},
+                           trace_round, full_cohort=self._probe_full)
         self.ef_memory = feedback.init_memory(spec)
         return self.ef_memory
 
@@ -613,3 +629,149 @@ class CommSession:
             delivered=int(trace.delivered.sum()),
             dropped=int((trace.scheduled & ~trace.delivered).sum()),
             sim_time_s=float(trace.sim_time_s))
+
+
+class PopulationCommSession(CommSession):
+    """Synchronous driver over a lazy ``ClientPopulation``.
+
+    Per round: sample the cohort's client *ids* from the population
+    (``Scheduler.sample_ids`` — same draw, and therefore the same
+    cohort, as the dense ``participants`` mask under one seed),
+    materialize exactly those ``(c, n_shard, M)`` shards, draw the
+    cohort's channel coins *per client id*, gather the cohort's EF rows
+    from the bounded hot-set store, run the one jitted cohort round, and
+    scatter the updated rows back. Nothing ``(m,)``-shaped is ever
+    allocated except O(m) host-side metadata (shard sizes, scheduler
+    draws), so m ~ 10⁵ populations with q ~ 10⁻³ participation run in
+    cohort-bounded memory.
+
+    The round function signature gains the cohort problem as its first
+    (traced pytree) argument; since every cohort of one scheduler has
+    the same static size ``c`` and pad width, round 2..T reuse round 1's
+    jaxpr — cohort membership changes never retrace.
+    """
+
+    def __init__(self, config: CommConfig, population, *,
+                 mask_dtype=jnp.float64, keys=None, state0=None,
+                 obs=NULL_TELEMETRY, client_mesh=None):
+        super().__init__(config, population.m, mask_dtype=mask_dtype,
+                         keys=keys, state0=state0, obs=obs)
+        self.population = population
+        self.cohort_size = config.scheduler.cohort_size(population.m)
+        self.client_mesh = client_mesh
+        self.ef_store: "feedback.BoundedMemory | None" = None
+        # probes must trace cohort-shaped rounds, not (m,) ones
+        self._probe_m = self.cohort_size
+        self._pending_ids = None
+
+    @property
+    def _probe_full(self) -> bool:
+        # every cohort member is scheduled by construction; the mask only
+        # carries dropout, so no-dropout channels keep the mask=None
+        # (bit-exact identity) path even under q < 1 sampling
+        return self.config.channel.dropout_prob == 0.0
+
+    def _materialize(self, ids):
+        cohort = self.population.materialize(ids)
+        if self.client_mesh is not None:
+            from repro.sharding.rules import shard_cohort
+
+            cohort = shard_cohort(self.client_mesh, cohort)
+        return cohort
+
+    def init_error_feedback(self, trace_round):
+        spec = probe_round(self.config, self._probe_m, self._mask_dtype, {},
+                           trace_round, full_cohort=self._probe_full)
+        capacity = self.config.ef_capacity
+        if capacity is None:
+            capacity = min(self.m, 8 * self.cohort_size)
+        capacity = max(capacity, self.cohort_size)
+        self.ef_store = feedback.BoundedMemory(spec, capacity)
+        self.ef_memory = {}
+        return self.ef_memory
+
+    def begin_round(self, t: int):
+        """Sample cohort ids + per-id channel coins for round ``t``.
+
+        The key schedule is byte-identical to the dense driver's
+        (``fold_in(root, t)`` split into sched/chan/codec streams), so a
+        population run and a dense run of the same seed schedule the
+        same cohorts, and so does the async driver's version stream.
+        """
+        k = jax.random.fold_in(self._root, t)
+        k_sched, k_chan, k_codec = jax.random.split(k, 3)
+        ids = self.config.scheduler.sample_ids(
+            k_sched, t, self.m, self.config.channel)
+        draw = self.config.channel.draw_for(k_chan, ids)
+        delivered = ~draw.dropout
+        if not delivered.any():
+            # every sampled client dropped: re-poll the lowest id so
+            # aggregation weights stay well-defined (dense-path rule)
+            delivered = np.zeros_like(delivered)
+            delivered[0] = True
+        self._pending = (t, np.ones_like(delivered), delivered, draw)
+        self._pending_ids = ids
+        if self._probe_full:
+            return ids, None, k_codec
+        return ids, jnp.asarray(delivered, dtype=self._mask_dtype), k_codec
+
+    def step(self, round_fn) -> Any:
+        """One cohort round: sample ids, materialize, execute, account.
+
+        ``round_fn(cohort, state, memory, key, mask, codec_key)`` — the
+        population-mode round signature (cohort problem is a traced
+        pytree argument, so one jaxpr serves every cohort).
+        """
+        t = self._t
+        ids, mask, ck = self.begin_round(t)
+        cohort = self._materialize(ids)
+        memory = self.ef_store.gather(ids) if self.ef_store else {}
+        self._state, mem_out = round_fn(
+            cohort, self._state, memory, self.keys[t], mask, ck)
+        if self.ef_store is not None:
+            self.ef_store.scatter(ids, mem_out)
+        self.end_round()
+        self._t += 1
+        return self._state
+
+    def end_round(self) -> RoundTrace:
+        t, scheduled, delivered, draw = self._pending
+        ids = self._pending_ids
+        per_client = float(self.bytes_up_per_client)
+        bytes_up = per_client * delivered.astype(np.float64)
+        bytes_down = (float(self.bytes_down_per_client)
+                      * scheduled.astype(np.float64))
+        sim = self.config.channel.round_time_for(
+            ids, self.m, draw, delivered, bytes_up, bytes_down)
+        trace = RoundTrace(
+            round=t,
+            scheduled=scheduled,
+            delivered=delivered,
+            straggler=draw.straggler & delivered,
+            bytes_up=bytes_up,
+            bytes_down=bytes_down,
+            sim_time_s=sim,
+            ids=ids,
+            population=self.m,
+        )
+        self.traces.append(trace)
+        self._pending = None
+        self._pending_ids = None
+        if self.obs.enabled:
+            self._observe(trace)
+        return trace
+
+    def finalize(self) -> Transport:
+        if self.obs.enabled:
+            ef_bytes = self.ef_store.nbytes if self.ef_store else 0
+            self.obs.metrics.gauge("ef_memory_bytes").set(float(ef_bytes))
+            if self.ef_store is not None:
+                self.obs.metrics.gauge("ef_hot_set_evictions").set(
+                    float(self.ef_store.evictions))
+        return transport_from_traces(
+            self.traces, ef_residuals=self.ef_residual_norms())
+
+    def ef_residual_norms(self) -> "Dict[str, float]":
+        if self.ef_store is not None:
+            return self.ef_store.residual_norms()
+        return {}

@@ -156,3 +156,98 @@ def residual_norms(memory: "Dict[str, jax.Array]") -> "Dict[str, float]":
     memory (summed over clients). For ``ef21`` this is the estimate
     magnitude; for ``ef14`` the accumulated residual."""
     return {name: float(jnp.linalg.norm(e)) for name, e in memory.items()}
+
+
+class BoundedMemory:
+    """LRU-bounded EF row store for population-scale runs.
+
+    Dense EF keeps one memory row per client per payload — ``O(m)``
+    state that is exactly what population mode must not materialize.
+    ``BoundedMemory`` keeps dense rows only for a *hot set* of
+    ``capacity`` client ids with LRU eviction; a client outside the hot
+    set re-enters with a **zero row** (on-sample reset — the FedBuff-
+    style tradeoff: long-tail clients participate so rarely that their
+    stale residual is worth less than its footprint).
+
+    Per round the session calls ``gather(ids)`` to assemble the
+    cohort-stacked ``(c, ...)`` memory pytree the jitted round consumes
+    (assigning hot-set slots to new ids, evicting the least recently
+    sampled), and ``scatter(ids, memory)`` afterwards to write the
+    round's ``memory_out`` rows back into the store. Both are host-side
+    O(c); total footprint is ``capacity × Σ row_bytes`` regardless of m,
+    reported by the session through the existing ``repro.obs``
+    ``ef_memory_bytes`` gauge.
+    """
+
+    def __init__(self, spec: "Dict[str, jax.ShapeDtypeStruct]", capacity: int):
+        # ``spec`` rows are cohort-stacked (leading axis = cohort); the
+        # store keeps ``capacity`` rows of each payload's row shape
+        if capacity < 1:
+            raise ValueError(f"BoundedMemory capacity must be >= 1, "
+                             f"got {capacity}")
+        self.capacity = int(capacity)
+        self._bufs = {
+            name: jnp.zeros((self.capacity,) + tuple(s.shape[1:]), s.dtype)
+            for name, s in spec.items()
+        }
+        self._slot_of: "dict[int, int]" = {}  # client id -> slot (LRU order)
+        self.evictions = 0  # long-tail resets observed so far
+
+    @property
+    def payload_names(self):
+        return tuple(self._bufs)
+
+    @property
+    def nbytes(self) -> int:
+        """Bounded footprint: capacity × Σ per-payload row bytes."""
+        return int(sum(b.nbytes for b in self._bufs.values()))
+
+    def _assign(self, ids) -> "tuple[jnp.ndarray, list[int]]":
+        """Slots for ``ids`` (LRU-refreshed), plus newly assigned slots."""
+        fresh = []
+        for cid in ids:
+            cid = int(cid)
+            if cid in self._slot_of:
+                # refresh recency
+                self._slot_of[cid] = self._slot_of.pop(cid)
+                continue
+            if len(self._slot_of) < self.capacity:
+                slot = len(self._slot_of)
+            else:
+                # evict the least recently sampled id (oldest dict entry)
+                victim = next(iter(self._slot_of))
+                slot = self._slot_of.pop(victim)
+                self.evictions += 1
+            self._slot_of[cid] = slot
+            fresh.append(slot)
+        return (jnp.asarray([self._slot_of[int(c)] for c in ids],
+                            dtype=jnp.int32), fresh)
+
+    def gather(self, ids) -> "Dict[str, jax.Array]":
+        """Cohort-stacked ``(c, ...)`` memory rows for ``ids``.
+
+        Ids new to the hot set (or evicted since last sampled) read
+        zeros — the on-sample reset.
+        """
+        if len(ids) > self.capacity:
+            raise ValueError(
+                f"cohort of {len(ids)} exceeds EF hot-set capacity "
+                f"{self.capacity}; raise CommConfig.ef_capacity")
+        slots, fresh = self._assign(ids)
+        if fresh:
+            z = jnp.asarray(fresh, dtype=jnp.int32)
+            self._bufs = {name: buf.at[z].set(0)
+                          for name, buf in self._bufs.items()}
+        return {name: buf[slots] for name, buf in self._bufs.items()}
+
+    def scatter(self, ids, memory: "Dict[str, jax.Array]") -> None:
+        """Write the round's updated rows back (ids must be unique)."""
+        if not self._bufs:
+            return
+        slots = jnp.asarray([self._slot_of[int(c)] for c in ids],
+                            dtype=jnp.int32)
+        self._bufs = {name: buf.at[slots].set(memory[name][: len(ids)])
+                      for name, buf in self._bufs.items()}
+
+    def residual_norms(self) -> "Dict[str, float]":
+        return residual_norms(self._bufs)

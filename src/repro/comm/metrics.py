@@ -36,6 +36,13 @@ class RoundTrace:
     whose ``scheduled`` row is False. Per-trace totals and cumulative
     curves are conserved in both modes; only the per-client pairing of
     ``bytes_down`` with ``scheduled`` is sync-specific.
+
+    Population-mode (cohort) traces set ``ids`` to the cohort's client
+    ids and ``population`` to the population size m: every per-client
+    array is then cohort-length (``len(ids)``), never ``(m,)`` — at
+    m ~ 10⁵ with q ~ 10⁻³ a trace stores ~100 rows instead of 100 000.
+    Dense traces leave ``ids=None`` / ``population=0``; all aggregate
+    properties work identically on both forms.
     """
 
     round: int
@@ -47,6 +54,14 @@ class RoundTrace:
     sim_time_s: float  # round wall-clock (sync) / server-clock delta (async)
     staleness: "np.ndarray | None" = None  # (m,) server steps of lag, NaN = absent
     version: int = -1  # model version this commit produced (-1 for sync)
+    ids: "np.ndarray | None" = None  # cohort client ids (population mode)
+    population: int = 0  # population size m (0 = dense trace)
+
+    @property
+    def clients(self) -> int:
+        """Denominator for participation: population m, or the dense
+        per-client axis length."""
+        return self.population if self.population else len(self.delivered)
 
     @property
     def total_bytes(self) -> int:
@@ -84,6 +99,9 @@ class RoundTrace:
                           [None if np.isnan(v) else float(v)
                            for v in self.staleness]),
             "version": int(self.version),
+            **({} if self.ids is None else
+               {"ids": [int(v) for v in self.ids],
+                "population": int(self.population)}),
         }
 
     @classmethod
@@ -101,6 +119,9 @@ class RoundTrace:
                 [np.nan if v is None else v for v in stale],
                 dtype=np.float64)),
             version=int(d.get("version", -1)),
+            ids=(None if d.get("ids") is None
+                 else np.asarray(d["ids"], dtype=np.int64)),
+            population=int(d.get("population", 0)),
         )
 
 
@@ -112,7 +133,7 @@ def summarize(traces: "list[RoundTrace]") -> dict:
                 "dropped_client_rounds": 0, "mean_staleness": 0.0}
     up = sum(int(t.bytes_up.sum()) for t in traces)
     down = sum(int(t.bytes_down.sum()) for t in traces)
-    part = float(np.mean([t.delivered.mean() for t in traces]))
+    part = float(np.mean([t.delivered.sum() / t.clients for t in traces]))
     dropped = sum(int((t.scheduled & ~t.delivered).sum()) for t in traces)
     return {
         "rounds": len(traces),

@@ -16,6 +16,14 @@ Policies:
 
 All draws are deterministic from the PRNG key: the same
 ``(seed, round)`` always yields the same cohort.
+
+Population mode: ``sample_ids`` returns the sorted cohort *client ids*
+instead of an ``(m,)`` mask — the form the lazy-materialization path
+consumes (only the cohort's shards ever exist). ``participants`` and
+``sample_ids`` are two views of the SAME draw (same key → the mask is
+exactly the indicator of the ids), so dense and population runs of one
+seed schedule identical cohorts. ``cohort_size`` exposes the static
+per-round cohort cardinality so jitted rounds trace once per size.
 """
 from __future__ import annotations
 
@@ -36,7 +44,24 @@ class Scheduler:
         self, key: jax.Array, round_idx: int, m: int, channel: ChannelModel
     ) -> np.ndarray:
         """(m,) bool mask of clients scheduled this round."""
+        mask = np.zeros((m,), dtype=bool)
+        mask[self.sample_ids(key, round_idx, m, channel)] = True
+        return mask
+
+    def sample_ids(
+        self, key: jax.Array, round_idx: int, m: int, channel: ChannelModel
+    ) -> np.ndarray:
+        """Sorted int64 client ids of this round's cohort.
+
+        Same draw as ``participants`` (identical key → identical
+        cohort); O(cohort) output, never an ``(m,)`` mask, so q ~ 10⁻³
+        participation over m ~ 10⁵ populations stays cheap.
+        """
         raise NotImplementedError
+
+    def cohort_size(self, m: int) -> int:
+        """Static number of clients sampled per round."""
+        return m
 
     @property
     def is_full(self) -> bool:
@@ -48,6 +73,9 @@ class FullParticipation(Scheduler):
 
     def participants(self, key, round_idx, m, channel):
         return np.ones((m,), dtype=bool)
+
+    def sample_ids(self, key, round_idx, m, channel):
+        return np.arange(m, dtype=np.int64)
 
     @property
     def is_full(self):
@@ -67,12 +95,13 @@ class UniformSampler(Scheduler):
     def _count(self, m: int) -> int:
         return max(1, min(m, int(math.ceil(self.q * m))))
 
-    def participants(self, key, round_idx, m, channel):
+    def sample_ids(self, key, round_idx, m, channel):
         chosen = jax.random.choice(
             key, m, shape=(self._count(m),), replace=False)
-        mask = np.zeros((m,), dtype=bool)
-        mask[np.asarray(chosen)] = True
-        return mask
+        return np.sort(np.asarray(chosen, dtype=np.int64))
+
+    def cohort_size(self, m: int) -> int:
+        return self._count(m)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,13 +119,11 @@ class BandwidthAware(UniformSampler):
     def name(self):
         return f"bandwidth:{self.q}"
 
-    def participants(self, key, round_idx, m, channel):
+    def sample_ids(self, key, round_idx, m, channel):
         rates = channel.uplink_rates(m)
         scores = jnp.log(jnp.asarray(rates)) + jax.random.gumbel(key, (m,))
         _, top = jax.lax.top_k(scores, self._count(m))
-        mask = np.zeros((m,), dtype=bool)
-        mask[np.asarray(top)] = True
-        return mask
+        return np.sort(np.asarray(top, dtype=np.int64))
 
 
 def make_scheduler(spec: "str | Scheduler") -> Scheduler:

@@ -42,11 +42,12 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.comm.async_driver import AsyncSession
+from repro.comm.async_driver import AsyncSession, PopulationAsyncSession
 from repro.comm.config import (
     NULL_COMM,
     CommConfig,
     CommSession,
+    PopulationCommSession,
     plan_bytes,
     probe_round,
 )
@@ -154,10 +155,36 @@ def make_session(
     state0,
     formula_bytes_per_round: float,
     obs=NULL_TELEMETRY,
+    population=None,
+    client_mesh=None,
 ) -> Session:
     """Resolve a ``CommConfig`` (or None) to its driver session — the
     single place mode dispatch happens. ``obs`` is the live telemetry
-    runtime (``repro.obs.Telemetry``) or the shared no-op."""
+    runtime (``repro.obs.Telemetry``) or the shared no-op.
+
+    ``population`` (a ``repro.core.federated.ClientPopulation``) selects
+    the lazy cohort-materialization drivers; it requires a transport
+    (``comm`` must not be None — a population has no dense legacy path
+    to fall back to). ``client_mesh`` optionally shards each
+    materialized cohort's client axis over a device mesh
+    (``repro.sharding.rules.shard_cohort``).
+    """
+    if population is not None:
+        if comm is None:
+            raise ValueError(
+                "population-mode runs need a CommConfig: pass "
+                "run_rounds(..., comm=CommConfig(scheduler='uniform:q')) "
+                "(materializing all clients of a population is exactly "
+                "what populations exist to avoid — use "
+                "population.materialize_all() explicitly if you really "
+                "want the dense problem)")
+        if comm.async_mode:
+            return PopulationAsyncSession(
+                comm, population, keys=keys, state0=state0,
+                mask_dtype=mask_dtype, obs=obs, client_mesh=client_mesh)
+        return PopulationCommSession(
+            comm, population, mask_dtype=mask_dtype, keys=keys,
+            state0=state0, obs=obs, client_mesh=client_mesh)
     if comm is None:
         return NullSession(keys, state0, formula_bytes_per_round,
                            m=m, mask_dtype=mask_dtype, obs=obs)

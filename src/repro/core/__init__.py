@@ -1,6 +1,13 @@
 """Core library: the paper's contribution (FLeNS) + every Table-I baseline."""
 from repro.core.base import FederatedOptimizer, History, run_rounds
-from repro.core.federated import FederatedProblem, make_problem, newton_solve
+from repro.core.federated import (
+    ClientPopulation,
+    DatasetPopulation,
+    FederatedProblem,
+    SyntheticPopulation,
+    make_problem,
+    newton_solve,
+)
 from repro.core.first_order import FedAvg, FedProx
 from repro.core.flens import FLeNS
 from repro.core.losses import OBJECTIVES, least_squares, logistic

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import CommConfig, RoundTrace, make_session
-from repro.core.federated import FederatedProblem
+from repro.core.federated import ClientPopulation, FederatedProblem
 from repro.obs import NULL_TELEMETRY, Telemetry, TelemetryConfig
 from repro.obs import log as obs_log
 
@@ -250,13 +250,14 @@ class _ProfilerHook:
 
 def run_rounds(
     opt: FederatedOptimizer,
-    problem: FederatedProblem,
+    problem: "FederatedProblem | ClientPopulation",
     w0: jax.Array,
     w_star: jax.Array,
     rounds: int,
     seed: int = 0,
     comm: Optional[CommConfig] = None,
     obs: Optional[TelemetryConfig] = None,
+    client_mesh=None,
 ) -> History:
     """Drive ``rounds`` communication rounds and record the trajectory.
 
@@ -265,6 +266,18 @@ def run_rounds(
     through the simulated transport and the returned ``History`` carries
     per-round ``RoundTrace`` records. All modes run the same loop: the
     ``Session`` protocol (``repro.comm.session``) owns the clock.
+
+    ``problem`` may also be a ``ClientPopulation`` (population mode):
+    only the scheduled cohort's shards are materialized each round, so
+    the client axis scales to ``m ~ 10^5`` with memory bounded by the
+    cohort size. Population mode requires a ``CommConfig`` (there is no
+    dense legacy path for a population), evaluates loss/grad on the
+    population's deterministic ``eval_problem()`` subsample, and rejects
+    optimizers carrying dense per-client state (``per_client_state``,
+    e.g. FedNew's ADMM duals — unsampled clients would silently keep
+    stale duals). ``client_mesh`` optionally shards each materialized
+    cohort's client axis over a device mesh
+    (``repro.sharding.rules.shard_cohort``).
 
     ``obs=TelemetryConfig(...)`` turns on the ``repro.obs`` telemetry
     layer: host-side phase spans around the jit boundaries
@@ -278,26 +291,46 @@ def run_rounds(
     run summary lands on ``History.telemetry``.
     """
     telemetry = Telemetry(obs) if obs is not None else NULL_TELEMETRY
-    loss_fn = jax.jit(problem.global_value)
-    grad_fn = jax.jit(problem.global_grad)
+    population = problem if getattr(problem, "is_population", False) else None
+    if population is not None:
+        if getattr(opt, "per_client_state", False):
+            raise NotImplementedError(
+                f"{opt.name} keeps dense per-client state across rounds "
+                f"(per_client_state=True); population mode materializes "
+                f"only the sampled cohort, so unsampled clients would "
+                f"silently carry stale state — use a dense problem "
+                f"(population.materialize_all()) or a stateless-client "
+                f"optimizer")
+        # loss/grad (and optimizer init geometry) come from the
+        # population's deterministic evaluation subsample
+        eval_prob = population.eval_problem()
+    else:
+        eval_prob = problem
+    m = population.m if population is not None else problem.m
+    loss_fn = jax.jit(eval_prob.global_value)
+    grad_fn = jax.jit(eval_prob.global_grad)
 
-    itemsize = jnp.dtype(problem.X.dtype).itemsize
+    itemsize = jnp.dtype(eval_prob.X.dtype).itemsize
     loss_star = float(loss_fn(w_star))
-    state = opt.init(problem, w0)
+    state = opt.init(eval_prob, w0)
     keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
 
     formula_bytes = float(
-        (opt.uplink_floats(problem) + opt.downlink_floats(problem))
-        * itemsize * problem.m)
+        (opt.uplink_floats(eval_prob) + opt.downlink_floats(eval_prob))
+        * itemsize * m)
     session = make_session(
         comm,
-        m=problem.m,
-        mask_dtype=problem.X.dtype,
-        client_weights=np.asarray(problem.client_weights),
+        m=m,
+        mask_dtype=eval_prob.X.dtype,
+        client_weights=(population.client_weights
+                        if population is not None
+                        else np.asarray(problem.client_weights)),
         keys=keys,
         state0=state,
         formula_bytes_per_round=formula_bytes,
         obs=telemetry,
+        population=population,
+        client_mesh=client_mesh,
     )
 
     # Adaptive-k policies change payload sizes mid-trajectory; the async
@@ -333,19 +366,37 @@ def run_rounds(
     # EMPTY pytree — zero extra jaxpr inputs — and on the no-transport
     # path ``comm_round`` returns the no-op NULL_COMM view, so the
     # identity/legacy jaxprs stay bit-identical.
-    def _round(s, mem, k, mask, ck):
-        cr = session.comm_round(mem, mask, ck)
-        s_next = opt.round(problem, s, k, comm=cr)
-        return s_next, cr.memory_out
-
-    # trace-time discovery (byte plan / EF shapes / async launch): one
-    # abstract probe of the round — nothing executes here (any key
-    # works; shapes don't depend on it, and keys may be empty when
-    # rounds=0)
+    #
+    # Population mode threads the materialized cohort through as a
+    # traced pytree argument: cohort shapes are fixed at (c, n_shard, M)
+    # by the scheduler's cohort size, so every round of every cohort
+    # reuses one jaxpr — only the data changes, never the trace.
     probe_key = jax.random.PRNGKey(seed)
+    if population is not None:
+        def _round(cohort, s, mem, k, mask, ck):
+            cr = session.comm_round(mem, mask, ck)
+            s_next = opt.round(cohort, s, k, comm=cr)
+            return s_next, cr.memory_out
 
-    def trace_with(s):
-        return lambda cr: opt.round(problem, s, probe_key, comm=cr)
+        # probe cohort: ids are irrelevant (shape-only eval_shape trace)
+        _probe_cohort = population.materialize(np.zeros(
+            comm.scheduler.cohort_size(population.m), dtype=np.int64))
+
+        def trace_with(s):
+            return lambda cr: opt.round(_probe_cohort, s, probe_key,
+                                        comm=cr)
+    else:
+        def _round(s, mem, k, mask, ck):
+            cr = session.comm_round(mem, mask, ck)
+            s_next = opt.round(problem, s, k, comm=cr)
+            return s_next, cr.memory_out
+
+        # trace-time discovery (byte plan / EF shapes / async launch):
+        # one abstract probe of the round — nothing executes here (any
+        # key works; shapes don't depend on it, and keys may be empty
+        # when rounds=0)
+        def trace_with(s):
+            return lambda cr: opt.round(problem, s, probe_key, comm=cr)
 
     with telemetry.trace.span("prepare"):
         session.prepare(trace_with(state))
@@ -399,7 +450,7 @@ def run_rounds(
         "driver": ("null" if comm is None
                    else "async" if comm.async_mode else "sync"),
         "rounds_requested": rounds,
-        "clients": problem.m,
+        "clients": m,
         "total_bytes": total_bytes,
         "sim_time_s": float(transport.sim_time_s[-1])
         if len(transport.sim_time_s) else 0.0,
@@ -410,15 +461,15 @@ def run_rounds(
         loss=losses,
         gap=np.maximum(losses - loss_star, 0.0),
         grad_norm=np.asarray(gnorms),
-        uplink_floats=opt.uplink_floats(problem),
-        downlink_floats=opt.downlink_floats(problem),
+        uplink_floats=opt.uplink_floats(eval_prob),
+        downlink_floats=opt.downlink_floats(eval_prob),
         wall_time_s=wall,
         rounds=rounds,
         cumulative_bytes=transport.cumulative_bytes,
         sim_time_s=transport.sim_time_s,
         traces=transport.traces,
         staleness=transport.staleness,
-        clients=problem.m,
+        clients=m,
         itemsize=itemsize,
         ef_residuals=transport.ef_residuals,
         telemetry=summary,

@@ -1,4 +1,4 @@
-"""Federated problem container + client runtime.
+"""Federated problem container + client runtime + client populations.
 
 Clients are stored as equal-sized shards stacked on a leading ``m`` axis
 (``X: (m, n_shard, M)``, ``y: (m, n_shard)``) so that every per-client
@@ -11,6 +11,21 @@ slice, server aggregation = ``psum`` over the client axis.
 Unequal client sizes are supported through per-client weights
 ``p_j = n_j / N`` plus per-client valid-count masks (shards are padded to
 the max size; padded rows carry zero weight in the local loss).
+
+Populations vs problems
+-----------------------
+``FederatedProblem`` materializes every client — fine at workstation
+scale (m ≲ 10³), impossible at cross-device scale (m ~ 10⁴–10⁶ with
+q ~ 10⁻³ participation). ``ClientPopulation`` is the lazy counterpart:
+it *describes* m clients (shard sizes, a deterministic per-client data
+rule keyed by ``(seed, client_id)``) and materializes only a requested
+cohort — ``materialize(ids)`` returns an ordinary ``FederatedProblem``
+over those clients, bit-reproducible per client id regardless of which
+cohort it rides in. ``run_rounds`` accepts a population wherever it
+accepts a problem (a ``CommConfig`` with a sampling scheduler is then
+required); the legacy dense path is ``make_problem``, which is now a
+thin wrapper over ``DatasetPopulation.materialize_all()`` and stays
+bit-identical to the pre-population construction (golden-tested).
 """
 from __future__ import annotations
 
@@ -128,6 +143,310 @@ class FederatedProblem:
         return jnp.einsum("j,jab->ab", p, self.local_hessian(w))
 
 
+# ---------------------------------------------------------------------------
+# Client populations: lazy cohort materialization
+# ---------------------------------------------------------------------------
+
+# pad-blowup advisory threshold: warn when the largest shard exceeds
+# this multiple of the mean (dense construction multiplies memory for
+# ALL m clients by the ratio)
+_PAD_WARN_FACTOR = 4.0
+
+
+def _redistribute_cap(sizes: np.ndarray, cap: int) -> np.ndarray:
+    """Clip shard sizes at ``cap`` and hand the excess rows to the
+    smallest shards (keeping the total exact and every size >= 1).
+    Deterministic: pure function of (sizes, cap)."""
+    sizes = sizes.copy()
+    excess = int(np.maximum(sizes - cap, 0).sum())
+    sizes = np.minimum(sizes, cap)
+    while excess > 0:
+        # fill the currently-smallest shards first, one sweep at a time
+        order = np.argsort(sizes, kind="stable")
+        room = cap - sizes[order]
+        take = np.minimum(room, np.maximum(excess // len(sizes), 1))
+        for j, t in zip(order, take):
+            t = int(min(t, excess))
+            sizes[j] += t
+            excess -= t
+            if excess == 0:
+                break
+    return sizes
+
+
+def _dirichlet_sizes(
+    key: jax.Array, n: int, m: int, alpha: float,
+    max_pad_factor: "float | None" = None,
+) -> np.ndarray:
+    """n · Dir(alpha) shard sizes, largest-remainder rounded to sum to n,
+    every client >= 1 row. ``max_pad_factor`` (opt-in) caps any shard at
+    ``factor * ceil(n/m)`` rows, redistributing the excess — the fix for
+    the dense padding blowup where one heavy client multiplies memory
+    for all m. ``None`` preserves the raw draw bit-for-bit and only
+    warns when the blowup is large."""
+    props = np.asarray(
+        jax.random.dirichlet(key, jnp.full((m,), alpha)), dtype=np.float64)
+    raw = props * n
+    sizes = np.floor(raw).astype(np.int64)
+    # largest-remainder rounding so sizes sum exactly to n
+    short = n - int(sizes.sum())
+    order = np.argsort(-(raw - sizes))
+    sizes[order[:short]] += 1
+    # every client holds at least one real row (p_j = 0 breaks the
+    # weighted aggregation and the local 1/n_j normalizations)
+    while (sizes == 0).any():
+        sizes[int(np.argmax(sizes))] -= 1
+        sizes[int(np.argmin(sizes))] += 1
+    mean = -(-n // m)  # ceil(n/m)
+    if max_pad_factor is not None:
+        cap = max(1, int(np.ceil(max_pad_factor * mean)))
+        if sizes.max() > cap:
+            sizes = _redistribute_cap(sizes, cap)
+    elif sizes.max() > _PAD_WARN_FACTOR * mean:
+        from repro.obs import log as obs_log
+
+        obs_log.warn_with_context(
+            f"dirichlet shard sizes pad every client to the largest chunk "
+            f"({int(sizes.max())} rows vs ceil(n/m)={mean}): dense "
+            f"materialization costs m*max_j(n_j)*M. Pass "
+            f"max_pad_factor=<f> to cap the blowup, or use a "
+            f"ClientPopulation to materialize cohorts lazily",
+            m=m, n=n, max_shard=int(sizes.max()), mean_shard=mean)
+    return sizes
+
+
+class ClientPopulation:
+    """Describes ``m`` clients without materializing their data.
+
+    Subclasses define per-client shard views as a deterministic function
+    of the client id; ``materialize(ids)`` builds the ``(c, n_shard, M)``
+    ``FederatedProblem`` of one cohort (fixed pad width ``n_shard``, so
+    every cohort of the same size traces one jaxpr). Host-side metadata
+    is O(m) (shard sizes); client *data* is only ever materialized for
+    the cohorts actually scheduled.
+    """
+
+    # marks population mode for the driver dispatch in ``run_rounds``
+    # (a flag, not an isinstance check — the driver loop stays
+    # protocol-driven and source-inspectable)
+    is_population = True
+
+    # subclasses set these
+    m: int
+    dim: int
+    lam: float
+    objective: Objective
+    n_shard: int  # fixed cohort pad width
+    sizes: np.ndarray  # (m,) int64 per-client row counts
+
+    @property
+    def dtype(self):
+        return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+    @property
+    def client_weights(self) -> np.ndarray:
+        """(m,) p_j = n_j / N over the whole population (host-side)."""
+        s = self.sizes.astype(np.float64)
+        return s / s.sum()
+
+    def materialize(self, ids) -> FederatedProblem:
+        """Materialize the cohort ``ids`` as a ``FederatedProblem``.
+
+        Bit-reproducible per client id: the same id yields the same
+        shard regardless of cohort composition, round, or driver.
+        """
+        raise NotImplementedError
+
+    def materialize_all(self) -> FederatedProblem:
+        """Dense legacy view: every client materialized (workstation
+        scale only — this is exactly the blowup populations avoid)."""
+        return self.materialize(np.arange(self.m))
+
+    def eval_problem(self, max_clients: int = 64) -> FederatedProblem:
+        """A fixed, deterministic evaluation cohort (ids evenly spaced
+        across the population) for loss/grad curves: population-mode
+        trajectories report the loss of this anchor cohort, never the
+        full population."""
+        if self.m <= max_clients:
+            ids = np.arange(self.m)
+        else:
+            ids = np.unique(
+                np.linspace(0, self.m - 1, max_clients).astype(np.int64))
+        return self.materialize(ids)
+
+
+class DatasetPopulation(ClientPopulation):
+    """A real dataset partitioned into m client views, lazily gathered.
+
+    Stores only O(n) host rows + O(m) metadata (per-client sizes and row
+    offsets); ``materialize(ids)`` gathers the cohort's rows. The
+    partition rule (permutation + shard sizes) is exactly the one
+    ``make_problem`` always used, so ``materialize_all()`` is
+    bit-identical to the legacy dense construction — ``make_problem`` is
+    now a thin wrapper over this class.
+    """
+
+    def __init__(
+        self,
+        X, y, m: int, lam: float, objective: Objective, *,
+        key: "jax.Array | None" = None,
+        heterogeneity: str = "iid",
+        dirichlet_alpha: float = 0.3,
+        max_pad_factor: "float | None" = None,
+    ):
+        n = np.asarray(X).shape[0]
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if heterogeneity == "dirichlet":
+            if n < m:
+                raise ValueError(
+                    f"dirichlet split needs n >= m, got n={n} m={m}")
+            perm = np.asarray(jnp.argsort(y))
+            sizes = _dirichlet_sizes(key, n, m, dirichlet_alpha,
+                                     max_pad_factor=max_pad_factor)
+            rows_X = np.asarray(X)[perm]
+            rows_y = np.asarray(y)[perm]
+            n_shard = int(sizes.max())
+        elif heterogeneity in ("iid", "label"):
+            if heterogeneity == "iid":
+                perm = np.asarray(jax.random.permutation(key, n))
+            else:
+                perm = np.asarray(jnp.argsort(y))
+            n_shard = -(-n // m)  # ceil
+            pad = n_shard * m - n
+            rows_X = np.asarray(X)[perm]
+            rows_y = np.asarray(y)[perm]
+            if pad:
+                rows_X = np.concatenate(
+                    [rows_X, np.zeros((pad, rows_X.shape[1]), rows_X.dtype)])
+                rows_y = np.concatenate(
+                    [rows_y, np.zeros((pad,), rows_y.dtype)])
+            sizes = np.full((m,), n_shard, dtype=np.int64)
+            sizes[-1] = n - n_shard * (m - 1)
+        else:
+            raise ValueError(heterogeneity)
+        self.m = int(m)
+        self.dim = int(rows_X.shape[1])
+        self.lam = float(lam)
+        self.objective = objective
+        self.sizes = sizes
+        self.n_shard = int(n_shard)
+        self._rows_X = rows_X
+        self._rows_y = rows_y
+        self._starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        self._n_rows = rows_X.shape[0]
+
+    def materialize(self, ids) -> FederatedProblem:
+        ids = np.asarray(ids, dtype=np.int64)
+        # clamp the gather window to the row table (short shards read
+        # trailing rows that the mask then zeroes — the exact indexing
+        # rule the dense dirichlet construction always used)
+        idx = np.minimum(
+            self._starts[ids][:, None] + np.arange(self.n_shard)[None, :],
+            self._n_rows - 1)
+        valid = np.arange(self.n_shard)[None, :] < self.sizes[ids][:, None]
+        Xc = jnp.asarray(self._rows_X[idx])
+        yc = jnp.asarray(self._rows_y[idx])
+        mask = jnp.asarray(valid, Xc.dtype)
+        return FederatedProblem(
+            X=Xc * mask[..., None],
+            y=yc * mask.astype(yc.dtype),
+            mask=mask,
+            lam=self.lam,
+            objective=self.objective,
+        )
+
+
+class SyntheticPopulation(ClientPopulation):
+    """A generative population: client ``j``'s shard is a pure function
+    of ``(seed, j)`` — nothing exists until a cohort is sampled.
+
+    Features follow the same power-law-covariance logistic model as the
+    synthetic LIBSVM twins (``repro.data.libsvm_like``); labels come
+    from a shared ground-truth ``w_true`` optionally tilted per client
+    (``heterogeneity > 0`` adds a per-client N(0, het²) perturbation to
+    ``w_true`` — non-iid label rules without non-iid bookkeeping).
+    Shard sizes follow a Dirichlet spec over the population
+    (``n_total · Dir(alpha)``), clipped into ``[1, n_shard]`` so cohorts
+    pad to a FIXED width — cohort materialization is one vmapped,
+    jittable generator call and never retraces on cohort membership.
+    """
+
+    def __init__(
+        self,
+        m: int,
+        dim: int,
+        *,
+        lam: float = 1e-3,
+        objective: "Objective | None" = None,
+        seed: int = 0,
+        n_per_client: int = 32,
+        n_shard: "int | None" = None,
+        dirichlet_alpha: "float | None" = 0.3,
+        spectrum_decay: float = 1.0,
+        label_noise: float = 0.05,
+        heterogeneity: float = 0.0,
+    ):
+        if objective is None:
+            from repro.core.losses import logistic
+
+            objective = logistic
+        self.m = int(m)
+        self.dim = int(dim)
+        self.lam = float(lam)
+        self.objective = objective
+        self.seed = int(seed)
+        self.n_shard = int(n_shard if n_shard is not None
+                           else max(2, 2 * n_per_client))
+        root = jax.random.PRNGKey(seed)
+        k_sizes, k_true, self._k_data = jax.random.split(root, 3)
+        if dirichlet_alpha is None:
+            self.sizes = np.full((m,), int(n_per_client), dtype=np.int64)
+        else:
+            props = np.asarray(
+                jax.random.dirichlet(
+                    k_sizes, jnp.full((m,), float(dirichlet_alpha))),
+                dtype=np.float64)
+            raw = np.round(props * (n_per_client * m)).astype(np.int64)
+            # clip into [1, n_shard]: the pad width is a POPULATION
+            # constant, so one heavy draw can never widen every cohort
+            self.sizes = np.clip(raw, 1, self.n_shard)
+        dt = self.dtype
+        evals = jnp.arange(1, dim + 1, dtype=dt) ** (-float(spectrum_decay))
+        self._sqrt_evals = jnp.sqrt(evals)
+        w_true = jax.random.normal(k_true, (dim,), dt)
+        self._w_true = w_true / jnp.linalg.norm(w_true) * 4.0
+        self._label_noise = float(label_noise)
+        self._het = float(heterogeneity)
+        self._gen = jax.jit(jax.vmap(self._one_client))
+
+    def _one_client(self, cid: jax.Array, n_j: jax.Array):
+        """(n_shard, dim) features + (n_shard,) labels + mask for one
+        client id — keyed by (seed, cid) only."""
+        dt = self._sqrt_evals.dtype
+        kj = jax.random.fold_in(self._k_data, cid)
+        kx, kt, ku, kf = jax.random.split(kj, 4)
+        X = jax.random.normal(kx, (self.n_shard, self.dim), dt)
+        X = X * self._sqrt_evals[None, :]
+        w = self._w_true
+        if self._het > 0.0:
+            w = w + self._het * jax.random.normal(kt, (self.dim,), dt)
+        p = jax.nn.sigmoid(X @ w)
+        u = jax.random.uniform(ku, (self.n_shard,), dt)
+        y = jnp.where(u < p, 1.0, -1.0).astype(dt)
+        flip = jax.random.uniform(kf, (self.n_shard,), dt) < self._label_noise
+        y = jnp.where(flip, -y, y)
+        mask = (jnp.arange(self.n_shard) < n_j).astype(dt)
+        return X * mask[:, None], y * mask, mask
+
+    def materialize(self, ids) -> FederatedProblem:
+        ids = np.asarray(ids, dtype=np.int64)
+        n_j = jnp.asarray(self.sizes[ids])
+        Xc, yc, mask = self._gen(jnp.asarray(ids, jnp.uint32), n_j)
+        return FederatedProblem(X=Xc, y=yc, mask=mask, lam=self.lam,
+                                objective=self.objective)
+
+
 def make_problem(
     X: jax.Array,
     y: jax.Array,
@@ -138,8 +457,14 @@ def make_problem(
     key: jax.Array | None = None,
     heterogeneity: str = "iid",
     dirichlet_alpha: float = 0.3,
+    max_pad_factor: "float | None" = None,
 ) -> FederatedProblem:
-    """Partition a dataset into m client shards.
+    """Partition a dataset into m client shards (dense, all clients).
+
+    Thin wrapper over ``DatasetPopulation(...).materialize_all()`` —
+    the lazy-population path is the only construction path; this one
+    materializes every client up front and is bit-identical to the
+    pre-population dense construction (golden-tested).
 
     heterogeneity:
       * "iid"       — random permutation, equal shards
@@ -149,70 +474,17 @@ def make_problem(
                       every client gets ≥ 1 row): clients see both skewed
                       label mixtures AND skewed sample counts, so
                       ``client_weights`` p_j = n_j / N genuinely varies.
-                      NOTE: shards are padded to the LARGEST chunk, so
-                      memory is m · max_j(n_j) · M — with small alpha the
-                      largest chunk can approach n, inflating the stacked
-                      arrays by up to ~m×. Fine at this repo's dataset
-                      sizes; cap the draw before going paper-scale non-iid.
+                      Shards are padded to the LARGEST chunk, so memory
+                      is m · max_j(n_j) · M; ``max_pad_factor=f`` caps
+                      any chunk at ``f * ceil(n/m)`` rows (excess
+                      redistributed deterministically), and the default
+                      ``None`` keeps the raw draw but warns when the
+                      blowup exceeds 4x.
     """
-    n = X.shape[0]
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    if heterogeneity == "dirichlet":
-        if n < m:
-            raise ValueError(f"dirichlet split needs n >= m, got n={n} m={m}")
-        perm = jnp.argsort(y)
-        props = np.asarray(
-            jax.random.dirichlet(key, jnp.full((m,), dirichlet_alpha)),
-            dtype=np.float64,
-        )
-        raw = props * n
-        sizes = np.floor(raw).astype(np.int64)
-        # largest-remainder rounding so sizes sum exactly to n
-        short = n - int(sizes.sum())
-        order = np.argsort(-(raw - sizes))
-        sizes[order[:short]] += 1
-        # every client holds at least one real row (p_j = 0 breaks the
-        # weighted aggregation and the local 1/n_j normalizations)
-        while (sizes == 0).any():
-            sizes[int(np.argmax(sizes))] -= 1
-            sizes[int(np.argmin(sizes))] += 1
-        n_shard = int(sizes.max())
-        starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
-        idx = np.minimum(starts[:, None] + np.arange(n_shard)[None, :], n - 1)
-        valid = np.arange(n_shard)[None, :] < sizes[:, None]
-        Xp = jnp.asarray(np.asarray(X[perm])[idx])  # (m, n_shard, M)
-        yp = jnp.asarray(np.asarray(y[perm])[idx])
-        mask = jnp.asarray(valid, X.dtype)
-        return FederatedProblem(
-            X=Xp * mask[..., None],
-            y=yp * mask.astype(y.dtype),
-            mask=mask,
-            lam=lam,
-            objective=objective,
-        )
-    if heterogeneity == "iid":
-        perm = jax.random.permutation(key, n)
-    elif heterogeneity == "label":
-        perm = jnp.argsort(y)
-    else:
-        raise ValueError(heterogeneity)
-    Xp, yp = X[perm], y[perm]
-    n_shard = -(-n // m)  # ceil
-    pad = n_shard * m - n
-    if pad:
-        Xp = jnp.concatenate([Xp, jnp.zeros((pad, X.shape[1]), X.dtype)])
-        yp = jnp.concatenate([yp, jnp.zeros((pad,), y.dtype)])
-    mask = jnp.concatenate(
-        [jnp.ones((n,), X.dtype), jnp.zeros((pad,), X.dtype)]
-    )
-    return FederatedProblem(
-        X=Xp.reshape(m, n_shard, -1),
-        y=yp.reshape(m, n_shard),
-        mask=mask.reshape(m, n_shard),
-        lam=lam,
-        objective=objective,
-    )
+    return DatasetPopulation(
+        X, y, m, lam, objective, key=key, heterogeneity=heterogeneity,
+        dirichlet_alpha=dirichlet_alpha, max_pad_factor=max_pad_factor,
+    ).materialize_all()
 
 
 def newton_solve(

@@ -142,6 +142,10 @@ class FedNew(FederatedOptimizer):
     """
 
     name = "fednew"
+    # ADMM directions/duals are dense (m, dim) state carried across
+    # rounds; population mode (sampled cohorts) would leave unsampled
+    # clients' duals silently stale, so run_rounds rejects it
+    per_client_state = True
 
     def __init__(self, mu: float = 1.0, rho: float = 0.1, alpha: float = 0.25):
         self.mu = mu

@@ -176,3 +176,35 @@ def tree_shardings(mesh: Mesh, tree, rule, **kw):
         lambda path, leaf: NamedSharding(mesh, rule(mesh, path, leaf, **kw)),
         tree,
     )
+
+
+# -- federated cohort rules ---------------------------------------------------
+
+def cohort_spec(mesh: Mesh, leaf) -> P:
+    """PartitionSpec for one cohort-stacked array: shard the leading
+    (client) axis over the first available client-capable mesh axis,
+    replicate everything else. Divisibility-guarded like every other
+    rule — a cohort that doesn't divide the mesh falls back to
+    replication rather than erroring."""
+    axes = tuple(a for a in ("clients", "data") if a in mesh.axis_names)[:1]
+    if not axes or leaf.ndim == 0:
+        return P()
+    return _guard(mesh, leaf.shape,
+                  (axes[0],) + (None,) * (leaf.ndim - 1))
+
+
+def shard_cohort(mesh: Mesh, cohort):
+    """Place a cohort pytree (``FederatedProblem`` of one sampled
+    cohort) with its client axis sharded over ``mesh``.
+
+    This is how a population-mode round spreads over devices: the jitted
+    round is vmapped over the client axis, so GSPMD partitions every
+    per-client computation along the mesh and the server aggregation
+    becomes a cross-device reduction — no shard_map rewrite of the round
+    needed. A 1-device mesh is the identity placement.
+    """
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.device_put(
+            leaf, NamedSharding(mesh, cohort_spec(mesh, leaf))),
+        cohort,
+    )

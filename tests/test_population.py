@@ -1,0 +1,416 @@
+"""Population-scale client axis: lazy cohort materialization.
+
+Three invariant families:
+
+  * **Golden bit-identity** — the legacy dense-``m`` construction
+    (``make_problem``) is now a thin wrapper over ``DatasetPopulation``;
+    the pre-refactor fixture ``tests/golden/population_golden.json``
+    pins sha256 fingerprints of the constructed problems AND full
+    loss/bytes trajectories across all three drivers (no-comm, sync,
+    async) so the wrapper cannot drift by a single bit.
+  * **Cohort determinism** — the same ``(seed, round)`` yields identical
+    cohort ids, shards, and channel draws across runs; per-id channel
+    coins are independent of cohort composition (the property that makes
+    sync and async drivers agree on any shared client).
+  * **Bounded memory** — the EF hot-set store (``BoundedMemory``) and
+    the m=100k smoke (slow-marked, subprocess-isolated RSS budget).
+"""
+import hashlib
+import json
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import BoundedMemory, ChannelModel, CommConfig
+from repro.core import (
+    DatasetPopulation,
+    SyntheticPopulation,
+    make_optimizer,
+    make_problem,
+    newton_solve,
+    run_rounds,
+)
+from repro.core.losses import logistic
+from repro.data.libsvm_like import make_classification
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "population_golden.json")
+    .read_text())
+
+
+def _sha(a) -> str:
+    return hashlib.sha256(
+        np.ascontiguousarray(np.asarray(a)).tobytes()).hexdigest()
+
+
+@pytest.fixture(scope="module")
+def class_data():
+    return make_classification(jax.random.PRNGKey(4), 600, 16)
+
+
+def _golden_problem(class_data, het: str):
+    X, y = class_data
+    key = {"iid": 7, "dirichlet": 11}[het]
+    return make_problem(X, y, m=8, lam=1e-3, objective=logistic,
+                        key=jax.random.PRNGKey(key), heterogeneity=het)
+
+
+def _golden_channel(m: int) -> ChannelModel:
+    return ChannelModel(
+        uplink_bytes_per_s=np.logspace(4, 6, m),
+        downlink_bytes_per_s=1e7, latency_s=0.05,
+        straggler_prob=0.2, dropout_prob=0.1)
+
+
+def _golden_runs(m: int):
+    chan = _golden_channel(m)
+    return {
+        "flens_nocomm": ("flens", dict(k=8), None),
+        "flens_sync_identity": ("flens", dict(k=8), CommConfig()),
+        "flens_async_lockstep": ("flens", dict(k=8),
+                                 CommConfig(async_mode=True)),
+        "flens_sync_rich": ("flens", dict(k=8),
+                            CommConfig(codecs={"sg": "qint8"},
+                                       scheduler="uniform:0.5",
+                                       channel=chan, seed=3)),
+        "fedavg_sync_ef": ("fedavg", dict(lr=2.0, local_steps=3),
+                           CommConfig(codecs="topk0.25", error_feedback=True,
+                                      scheduler="uniform:0.5",
+                                      channel=chan, seed=3)),
+        "fedavg_async_buf": ("fedavg", dict(lr=2.0, local_steps=3),
+                             CommConfig(async_mode=True, buffer_size=3,
+                                        staleness="inverse",
+                                        channel=chan, seed=3)),
+    }
+
+
+# -- golden bit-identity ------------------------------------------------------
+
+@pytest.mark.parametrize("het", ["iid", "dirichlet"])
+def test_make_problem_fingerprint_matches_pre_refactor(class_data, het):
+    prob = _golden_problem(class_data, het)
+    want = GOLDEN[het]["problem"]
+    assert list(prob.X.shape) == want["shape"]
+    assert _sha(prob.X) == want["X"]
+    assert _sha(prob.y) == want["y"]
+    assert _sha(prob.mask) == want["mask"]
+
+
+@pytest.mark.parametrize("het", ["iid", "dirichlet"])
+@pytest.mark.parametrize("run", [
+    "flens_nocomm", "flens_sync_identity", "flens_async_lockstep",
+    "flens_sync_rich", "fedavg_sync_ef", "fedavg_async_buf",
+])
+def test_dense_trajectory_matches_pre_refactor_golden(class_data, het, run):
+    prob = _golden_problem(class_data, het)
+    w0 = jnp.zeros(prob.dim, jnp.float64)
+    w_star = newton_solve(prob, w0, iters=30)
+    opt_name, kw, comm = _golden_runs(prob.m)[run]
+    h = run_rounds(make_optimizer(opt_name, **kw), prob, w0, w_star,
+                   rounds=4, comm=comm)
+    want = GOLDEN[het]["runs"][run]
+    assert [float(v) for v in h.loss] == want["loss"]
+    assert [float(v) for v in h.cumulative_bytes] == want["cumulative_bytes"]
+
+
+def test_dataset_population_wrapper_is_the_dense_constructor(class_data):
+    X, y = class_data
+    key = jax.random.PRNGKey(11)
+    dense = make_problem(X, y, m=8, lam=1e-3, objective=logistic,
+                         key=key, heterogeneity="dirichlet")
+    pop = DatasetPopulation(X, y, m=8, lam=1e-3, objective=logistic,
+                            key=key, heterogeneity="dirichlet")
+    full = pop.materialize_all()
+    assert _sha(dense.X) == _sha(full.X)
+    assert _sha(dense.y) == _sha(full.y)
+    assert _sha(dense.mask) == _sha(full.mask)
+    # cohort materialization gathers the same rows the dense problem holds
+    ids = np.array([6, 1, 3])
+    cohort = pop.materialize(ids)
+    for j, cid in enumerate(ids):
+        np.testing.assert_array_equal(np.asarray(cohort.X[j]),
+                                      np.asarray(dense.X[cid]))
+        np.testing.assert_array_equal(np.asarray(cohort.mask[j]),
+                                      np.asarray(dense.mask[cid]))
+
+
+# -- cohort determinism -------------------------------------------------------
+
+def test_synthetic_population_shards_deterministic_per_id():
+    a = SyntheticPopulation(m=32, dim=6, seed=9)
+    b = SyntheticPopulation(m=32, dim=6, seed=9)
+    ca = a.materialize(np.array([4, 17, 30]))
+    # a different cohort containing a shared id must produce the same
+    # shard for that id — client data depends on (seed, client_id) only
+    cb = b.materialize(np.array([17, 2]))
+    np.testing.assert_array_equal(np.asarray(ca.X[1]), np.asarray(cb.X[0]))
+    np.testing.assert_array_equal(np.asarray(ca.y[1]), np.asarray(cb.y[0]))
+    np.testing.assert_array_equal(np.asarray(ca.mask[1]),
+                                  np.asarray(cb.mask[0]))
+
+
+def test_scheduler_cohort_ids_deterministic_and_sorted():
+    cfg = CommConfig(scheduler="uniform:0.25", seed=5)
+    k = jax.random.fold_in(jax.random.PRNGKey(5), 3)
+    k_sched, _, _ = jax.random.split(k, 3)
+    ids1 = cfg.scheduler.sample_ids(k_sched, 3, 64, cfg.channel)
+    ids2 = cfg.scheduler.sample_ids(k_sched, 3, 64, cfg.channel)
+    np.testing.assert_array_equal(ids1, ids2)
+    assert list(ids1) == sorted(set(int(v) for v in ids1))
+    assert len(ids1) == cfg.scheduler.cohort_size(64) == 16
+    # participants() is the dense view of the same draw
+    mask = cfg.scheduler.participants(k_sched, 3, 64, cfg.channel)
+    np.testing.assert_array_equal(np.flatnonzero(mask), ids1)
+
+
+def test_channel_coins_independent_of_cohort_composition():
+    chan = ChannelModel(straggler_prob=0.4, dropout_prob=0.3)
+    key = jax.random.PRNGKey(21)
+    solo = chan.draw_for(key, np.array([5]))
+    crowd = chan.draw_for(key, np.array([1, 5, 9]))
+    assert bool(solo.straggler[0]) == bool(crowd.straggler[1])
+    assert bool(solo.dropout[0]) == bool(crowd.dropout[1])
+
+
+def test_population_runs_reproducible_and_cohorts_logged():
+    pop = SyntheticPopulation(m=64, dim=8, seed=3)
+    w0 = jnp.zeros(pop.dim, jnp.float64)
+    ev = pop.eval_problem()
+    w_star = newton_solve(ev, w0)
+    opt = make_optimizer("flens", k=4)
+    comm = dict(scheduler="uniform:0.25", seed=2)
+    h1 = run_rounds(opt, pop, w0, w_star, rounds=3,
+                    comm=CommConfig(**comm))
+    h2 = run_rounds(opt, pop, w0, w_star, rounds=3,
+                    comm=CommConfig(**comm))
+    np.testing.assert_array_equal(h1.loss, h2.loss)
+    for t1, t2 in zip(h1.traces, h2.traces):
+        np.testing.assert_array_equal(t1.ids, t2.ids)
+        np.testing.assert_array_equal(t1.delivered, t2.delivered)
+        assert t1.population == 64
+        assert len(t1.ids) == 16  # cohort-length arrays, never (m,)
+        assert len(t1.delivered) == 16
+
+
+def test_population_lockstep_bit_identical_across_drivers():
+    """Full scheduler + no dropout + full quorum: sync and async
+    population drivers share key schedule, cohorts, and jaxpr."""
+    pop = SyntheticPopulation(m=16, dim=6, seed=4)
+    w0 = jnp.zeros(pop.dim, jnp.float64)
+    ev = pop.eval_problem()
+    w_star = newton_solve(ev, w0)
+    opt = make_optimizer("flens", k=4)
+    hs = run_rounds(opt, pop, w0, w_star, rounds=3, comm=CommConfig())
+    ha = run_rounds(opt, pop, w0, w_star, rounds=3,
+                    comm=CommConfig(async_mode=True))
+    np.testing.assert_array_equal(hs.loss, ha.loss)
+
+
+def test_population_async_partial_matches_dense_prefix():
+    """Population and dense async drivers share the commit machinery;
+    the trajectories agree to reduction-order rounding while the flight
+    pools coincide (population rounds reduce over (c,)-cohorts, dense
+    rounds over the masked (m,) axis — same math, different summation
+    geometry, so equality is to ULPs rather than bits; bitwise identity
+    across drivers holds on the lockstep path, tested above)."""
+    pop = SyntheticPopulation(m=64, dim=8, seed=3)
+    dense = pop.materialize_all()
+    w0 = jnp.zeros(pop.dim, jnp.float64)
+    w_star = newton_solve(pop.eval_problem(), w0)
+    opt = make_optimizer("flens", k=4)
+    cfg = dict(scheduler="uniform:0.25", async_mode=True, buffer_size=4)
+    hd = run_rounds(opt, dense, w0, w_star, rounds=3, comm=CommConfig(**cfg))
+    hp = run_rounds(opt, pop, w0, w_star, rounds=3, comm=CommConfig(**cfg))
+    np.testing.assert_allclose(hd.loss, hp.loss, rtol=1e-12)
+    # the schedules themselves are identical: same delivered cohorts
+    # (population ids also list dispatch-only clients carrying broadcast
+    # bytes, so compare the delivered subset)
+    for td, tp in zip(hd.traces, hp.traces):
+        np.testing.assert_array_equal(np.flatnonzero(td.delivered),
+                                      tp.ids[tp.delivered])
+
+
+# -- guard rails --------------------------------------------------------------
+
+def test_population_requires_comm():
+    pop = SyntheticPopulation(m=8, dim=4)
+    w0 = jnp.zeros(4, jnp.float64)
+    with pytest.raises(ValueError, match="population-mode runs need"):
+        run_rounds(make_optimizer("fedavg"), pop, w0, w0, rounds=1)
+
+
+def test_fednew_rejected_in_population_mode():
+    pop = SyntheticPopulation(m=8, dim=4)
+    w0 = jnp.zeros(4, jnp.float64)
+    with pytest.raises(NotImplementedError, match="per_client_state"):
+        run_rounds(make_optimizer("fednew"), pop, w0, w0, rounds=1,
+                   comm=CommConfig(scheduler="uniform:0.5"))
+
+
+def test_dirichlet_pad_blowup_warns_and_caps(class_data):
+    X, y = class_data
+    key = jax.random.PRNGKey(11)  # known 472-row max vs 75-row mean
+    with pytest.warns(UserWarning, match="pad"):
+        dense = make_problem(X, y, m=8, lam=1e-3, objective=logistic,
+                             key=key, heterogeneity="dirichlet")
+    capped = make_problem(X, y, m=8, lam=1e-3, objective=logistic,
+                          key=key, heterogeneity="dirichlet",
+                          max_pad_factor=2.0)
+    assert capped.X.shape[1] <= 2 * int(np.ceil(600 / 8))
+    assert capped.X.shape[1] < dense.X.shape[1]
+    # every row still lands on exactly one client
+    assert int(np.asarray(capped.mask).sum()) == 600
+
+
+def test_channel_wrong_length_array_raises():
+    chan = ChannelModel(uplink_bytes_per_s=np.ones(5))
+    with pytest.raises(ValueError, match=r"shape \(5,\), want \(8,\)"):
+        chan.uplink_rates(8)
+    with pytest.raises(ValueError, match="compute_s"):
+        ChannelModel(compute_s=np.ones(3)).compute_times(8)
+    with pytest.raises(ValueError, match="latency_s"):
+        ChannelModel(latency_s=np.ones(3)).latencies(8)
+
+
+def test_channel_distribution_specs_deterministic():
+    chan = ChannelModel(uplink_bytes_per_s="loguniform:1e4,1e6",
+                        latency_s="uniform:0.01,0.1", attr_seed=7)
+    full = chan.uplink_rates(32)
+    sub = chan.uplink_rates_for(np.array([3, 19]), 32)
+    np.testing.assert_array_equal(sub, full[[3, 19]])
+    assert np.all(full >= 1e4) and np.all(full <= 1e6)
+    lat = chan.latencies(32)
+    assert np.all(lat >= 0.01) and np.all(lat <= 0.1)
+    # a different attr_seed is a different population
+    other = ChannelModel(uplink_bytes_per_s="loguniform:1e4,1e6",
+                         attr_seed=8).uplink_rates(32)
+    assert not np.array_equal(full, other)
+
+
+def test_channel_bad_spec_raises():
+    with pytest.raises(ValueError, match="distribution"):
+        ChannelModel(uplink_bytes_per_s="zipf:2").uplink_rates(4)
+
+
+# -- bounded EF memory --------------------------------------------------------
+
+def _spec(dim=4):
+    return {"g": jax.ShapeDtypeStruct((1, dim), jnp.float64)}
+
+
+def test_bounded_memory_roundtrip_and_reset():
+    store = BoundedMemory(_spec(), capacity=4)
+    ids = [7, 2, 9]
+    mem = store.gather(ids)
+    assert mem["g"].shape == (3, 4)
+    np.testing.assert_array_equal(np.asarray(mem["g"]), 0.0)
+    store.scatter(ids, {"g": jnp.arange(12, dtype=jnp.float64)
+                        .reshape(3, 4)})
+    back = store.gather([9, 7])
+    np.testing.assert_array_equal(np.asarray(back["g"][0]),
+                                  [8.0, 9.0, 10.0, 11.0])
+    np.testing.assert_array_equal(np.asarray(back["g"][1]),
+                                  [0.0, 1.0, 2.0, 3.0])
+
+
+def test_bounded_memory_lru_eviction_resets_cold_rows():
+    # scatter follows gather of the same ids — the driver invariant
+    store = BoundedMemory(_spec(), capacity=3)
+    store.gather([1, 2, 3])
+    store.scatter([1, 2, 3], {"g": jnp.ones((3, 4), jnp.float64)})
+    store.gather([1])  # refresh 1: now 2 is the LRU
+    store.gather([4])  # assigns a fresh slot, evicting 2
+    store.scatter([4], {"g": 2 * jnp.ones((1, 4), jnp.float64)})
+    assert store.evictions == 1
+    got = store.gather([2])  # cold row: on-sample reset to zero
+    np.testing.assert_array_equal(np.asarray(got["g"]), 0.0)
+    kept = store.gather([1])
+    np.testing.assert_array_equal(np.asarray(kept["g"]), 1.0)
+
+
+def test_bounded_memory_capacity_and_overflow():
+    store = BoundedMemory(_spec(), capacity=2)
+    assert store.nbytes == 2 * 4 * 8
+    with pytest.raises(ValueError, match="ef_capacity"):
+        store.gather([1, 2, 3])
+
+
+def test_bounded_memory_duplicate_ids_share_slot():
+    store = BoundedMemory(_spec(), capacity=4)
+    store.gather([5])
+    store.scatter([5], {"g": jnp.ones((1, 4), jnp.float64)})
+    got = store.gather([5, 5, 5])  # pad-style duplicates
+    np.testing.assert_array_equal(np.asarray(got["g"]),
+                                  np.ones((3, 4)))
+    assert store.evictions == 0
+
+
+def test_population_ef_footprint_bounded():
+    """EF memory scales with the hot set, not the population."""
+    from repro.obs import TelemetryConfig
+
+    pop = SyntheticPopulation(m=256, dim=6, seed=2)
+    w0 = jnp.zeros(pop.dim, jnp.float64)
+    w_star = newton_solve(pop.eval_problem(), w0)
+    h = run_rounds(make_optimizer("fedavg", lr=1.0, local_steps=2),
+                   pop, w0, w_star, rounds=3,
+                   comm=CommConfig(scheduler="uniform:0.125",
+                                   codecs="topk0.5", error_feedback=True),
+                   obs=TelemetryConfig())
+    gauges = h.telemetry["metrics"]["gauges"]
+    cohort, dim = 32, 6
+    assert gauges["ef_memory_bytes"] == 8 * cohort * dim * 8  # hot set
+    assert gauges["ef_memory_bytes"] < 256 * dim * 8 * 2  # << dense-ish
+    assert h.ef_residuals  # residuals survive the bounded store
+
+
+# -- population-scale smoke ---------------------------------------------------
+
+_SMOKE_100K = """
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from repro.core import SyntheticPopulation, make_optimizer, run_rounds, \
+    newton_solve
+from repro.comm import CommConfig
+
+pop = SyntheticPopulation(m=100_000, dim=16, seed=1)
+w0 = jnp.zeros(pop.dim, jnp.float64)
+w_star = newton_solve(pop.eval_problem(), w0)
+h = run_rounds(make_optimizer("flens", k=8), pop, w0, w_star, rounds=5,
+               comm=CommConfig(scheduler="uniform:0.001"))
+assert len(h.traces[0].ids) == 100, len(h.traces[0].ids)
+assert h.traces[0].population == 100_000
+assert h.loss[-1] < h.loss[0], list(h.loss)
+# VmHWM, not getrusage: ru_maxrss survives exec on Linux, so a child
+# forked from a fat pytest parent inherits the PARENT's high-water mark
+# (multi-GiB after the kernel/model tests); VmHWM lives on the mm and
+# is reset by exec, so it measures only this process
+hwm_kib = next(line for line in open("/proc/self/status")
+               if line.startswith("VmHWM")).split()[1]
+rss_mib = int(hwm_kib) / 1024
+# dense materialization would need X (100_000 * 64 * 16 * 8 B ~ 820 MiB)
+# plus y/mask/row storage — well over 1.5 GiB on top of the ~300 MiB
+# interpreter+XLA baseline. Measured population-mode peak: ~360 MiB;
+# the budget separates that from any (m, n_shard, M) materialization
+# with compile-cache headroom.
+assert rss_mib < 700, f"peak RSS {rss_mib:.0f} MiB exceeds budget"
+print(f"OK loss={h.loss[-1]:.5f} rss={rss_mib:.0f}MiB")
+"""
+
+
+@pytest.mark.slow
+def test_population_100k_memory_bounded():
+    """m=100k, q=1e-3: runs in bounded memory (subprocess-isolated so
+    the RSS high-water mark is this run's, not the test session's)."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _SMOKE_100K], capture_output=True, text=True,
+        timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.startswith("OK"), proc.stdout
