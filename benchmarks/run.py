@@ -561,7 +561,53 @@ def bench_round_time(full: bool) -> None:
 # ---------------------------------------------------------------------------
 
 def bench_kernels(full: bool) -> None:
+    from repro.kernels import ops as kops
     from repro.kernels import ref
+
+    # Fused SRHT dispatch (sign-flip -> FWHT -> row-subsample) on the
+    # active backend: `kernels/srht_*` rows track the sketch hot loop
+    # end-to-end through repro.kernels.ops — the exact code path
+    # Sketch.apply runs inside every sketched optimizer. On CPU the
+    # resolver picks the reference path; on TPU the same rows time the
+    # fused Pallas kernel, so speedups land in this CSV unchanged.
+    impl = kops.resolve_impl()
+    for n in (1024, 4096):
+        k = n // 16
+        key = jax.random.PRNGKey(0)
+        signs = jax.random.rademacher(key, (n,), jnp.float32)
+        rows_idx = jax.random.choice(jax.random.PRNGKey(1), n, (k,),
+                                     replace=False)
+        x = jax.random.normal(jax.random.PRNGKey(2), (64, n), jnp.float32)
+        y = jax.random.normal(jax.random.PRNGKey(3), (64, k), jnp.float32)
+        fwd = jax.jit(lambda x: kops.srht_apply(x, signs, rows_idx))
+        bwd = jax.jit(lambda y: kops.srht_apply_t(y, signs, rows_idx, n))
+        for tag, fn, arg in (("fwd", fwd, x), ("t", bwd, y)):
+            fn(arg).block_until_ready()
+            t0 = time.perf_counter()
+            iters = 20
+            for _ in range(iters):
+                fn(arg).block_until_ready()
+            dt = (time.perf_counter() - t0) / iters
+            _csv(f"kernels/srht_{tag}_{impl}_n{n}", dt * 1e6,
+                 f"k={k};rows=64")
+
+    # Fused codec inner loops (the transport hot path) through the same
+    # dispatch: top-k select+pack and qint8 quantize->dequantize
+    size = 4096 * 16
+    x = jax.random.normal(jax.random.PRNGKey(4), (size,), jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(5), (size,), jnp.float32)
+    kept = size // 20
+    codec_fns = (
+        (f"topk_{impl}", jax.jit(lambda x: kops.topk_mask(x, kept)), (x,)),
+        (f"qint8_{impl}", jax.jit(kops.qint8_roundtrip), (x, u)),
+    )
+    for tag, fn, args_ in codec_fns:
+        fn(*args_).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            fn(*args_).block_until_ready()
+        dt = (time.perf_counter() - t0) / 20
+        _csv(f"kernels/{tag}_n{size}", dt * 1e6, f"kept={kept}")
 
     # FWHT: the SRHT hot loop
     for n in (1024, 4096):

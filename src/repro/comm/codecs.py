@@ -28,6 +28,8 @@ import re
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
+
 _INT32_BYTES = 4  # index width for sparse formats
 _SCALE_BYTES = 4  # one fp32 scale per quantized tensor
 
@@ -103,13 +105,11 @@ class QInt8Codec(Codec):
     deterministic = False
 
     def roundtrip(self, key, x):
-        # clamp AFTER the /127: tiny/127 is subnormal and XLA flushes it
-        # to zero on CPU, turning an all-zero payload into 0/0 = NaN
-        scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0,
-                            jnp.finfo(x.dtype).tiny)
+        # the PRNG draw stays here (identical random bits for every
+        # kernel impl); the fused quantize body dispatches through
+        # repro.kernels.ops (ref on CPU, Pallas on TPU)
         u = jax.random.uniform(key, x.shape, x.dtype)
-        q = jnp.clip(jnp.floor(x / scale + u), -127, 127)
-        return (q * scale).astype(x.dtype)
+        return kops.qint8_roundtrip(x, u)
 
     def nbytes(self, shape, dtype):
         return _size(shape) * 1 + _SCALE_BYTES
@@ -154,10 +154,10 @@ class TopKCodec(Codec):
         return max(1, min(n, int(math.ceil(float(self.fraction) * n))))
 
     def roundtrip(self, key, x):
-        flat = x.reshape(-1)
-        kept = self._kept(flat.shape[0])
-        _, idx = jax.lax.top_k(jnp.abs(flat), kept)  # exactly `kept` entries
-        sparse = jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(x.shape)
+        kept = self._kept(math.prod(x.shape) if x.shape else 1)
+        # fused select+pack body via repro.kernels.ops (exactly `kept`
+        # entries survive; ties resolved as jax.lax.top_k)
+        sparse = kops.topk_mask(x, kept)
         return self.inner.roundtrip(key, sparse)
 
     def nbytes(self, shape, dtype):

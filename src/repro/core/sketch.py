@@ -9,11 +9,17 @@ The SRHT is ``S = sqrt(dim/k) * P * H_n * D`` restricted to the first
 diagonal Rademacher sign matrix, ``H_n`` the orthonormal Hadamard
 transform and ``P`` a uniform row sampler without replacement. Its
 application cost is O(n log n) per vector via the fast Walsh-Hadamard
-transform — the compute hot spot accelerated by the Pallas kernel in
-``repro.kernels.fwht``.
+transform — the compute hot spot served by ``repro.kernels.ops``:
+``SrhtSketch`` routes through the ``srht_apply``/``srht_apply_t`` ops,
+so the fused Pallas kernel (``repro.kernels.srht``), its interpreted
+body, and the pure-jnp reference are selectable per call / via config /
+via ``REPRO_KERNEL_IMPL`` without touching optimizer code.
 
-All sketches are represented as small parameter pytrees plus pure apply
-functions, so they can live inside jitted/vmapped federated rounds.
+Each sketch kind is its own operator class behind one
+``apply``/``apply_t``/``dense`` protocol (the ``Sketch`` base); all are
+small registered-dataclass pytrees plus pure apply methods, so they can
+live inside jitted/vmapped federated rounds. ``make_sketch`` remains the
+single sampling entry point.
 """
 from __future__ import annotations
 
@@ -35,51 +41,94 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
 class Sketch:
-    """A sampled sketch operator (one realization of S)."""
+    """Protocol base for a sampled sketch operator (one realization of S).
 
-    kind: str = dataclasses.field(metadata={"static": True})
-    k: int = dataclasses.field(metadata={"static": True})
-    dim: int = dataclasses.field(metadata={"static": True})
-    # srht: signs (n,), rows (k,) ; gaussian: mat (k, dim);
-    # sjlt: rows (s, dim) int32, signs (s, dim)
-    signs: jax.Array | None
-    rows: jax.Array | None
-    mat: jax.Array | None
+    Subclasses are frozen dataclass pytrees with static ``k``/``dim``
+    and a class-level ``kind`` tag; they implement ``apply``/``apply_t``
+    and expose ``op_dtype`` (the dtype the operator was drawn in).
+    """
+
+    kind: str = "?"
+    k: int
+    dim: int
 
     # -- application ------------------------------------------------------
-    def apply(self, x: jax.Array) -> jax.Array:
+    def apply(self, x: jax.Array, *, impl: str | None = None) -> jax.Array:
         """S @ x for x of shape (..., dim) -> (..., k)."""
-        if self.kind == "gaussian":
-            return x @ self.mat.T
-        if self.kind == "sjlt":
-            return x @ self.mat.T  # materialized sparse-as-dense (small dims)
-        # SRHT
-        n = self.signs.shape[-1]
-        pad = n - self.dim
-        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
-        xp = xp * self.signs
-        h = kops.fwht(xp, normalize=True)
-        scale = jnp.sqrt(jnp.asarray(n / self.k, h.dtype))
-        return jnp.take(h, self.rows, axis=-1) * scale
+        raise NotImplementedError
 
-    def apply_t(self, y: jax.Array) -> jax.Array:
+    def apply_t(self, y: jax.Array, *, impl: str | None = None) -> jax.Array:
         """S^T @ y for y of shape (..., k) -> (..., dim)."""
-        if self.kind in ("gaussian", "sjlt"):
-            return y @ self.mat
-        n = self.signs.shape[-1]
-        scale = jnp.sqrt(jnp.asarray(n / self.k, y.dtype))
-        z = jnp.zeros(y.shape[:-1] + (n,), y.dtype)
-        z = z.at[..., self.rows].set(y * scale)
-        h = kops.fwht(z, normalize=True)
-        h = h * self.signs
-        return h[..., : self.dim]
+        raise NotImplementedError
+
+    @property
+    def op_dtype(self):
+        """The dtype the operator's parameters were drawn in."""
+        raise NotImplementedError
 
     def dense(self) -> jax.Array:
-        """Materialize S as a (k, dim) matrix (tests / tiny dims)."""
-        return self.apply(jnp.eye(self.dim)).T
+        """Materialize S as a (k, dim) matrix in the operator's own
+        dtype (tests / tiny dims)."""
+        return self.apply(jnp.eye(self.dim, dtype=self.op_dtype)).T
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SrhtSketch(Sketch):
+    """Subsampled randomized Hadamard transform: signs (n,), rows (k,)."""
+
+    k: int = dataclasses.field(metadata={"static": True})
+    dim: int = dataclasses.field(metadata={"static": True})
+    signs: jax.Array
+    rows: jax.Array
+
+    kind = "srht"
+
+    def apply(self, x, *, impl=None):
+        return kops.srht_apply(x, self.signs, self.rows, impl=impl)
+
+    def apply_t(self, y, *, impl=None):
+        return kops.srht_apply_t(y, self.signs, self.rows, self.dim,
+                                 impl=impl)
+
+    @property
+    def op_dtype(self):
+        return self.signs.dtype
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseSketch(Sketch):
+    """A sketch materialized as its (k, dim) matrix (small-dim kinds)."""
+
+    k: int = dataclasses.field(metadata={"static": True})
+    dim: int = dataclasses.field(metadata={"static": True})
+    mat: jax.Array
+
+    def apply(self, x, *, impl=None):
+        return x @ self.mat.T
+
+    def apply_t(self, y, *, impl=None):
+        return y @ self.mat
+
+    @property
+    def op_dtype(self):
+        return self.mat.dtype
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GaussianSketch(DenseSketch):
+    kind = "gaussian"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SjltSketch(DenseSketch):
+    """Sparse JL transform, materialized dense for the convex dims."""
+
+    kind = "sjlt"
 
 
 def make_sketch(key: jax.Array, kind: SketchKind, k: int, dim: int,
@@ -90,12 +139,12 @@ def make_sketch(key: jax.Array, kind: SketchKind, k: int, dim: int,
         ks, kr = jax.random.split(key)
         signs = jax.random.rademacher(ks, (n,), dtype=dtype)
         rows = jax.random.choice(kr, n, (k,), replace=False)
-        return Sketch(kind, k, dim, signs, rows, None)
+        return SrhtSketch(k, dim, signs, rows)
     if kind == "gaussian":
         mat = jax.random.normal(key, (k, dim), dtype) / jnp.sqrt(
             jnp.asarray(k, dtype)
         )
-        return Sketch(kind, k, dim, None, None, mat)
+        return GaussianSketch(k, dim, mat)
     if kind == "sjlt":
         # s nonzeros per column, value ±1/sqrt(s); materialized dense for
         # the small dims of the convex experiments.
@@ -108,7 +157,7 @@ def make_sketch(key: jax.Array, kind: SketchKind, k: int, dim: int,
         mat = mat.at[rows.reshape(-1), cols.reshape(-1)].add(
             signs.reshape(-1) / jnp.sqrt(jnp.asarray(s, dtype))
         )
-        return Sketch(kind, k, dim, None, None, mat)
+        return SjltSketch(k, dim, mat)
     raise ValueError(f"unknown sketch kind {kind!r}")
 
 

@@ -50,6 +50,76 @@ def hadamard_matrix(n: int, dtype=jnp.float32) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# SRHT: sign-flip -> FWHT -> row-subsample (and its transpose)
+# ---------------------------------------------------------------------------
+#
+# These are the unfused reference paths for the fused Pallas kernels in
+# ``repro.kernels.srht``. The primitive sequence here is EXACTLY the one
+# the pre-kernel ``Sketch.apply``/``apply_t`` traced (pad -> multiply ->
+# fwht -> take / scatter -> fwht -> multiply -> slice), so routing the
+# sketch through ``repro.kernels.ops`` with ``impl="ref"`` keeps every
+# golden trajectory bit-identical.
+
+def srht_apply(x: jax.Array, signs: jax.Array, rows: jax.Array) -> jax.Array:
+    """sqrt(n/k) * P * H_n * D restricted to the first dim coordinates.
+
+    x (..., dim) -> (..., k) with n = signs.shape[-1] (a power of two,
+    >= dim) and k = rows.shape[-1].
+    """
+    n = signs.shape[-1]
+    k = rows.shape[-1]
+    pad = n - x.shape[-1]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+    xp = xp * signs
+    h = fwht(xp, normalize=True)
+    scale = jnp.sqrt(jnp.asarray(n / k, h.dtype))
+    return jnp.take(h, rows, axis=-1) * scale
+
+
+def srht_apply_t(y: jax.Array, signs: jax.Array, rows: jax.Array,
+                 dim: int) -> jax.Array:
+    """Transpose SRHT: y (..., k) -> (..., dim). The scatter writes the
+    scaled k entries into the padded domain, the inverse ordering of
+    ``srht_apply``."""
+    n = signs.shape[-1]
+    k = rows.shape[-1]
+    scale = jnp.sqrt(jnp.asarray(n / k, y.dtype))
+    z = jnp.zeros(y.shape[:-1] + (n,), y.dtype)
+    z = z.at[..., rows].set(y * scale)
+    h = fwht(z, normalize=True)
+    h = h * signs
+    return h[..., :dim]
+
+
+# ---------------------------------------------------------------------------
+# Transport codec inner loops (the comm hot path)
+# ---------------------------------------------------------------------------
+#
+# Oracles for ``repro.kernels.codec_kernels``; the op order matches the
+# pre-kernel ``repro.comm.codecs`` bodies bit-for-bit.
+
+def topk_mask(x: jax.Array, kept: int) -> jax.Array:
+    """Magnitude top-k selection as a dense mask: all but the ``kept``
+    largest-|.| entries (ties broken by lowest flat index, as
+    ``jax.lax.top_k``) are zeroed. Same shape/dtype as ``x``."""
+    flat = x.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), kept)
+    return jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(x.shape)
+
+
+def qint8_roundtrip(x: jax.Array, u: jax.Array) -> jax.Array:
+    """Per-tensor symmetric int8 quantize -> dequantize with stochastic
+    rounding noise ``u ~ U[0,1)`` supplied by the caller (so every impl
+    consumes identical random bits). scale = max|x|/127, clamped away
+    from the subnormal range (XLA flushes subnormals to zero on CPU,
+    which would turn an all-zero payload into 0/0 = NaN)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0,
+                        jnp.finfo(x.dtype).tiny)
+    q = jnp.clip(jnp.floor(x / scale + u), -127, 127)
+    return (q * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (blocked online-softmax) oracle
 # ---------------------------------------------------------------------------
 

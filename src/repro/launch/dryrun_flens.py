@@ -50,35 +50,26 @@ def build_round(method: str, dim: int, k: int, n_per_client: int, lam: float):
         s = jax.nn.sigmoid(-margins)
         return -(X.T @ (s * y)) / X.shape[0] + lam * w
 
-    def srht_apply(x, signs, rows):
-        # x (..., dim) -> (..., k); dim assumed a power of two here
-        from repro.kernels import ref
-
-        h = ref.fwht(x * signs, normalize=True)
-        scale = jnp.sqrt(jnp.asarray(dim / k, x.dtype))
-        return jnp.take(h, rows, axis=-1) * scale
-
-    def srht_apply_t(y_, signs, rows):
-        from repro.kernels import ref
-
-        scale = jnp.sqrt(jnp.asarray(dim / k, y_.dtype))
-        z = jnp.zeros(y_.shape[:-1] + (dim,), y_.dtype)
-        z = z.at[..., rows].set(y_ * scale)
-        return ref.fwht(z, normalize=True) * signs
-
     def flens_round(X, y, w, signs, rows):
         # per-client (= per data shard) quantities; mean over the client
-        # axis IS the server aggregation (psum emitted by pjit)
+        # axis IS the server aggregation (psum emitted by pjit).
+        # The SRHT is the shared repro.core.sketch operator (dim a power
+        # of two here, so the padded domain is the native one): the
+        # roofline dry-run lowers the SAME srht_apply/srht_apply_t code
+        # path — repro.kernels.ops dispatch included — that the bench
+        # gate times, instead of a private inline copy.
+        from repro.core.sketch import SrhtSketch
+
+        s = SrhtSketch(k=k, dim=dim, signs=signs, rows=rows)
         a = hess_sqrt(X, y, w)  # (n, dim)
-        b = srht_apply(a, signs, rows)  # (n, k)
+        b = s.apply(a)  # (n, k)
         h_sk = b.T @ b  # (k, k)  <- k^2 floats on the wire
-        g_sk = srht_apply(grad(X, y, w), signs, rows)  # (k,)
+        g_sk = s.apply(grad(X, y, w))  # (k,)
         h_sk = jax.lax.pmean(h_sk, ("pod", "data"))
         g_sk = jax.lax.pmean(g_sk, ("pod", "data"))
-        sst = srht_apply(srht_apply_t(jnp.eye(k, dtype=w.dtype), signs, rows),
-                         signs, rows)
+        sst = s.apply(s.apply_t(jnp.eye(k, dtype=w.dtype)))
         delta_k = jnp.linalg.solve(h_sk + lam * sst + 1e-8 * jnp.eye(k), g_sk)
-        return w - srht_apply_t(delta_k, signs, rows)
+        return w - s.apply_t(delta_k)
 
     return flens_round
 

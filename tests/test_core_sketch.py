@@ -94,6 +94,59 @@ def test_effective_dimension():
     assert abs(float(effective_dimension(h, lam)) - expect) < 1e-9
 
 
+@pytest.mark.parametrize("kind", ["srht", "gaussian", "sjlt"])
+@pytest.mark.parametrize("dtype", ["float16", "bfloat16", "float32",
+                                   "float64"])
+def test_dense_dtype_matches_operator(kind, dtype):
+    """Regression: ``dense()`` used to materialize ``jnp.eye(dim)`` in
+    the DEFAULT dtype regardless of the operator's own dtype, so an
+    fp16/bf16 sketch densified (and silently promoted every downstream
+    comparison) in fp64 under x64. The identity must be built in the
+    operator's dtype."""
+    dt = jnp.dtype(dtype)
+    s = make_sketch(jax.random.PRNGKey(0), kind, 8, 24, dtype=dt)
+    mat = s.dense()
+    assert mat.dtype == dt
+    assert mat.shape == (8, 24)
+    # and it still IS the operator: apply agrees with the materialization
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 24), dt)
+    tol = 1e-10 if dtype == "float64" else (1e-5 if dtype == "float32"
+                                            else 5e-2)
+    np.testing.assert_allclose(np.asarray(s.apply(x), np.float64),
+                               np.asarray(x, np.float64)
+                               @ np.asarray(mat, np.float64).T,
+                               rtol=tol, atol=tol * 24)
+
+
+def test_per_kind_operator_protocol():
+    """The union-of-nullable-fields dataclass is gone: each kind is its
+    own operator class behind one apply/apply_t/dense protocol, and the
+    kind tag / parameter fields survive for callers that introspect."""
+    from repro.core.sketch import (
+        GaussianSketch,
+        SjltSketch,
+        Sketch,
+        SrhtSketch,
+    )
+
+    expect = {"srht": SrhtSketch, "gaussian": GaussianSketch,
+              "sjlt": SjltSketch}
+    for kind, cls in expect.items():
+        s = make_sketch(jax.random.PRNGKey(0), kind, 8, 24)
+        assert type(s) is cls and isinstance(s, Sketch)
+        assert s.kind == kind and s.k == 8 and s.dim == 24
+    srht = make_sketch(jax.random.PRNGKey(0), "srht", 8, 24)
+    assert srht.signs.shape == (32,) and srht.rows.shape == (8,)
+    # operators stay jit/pytree-compatible (they ride inside rounds)
+    leaves, treedef = jax.tree_util.tree_flatten(srht)
+    assert len(leaves) == 2
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 24))
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(lambda s_, x_: s_.apply(x_))(rebuilt, x)),
+        np.asarray(srht.apply(x)))
+
+
 # ---------------------------------------------------------------------------
 # operator invariants (property tests across dims / dtypes)
 # ---------------------------------------------------------------------------
