@@ -272,10 +272,14 @@ def update_baseline(baseline: pathlib.Path) -> pathlib.Path:
     caller's CWD first."""
     baseline = baseline.resolve()
     _chdir_root()
-    from benchmarks.run import RESULTS, bench_comm
+    from benchmarks.run import RESULTS, bench_comm, bench_robust
 
     RESULTS.mkdir(exist_ok=True)
     bench_comm(full=False)
+    # the Byzantine-robustness records ride the same baseline: bench_robust
+    # merges its seeded variants (and the >=2x recovery gate numbers) into
+    # results/comm.json before it is installed
+    bench_robust(full=False)
     fresh = (RESULTS / "comm.json").resolve()
     shutil.copyfile(fresh, baseline)
     return fresh

@@ -370,6 +370,134 @@ def bench_comm(full: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Robust: Byzantine sign-flip coalition, with/without trimmed-mean defense
+# ---------------------------------------------------------------------------
+
+def bench_robust(full: bool) -> None:
+    """FLeNS vs FedAvg under a seeded 10% sign-flip coalition
+    (``DynamicsConfig(threat="signflip:0.1")``), with and without the
+    ``trimmed:0.1`` coordinate-wise trimmed mean, on the heterogeneous
+    edge channel. Loss-vs-bytes is the axis that matters: the attack
+    and the defense never change wire formats, so every variant of one
+    optimizer transmits EXACTLY the same bytes and the entire loss
+    difference is the coalition vs the aggregator.
+
+    Gates (seeded, deterministic):
+
+      * **fedavg** — the coalition flips the O(M) model uplink, a real
+        attack; the trimmed mean must recover at least 2x of the
+        final-loss gap it opens (``gap(attacked) >= 2 * gap(defended)``).
+      * **flens** — sign-flipping BOTH sketch payloads (``h_sk`` and
+        ``sg``) rescales the Hessian estimate and the gradient estimate
+        by the same factor, and the Newton step ``H^-1 g``
+        self-normalizes: the attack must open a SMALLER gap than it
+        does on fedavg, and the defended run must stay within a small
+        absolute band of clean (the trimmed mean's own bias bound).
+
+    The records merge into ``results/comm.json`` so
+    ``benchmarks/compare.py`` (and ``--update``) gates their bytes
+    exactly and losses at rtol alongside the other comm variants.
+    """
+    from benchmarks.paper_common import build_problem, straggler_edge_channel
+    from repro.comm import CommConfig, summarize
+    from repro.core import make_optimizer, run_rounds
+    from repro.dynamics import DynamicsConfig
+
+    spec, prob, w0, w_star = build_problem("phishing",
+                                           n_cap=None if full else 20000)
+    rounds = 20 if full else 10
+    k = spec.sketch_k
+    channel = straggler_edge_channel(prob.m)
+    threat, robust = "signflip:0.1", "trimmed:0.1"
+
+    def comm(threat_spec=None, robust_spec=None):
+        dyn = None
+        if threat_spec or robust_spec:
+            dyn = DynamicsConfig(threat=threat_spec, robust=robust_spec,
+                                 seed=1)
+        return CommConfig(channel=channel, seed=1, dynamics=dyn)
+
+    lineup = [("flens", dict(k=k)),
+              ("fedavg", dict(lr=2.0, local_steps=5))]
+    arms = [("clean", None, None),
+            ("attacked", threat, None),
+            ("trimmed", threat, robust)]
+    out = {"dataset": spec.name, "rounds": rounds, "m": prob.m, "k": k,
+           "threat": threat, "robust": robust, "variants": {}}
+    finals: dict = {}
+    for opt_name, opt_kw in lineup:
+        bytes_by_arm = {}
+        for arm, t_spec, r_spec in arms:
+            name = f"robust_{opt_name}_{arm}"
+            hist = run_rounds(make_optimizer(opt_name, **opt_kw), prob, w0,
+                              w_star, rounds=rounds,
+                              comm=comm(t_spec, r_spec))
+            finals[name] = float(hist.loss[-1])
+            bytes_by_arm[arm] = hist.cumulative_bytes.tolist()
+            out["variants"][name] = {
+                "loss": hist.loss.tolist(),
+                "loss_final": float(hist.loss[-1]),
+                "cumulative_bytes": bytes_by_arm[arm],
+                "stats": summarize(hist.traces),
+            }
+            _csv(f"robust/{name}", hist.wall_time_s / rounds * 1e6,
+                 f"loss_final={hist.loss[-1]:.6f};"
+                 f"total_MB={hist.cumulative_bytes[-1] / 1e6:.3f}")
+        assert (bytes_by_arm["clean"] == bytes_by_arm["attacked"]
+                == bytes_by_arm["trimmed"]), (
+            f"{opt_name}: threat/robust changed the byte accounting — "
+            "corruption and aggregation must never touch wire formats")
+        gap_att = finals[f"robust_{opt_name}_attacked"] - finals[
+            f"robust_{opt_name}_clean"]
+        gap_def = finals[f"robust_{opt_name}_trimmed"] - finals[
+            f"robust_{opt_name}_clean"]
+        recovery = gap_att / max(gap_def, 1e-30)
+        out.setdefault("robust_gate", {})[opt_name] = {
+            "gap_attacked": gap_att,
+            "gap_defended": gap_def,
+            "recovery": recovery,
+        }
+        _csv(f"robust/{opt_name}_gate", 0.0,
+             f"gap_attacked={gap_att:.3e};gap_defended={gap_def:.3e};"
+             f"recovery={recovery:.1f}x")
+        assert gap_att > 0, (
+            f"{opt_name}: the sign-flip coalition did not hurt — the "
+            "threat is not reaching the uplink")
+
+    gates = out["robust_gate"]
+    rec = gates["fedavg"]["recovery"]
+    assert rec >= 2.0, (
+        f"fedavg: trimmed mean recovered only {rec:.2f}x of the attack's "
+        f"loss gap ({gates['fedavg']}); gate needs >= 2x")
+    # the comparison headline: the Newton step self-normalizes, so the
+    # same coalition hurts flens strictly less than fedavg — and the
+    # trimmed mean's own bias stays within a small absolute band
+    assert gates["flens"]["gap_attacked"] < gates["fedavg"]["gap_attacked"], (
+        f"flens should be naturally MORE robust to proportional "
+        f"sign-flips than fedavg: {gates}")
+    assert abs(gates["flens"]["gap_defended"]) < 1e-2, (
+        f"flens trimmed-mean bias left the clean band: {gates['flens']}")
+    _csv("robust/gate", 0.0,
+         f"fedavg_recovery={rec:.1f}x;"
+         f"flens_self_normalizes="
+         f"{bool(gates['flens']['gap_attacked'] < gates['fedavg']['gap_attacked'])}")
+
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "robust.json").write_text(json.dumps(out, indent=1))
+    # ride the comm regression gate: merge the seeded records into
+    # results/comm.json so compare.py (and --update) pins their bytes
+    # exactly and losses at rtol like every other comm variant
+    comm_path = RESULTS / "comm.json"
+    if comm_path.exists():
+        doc = json.loads(comm_path.read_text())
+        doc["variants"].update(out["variants"])
+        doc["robust_gate"] = out["robust_gate"]
+        comm_path.write_text(json.dumps(doc, indent=1))
+        _csv("robust/merged_into_comm_record", 0.0,
+             f"variants={len(out['variants'])}")
+
+
+# ---------------------------------------------------------------------------
 # Async: loss vs simulated time, synchronous vs event-driven driver
 # ---------------------------------------------------------------------------
 
@@ -710,6 +838,7 @@ BENCHES = {
     "fig3": bench_fig3_time_vs_sketch,
     "table1": bench_table1_communication,
     "comm": bench_comm,
+    "robust": bench_robust,
     "async": bench_async,
     "round_time": bench_round_time,
     "sketch_types": bench_sketch_types,

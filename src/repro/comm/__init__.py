@@ -21,6 +21,11 @@ slowest delivering client), or ``AsyncSession``
 quorum commits, staleness-weighted aggregation, and a FedBuff-style
 ``server_lr``, see ``repro.comm.async_driver``).
 
+Scenario dynamics (client churn, time-varying channels, Byzantine
+threats + robust aggregation) thread through
+``CommConfig(dynamics=repro.dynamics.DynamicsConfig(...))`` and default
+entirely off — see ``repro.dynamics``.
+
 Entry point: build a :class:`CommConfig` and pass it to
 ``repro.core.run_rounds(..., comm=cfg)``. See ``examples/edge_clients.py``
 and ``examples/async_edge.py``.
@@ -46,6 +51,7 @@ from repro.comm.config import (
     CommRound,
     CommSession,
     PopulationCommSession,
+    apply_churn,
 )
 from repro.comm.feedback import (
     BoundedMemory,
@@ -96,6 +102,7 @@ __all__ = [
     "TopKCodec",
     "Transport",
     "UniformSampler",
+    "apply_churn",
     "compensate",
     "cumulative_bytes",
     "cumulative_bytes_down",

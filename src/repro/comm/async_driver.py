@@ -162,10 +162,18 @@ class AsyncSession:
         # lock-step-equivalent: full scheduler, no dropout, full quorum.
         # Every commit then aggregates exactly the fresh full cohort, so
         # the round runs with mask=None — the identical jaxpr (and key
-        # schedule) the sync driver uses, hence bit-identical.
+        # schedule) the sync driver uses, hence bit-identical. Churn and
+        # correlated outages (dynamics.forces_mask) break the static
+        # full-cohort guarantee, so they force the masked path.
+        dyn = config.dynamics
         self.lockstep = (config.scheduler.is_full
                          and config.channel.dropout_prob == 0.0
-                         and self.quorum == m)
+                         and self.quorum == m
+                         and (dyn is None or not dyn.forces_mask))
+        # dynamics bookkeeping (inert when dynamics is None)
+        self._elig_prev = None
+        self._attacker_arr = None
+        self.robust_stats: Dict[str, float] = {}
 
         self.version = 0
         self.server_clock = 0.0
@@ -259,29 +267,92 @@ class AsyncSession:
     def _dispatch_cohort(self, clients, now: float) -> None:
         """Send the current model to ``clients`` that the scheduler picks
         this version; the rest idle until the next commit."""
+        from repro.comm.config import apply_churn
+
         clients = list(clients)
         if not clients:
             return
         k_sched, k_chan, _ = self._round_keys(self.version)
+        eligible = apply_churn(self, self.version)
+        chan = self.config.channel_at(self.version)
         scheduled = self.config.scheduler.participants(
-            k_sched, self.version, self.m, self.config.channel)
+            k_sched, self.version, self.m, chan, eligible=eligible)
         cohort = [j for j in clients if scheduled[j]]
         if not cohort and not self._heap and not self._buffer:
-            cohort = clients  # nothing else in flight: avoid a stall
+            # nothing else in flight: avoid a stall (alive clients only;
+            # a fully-departed landed set falls back to everyone — the
+            # empty-eligibility warning in apply_churn covers that case)
+            cohort = [j for j in clients if self._alive(j)] or clients
         self._idle.update(j for j in clients if j not in cohort)
-        draw = self.config.channel.draw(k_chan, self.m)
+        draw = chan.draw(k_chan, self.m)
         times = self._flight_times(draw)
         for j in cohort:
             self._idle.discard(j)
             self._launch(j, now, times[j], bool(draw.straggler[j]),
                          bool(draw.dropout[j]), retry=0)
 
+    def _alive(self, j: int) -> bool:
+        """Is client ``j`` churn-eligible as of the last dispatch?"""
+        return self._elig_prev is None or bool(self._elig_prev[j])
+
+    def _retire_ef(self, departed: np.ndarray) -> None:
+        """Zero newly-departed clients' EF memory rows (dense layout)."""
+        if self.ef_memory:
+            z = jnp.asarray(departed)
+            self.ef_memory = {k: v.at[z].set(0)
+                              for k, v in self.ef_memory.items()}
+
+    def _retire_flight(self, flight: _Flight, now: float) -> None:
+        """A departed client's upload landed: it is retired, never
+        buffered — the client leaves the simulation until it returns."""
+        self._pending_dropped[flight.client] = True
+        self._idle.add(flight.client)
+
+    def _consume_stats(self, stats: Dict[str, Any]) -> None:
+        """Drain a group round's traced robust-aggregation counters."""
+        for stat_name, val in stats.items():
+            v = float(val)
+            self.robust_stats[stat_name] = \
+                self.robust_stats.get(stat_name, 0.0) + v
+            self.obs.metrics.counter(stat_name).inc(v)
+
+    def _pack_threat(self, mask, ids=None):
+        """Bundle the attacker indicator next to the delivery mask when
+        a threat is active (matches ``CommSession._pack_threat``)."""
+        dyn = self.config.dynamics
+        if dyn is None or dyn.threat is None:
+            return mask
+        if ids is None:
+            if self._attacker_arr is None:
+                self._attacker_arr = jnp.asarray(
+                    dyn.threat.attacker_mask(np.arange(self.m)),
+                    dtype=self._mask_dtype)
+            return (mask, self._attacker_arr)
+        return (mask, jnp.asarray(dyn.threat.attacker_mask(ids),
+                                  dtype=self._mask_dtype))
+
+    def _count_corrupted(self, delivered: np.ndarray,
+                         ids: "np.ndarray | None") -> None:
+        """Host-side tally of corrupted uploads the server consumed."""
+        dyn = self.config.dynamics
+        if dyn is None or dyn.threat is None:
+            return
+        att = dyn.threat.attacker_mask(
+            np.arange(self.m) if ids is None else ids)
+        n_bad = float((att & delivered).sum())
+        self.robust_stats["uploads_corrupted"] = \
+            self.robust_stats.get("uploads_corrupted", 0.0) + n_bad
+        self.obs.metrics.counter("uploads_corrupted").inc(n_bad)
+
     def _redispatch(self, j: int, now: float, retry: int) -> None:
         """A dropped upload landed: the client re-fetches the current
         model and retries with fresh (deterministic) channel coins."""
+        if not self._alive(j):
+            self._idle.add(j)  # departed mid-flight: no retry
+            return
         _, k_chan, _ = self._round_keys(self.version)
-        draw = self.config.channel.draw(
-            jax.random.fold_in(k_chan, retry), self.m)
+        chan = self.config.channel_at(self.version)
+        draw = chan.draw(jax.random.fold_in(k_chan, retry), self.m)
         dropped = bool(draw.dropout[j]) and retry < MAX_RETRIES
         times = self._flight_times(draw)
         self._launch(j, now, times[j], bool(draw.straggler[j]), dropped,
@@ -292,7 +363,8 @@ class AsyncSession:
         directions priced at their exact encoded sizes."""
         bytes_up = np.full(self.m, float(self.bytes_up_per_client))
         bytes_down = np.full(self.m, float(self.bytes_down_per_client))
-        return self.config.channel.client_times(draw, bytes_up, bytes_down)
+        return self.config.channel_at(self.version).client_times(
+            draw, bytes_up, bytes_down)
 
     def _launch(self, j: int, now: float, dt: float, straggler: bool,
                 dropped: bool, retry: int) -> None:
@@ -336,6 +408,15 @@ class AsyncSession:
                 self._dispatch_cohort(sorted(self._idle), now=t)
                 continue
             t, _, flight = heapq.heappop(self._heap)
+            if not self._alive(flight.client):
+                # the client churned out while its upload was in the
+                # air: deterministic retirement (never buffered)
+                self._retire_flight(flight, t)
+                self.obs.flight.record(
+                    "retire", t, client=flight.client,
+                    version=flight.version)
+                self.obs.metrics.counter("uploads_retired").inc()
+                continue
             if flight.dropped:
                 self._pending_dropped[flight.client] = True
                 self.obs.flight.record(
@@ -377,9 +458,10 @@ class AsyncSession:
                 mvec[members] = 1.0
                 mask = jnp.asarray(mvec, self._mask_dtype)
             _, _, k_codec = self._round_keys(v)
-            outputs[v], self.ef_memory = round_fn(
-                self._snapshots[v], self.ef_memory, self.keys[v], mask,
-                k_codec)
+            outputs[v], self.ef_memory, stats = round_fn(
+                self._snapshots[v], self.ef_memory, self.keys[v],
+                self._pack_threat(mask), k_codec)
+            self._consume_stats(stats)
 
         fresh = order[0]
         eta = float(self.config.server_lr)
@@ -468,6 +550,7 @@ class AsyncSession:
             staleness=stale,
             version=self.version + 1,
         ))
+        self._count_corrupted(mask, None)
         if self.obs.enabled:
             tr = self.traces[-1]
             mt = self.obs.metrics
@@ -553,9 +636,11 @@ class PopulationAsyncSession(AsyncSession):
         else:
             self.quorum = max(1, min(self.cohort_size, int(math.ceil(
                 config.async_quantile * self.cohort_size))))
+        dyn = config.dynamics
         self.lockstep = (config.scheduler.is_full
                          and config.channel.dropout_prob == 0.0
-                         and self.quorum == self.m)
+                         and self.quorum == self.m
+                         and (dyn is None or not dyn.forces_mask))
         # population-mode event bookkeeping: O(in-flight), never O(m)
         self._in_flight: set = set()
         # client id -> dispatched broadcast bytes (defaultdict: the
@@ -597,12 +682,16 @@ class PopulationAsyncSession(AsyncSession):
         air: without it every commit would add a full cohort while
         consuming only a quorum, the backlog would grow without bound,
         and staleness would diverge linearly in the round count."""
+        from repro.comm.config import apply_churn
+
         budget = self.cohort_size - len(self._in_flight)
         if budget <= 0:
             return
         k_sched, k_chan, _ = self._round_keys(self.version)
+        eligible = apply_churn(self, self.version)
+        chan = self.config.channel_at(self.version)
         ids = self.config.scheduler.sample_ids(
-            k_sched, self.version, self.m, self.config.channel)
+            k_sched, self.version, self.m, chan, eligible=eligible)
         cohort = np.asarray(
             [j for j in ids if int(j) not in self._in_flight][:budget],
             dtype=np.int64)
@@ -615,13 +704,13 @@ class PopulationAsyncSession(AsyncSession):
             # redraw the coins deterministically, forcing delivery once
             # the attempt budget is spent so the clock cannot stall
             k_chan = jax.random.fold_in(k_chan, attempt)
-        draw = self.config.channel.draw_for(k_chan, cohort)
+        draw = chan.draw_for(k_chan, cohort)
         if attempt >= MAX_RETRIES:
             draw = dataclasses.replace(
                 draw, dropout=np.zeros_like(draw.dropout))
         per_up = float(self.bytes_up_per_client)
         per_down = float(self.bytes_down_per_client)
-        times = self.config.channel.client_times_for(
+        times = chan.client_times_for(
             cohort, self.m, draw,
             np.full(cohort.size, per_up), np.full(cohort.size, per_down))
         for i, j in enumerate(cohort):
@@ -639,6 +728,19 @@ class PopulationAsyncSession(AsyncSession):
             # every in-flight upload dropped: redraw this version's
             # cohort (attempt counter folded into the coins)
             self._dispatch_cohort((), now=now)
+
+    def _retire_flight(self, flight: _Flight, now: float) -> None:
+        """A departed client's upload landed: back to the anonymous pool
+        (the next dispatch samples a replacement from the survivors)."""
+        self._pending_dropped[flight.client] = True
+        self._in_flight.discard(flight.client)
+        if not self._heap and not self._buffer:
+            self._dispatch_cohort((), now=now)
+
+    def _retire_ef(self, departed: np.ndarray) -> None:
+        """Departed clients leave the EF hot set deterministically."""
+        if self.ef_store is not None:
+            self.ef_store.retire(departed)
 
     # -- one server commit ---------------------------------------------------
     def step(self, round_fn) -> Any:
@@ -675,9 +777,10 @@ class PopulationAsyncSession(AsyncSession):
                 mask = jnp.asarray(mvec, self._mask_dtype)
             memory = self.ef_store.gather(padded) if self.ef_store else {}
             _, _, k_codec = self._round_keys(v)
-            outputs[v], mem_out = round_fn(
-                cohort, self._snapshots[v], memory, self.keys[v], mask,
-                k_codec)
+            outputs[v], mem_out, stats = round_fn(
+                cohort, self._snapshots[v], memory, self.keys[v],
+                self._pack_threat(mask, np.asarray(padded)), k_codec)
+            self._consume_stats(stats)
             if self.ef_store is not None:
                 # real members only: pad rows are frozen duplicates
                 self.ef_store.scatter(members, mem_out)
@@ -751,6 +854,7 @@ class PopulationAsyncSession(AsyncSession):
             population=self.m,
         )
         self.traces.append(tr)
+        self._count_corrupted(delivered, tr.ids)
         if self.obs.enabled:
             mt = self.obs.metrics
             mt.counter("bytes_up").inc(float(tr.bytes_up.sum()))

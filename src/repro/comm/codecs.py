@@ -214,6 +214,9 @@ class SymPackCodec(Codec):
 
 _TOPK_RE = re.compile(r"^topk(@)?([0-9.]+)$")
 
+CODEC_SPECS = ("identity", "fp16", "bf16", "qint8", "topk<frac>",
+               "topk@<k>", "sympack")
+
 
 def make_codec(spec: "str | Codec") -> Codec:
     """Parse ``"+"``-chained codec specs, outermost stage first.
@@ -253,7 +256,9 @@ def make_codec(spec: "str | Codec") -> Codec:
         if head == "sympack":
             return SymPackCodec(inner=build(rest) if rest else IdentityCodec())
         if rest:
-            raise ValueError(f"codec {head!r} cannot wrap {'+'.join(rest)!r}")
+            raise ValueError(
+                f"codec {head!r} cannot wrap {'+'.join(rest)!r} (in "
+                f"{spec!r}); only topk*/sympack take inner stages")
         if head in ("identity", "none", "raw"):
             return IdentityCodec()
         if head == "fp16":
@@ -262,6 +267,8 @@ def make_codec(spec: "str | Codec") -> Codec:
             return CastCodec("bfloat16")
         if head == "qint8":
             return QInt8Codec()
-        raise ValueError(f"unknown codec spec {head!r}")
+        raise ValueError(
+            f"unknown codec spec {head!r} (in {spec!r}); expected one of "
+            f"{', '.join(CODEC_SPECS)}")
 
     return build(stages)

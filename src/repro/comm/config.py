@@ -41,6 +41,17 @@ Bit-exactness contract: with identity codecs and full participation
 their input objects unchanged and ``weights`` returns ``p`` unchanged —
 the round's jaxpr is identical to the no-comm path, so trajectories
 match today's bit-for-bit, in both wire directions.
+
+Scenario dynamics (``CommConfig(dynamics=DynamicsConfig(...))``, see
+``repro.dynamics``) compose on top: churn filters the eligible id set
+the scheduler samples from (departed clients' EF rows are retired
+deterministically), a ``ChannelProcess`` modulates the channel per
+round, a ``ThreatModel`` corrupts a seeded subset of uplinks inside
+the traced round (before the codec — attackers craft their wire
+payload), and a robust aggregator transforms the decoded payload
+before the optimizer's weighted aggregation. Every layer defaults off,
+and with ``dynamics=None`` every code path here is literally the
+pre-dynamics one.
 """
 from __future__ import annotations
 
@@ -57,6 +68,7 @@ from repro.comm.codecs import Codec, IdentityCodec, make_codec
 from repro.comm.metrics import RoundTrace, Transport, transport_from_traces
 from repro.comm.scheduler import Scheduler, make_scheduler
 from repro.obs import NULL_TELEMETRY
+from repro.obs import log as obs_log
 
 # payload-name prefix that selects the downlink (server -> client)
 # direction in codec specs and in the byte plan
@@ -71,6 +83,11 @@ _LOSSLESS_BY_DEFAULT = ("loss", "down:seed")
 # payload counter (keeps uplink key schedules unchanged by the presence
 # of downlink payloads)
 _DOWNLINK_KEY_STREAM = 1 << 20
+
+# fold_in stream offset for threat-model corruption keys (disjoint from
+# both the uplink payload counter and the downlink stream, so turning a
+# threat on never perturbs codec randomness)
+_THREAT_KEY_STREAM = 1 << 21
 
 # begin_variant sentinel: "no variant announced yet" (None is a valid
 # round signature — the default single-trace trajectory)
@@ -148,8 +165,20 @@ class CommConfig:
     async_quantile: float = 1.0
     staleness: "str | Any" = "constant"
     server_lr: float = 1.0
+    dynamics: "Any | None" = None  # repro.dynamics.DynamicsConfig
 
     def __post_init__(self):
+        if self.dynamics is not None:
+            from repro.dynamics import DynamicsConfig
+
+            if not isinstance(self.dynamics, DynamicsConfig):
+                raise ValueError(
+                    f"CommConfig.dynamics wants a "
+                    f"repro.dynamics.DynamicsConfig, got {self.dynamics!r}")
+            if self.dynamics.is_null:
+                # all layers off: normalize away so every `dynamics is
+                # None` fast path (and the bit-exactness gates) holds
+                self.dynamics = None
         # always own a private copy: the downlink_codecs merge below must
         # never mutate a caller's dict (configs often share one spec)
         self.codecs = (dict(self.codecs) if isinstance(self.codecs, dict)
@@ -212,6 +241,52 @@ class CommConfig:
     def has_error_feedback(self) -> bool:
         return feedback.any_ef_requested(self.error_feedback)
 
+    def channel_at(self, t: int):
+        """The channel as seen at round ``t``: the static model itself
+        when no ``ChannelProcess`` is configured (the literal same
+        object — zero change to the default path), else a per-round
+        modulated view with the same method signatures."""
+        dyn = self.dynamics
+        if dyn is None or dyn.channel is None:
+            return self.channel
+        return dyn.channel.at(self.channel, t)
+
+
+def apply_churn(session, t: int) -> "np.ndarray | None":
+    """Shared churn bookkeeping for every comm session at round/version
+    ``t``: returns the eligible id array (or ``None`` without churn),
+    retires newly-departed clients' EF rows via the session's
+    ``_retire_ef`` hook, and publishes the ``active_population`` gauge.
+
+    Idempotent within one ``t`` (the async driver may dispatch the same
+    version more than once). If churn empties the population entirely,
+    the full id set is restored with a one-time warning — a trajectory
+    cannot run over zero clients.
+    """
+    dyn = session.config.dynamics
+    if dyn is None or dyn.churn is None:
+        return None
+    elig = dyn.churn.eligible_mask(t, session.m)
+    if not elig.any():
+        if not getattr(session, "_churn_warned", False):
+            session._churn_warned = True
+            obs_log.warn_with_context(
+                "churn left zero eligible clients; treating the full "
+                "population as eligible so the trajectory can proceed",
+                round=t, m=session.m)
+        elig = np.ones(session.m, dtype=bool)
+    prev = session._elig_prev
+    session._elig_prev = elig
+    if prev is not None:
+        departed = np.nonzero(prev & ~elig)[0]
+        if departed.size:
+            session._retire_ef(departed)
+            session.obs.metrics.counter("clients_departed").inc(
+                float(departed.size))
+    if session.obs.enabled:
+        session.obs.metrics.gauge("active_population").set(float(elig.sum()))
+    return np.nonzero(elig)[0].astype(np.int64)
+
 
 class CommRound:
     """In-jit view of one round's transport. Constructed inside the
@@ -238,6 +313,13 @@ class CommRound:
     ):
         self._config = config
         self._plan = plan
+        # with a ThreatModel active the sessions pack the per-client
+        # attacker indicator next to the delivery mask as a 2-tuple
+        # (both traced; jit flattens the pytree) — unpack it here so the
+        # rest of the round sees the plain delivery mask
+        self.attackers = None
+        if isinstance(mask, tuple):
+            mask, self.attackers = mask
         self.mask = mask
         self._key = key
         self._n_payloads = 0
@@ -247,6 +329,9 @@ class CommRound:
         # memory_out starts as a same-structure copy so payloads a round
         # happens to skip still thread their residual through unchanged
         self.memory_out: Dict[str, jax.Array] = dict(memory or {})
+        # traced robust-aggregation counters (uploads_clipped, ...);
+        # empty without dynamics — zero extra jaxpr outputs
+        self.stats_out: Dict[str, jax.Array] = {}
 
     def _payload_key(self, name: str) -> str:
         """Stable per-round key for the i-th uplink of ``name`` — a round
@@ -286,8 +371,35 @@ class CommRound:
             tuple(wire_shape) if wire_shape is not None
             else tuple(x.shape[1:]), x.dtype)
         self._n_payloads += 1
+        dyn = self._config.dynamics
+        threat = dyn.threat if dyn is not None else None
+        robust = dyn.robust if dyn is not None else None
+        if (threat is not None and self.attackers is not None
+                and threat.applies(name)):
+            # corruption happens BEFORE the codec: the attacker crafts
+            # its wire payload, so compression and EF operate on the
+            # corrupted upload exactly as on an honest one. The key
+            # stream is disjoint from codec/downlink streams.
+            x = threat.corrupt(
+                jax.random.fold_in(
+                    self._key, _THREAT_KEY_STREAM + self._n_payloads),
+                x, self.attackers)
         if isinstance(codec, IdentityCodec):
-            return x  # same object: zero jaxpr change
+            if robust is None:
+                return x  # same object: zero jaxpr change
+            decoded = x
+        else:
+            decoded = self._roundtrip(codec, name, pkey, x, ef_eligible,
+                                      ef_reset)
+        if robust is not None:
+            # server-side defense on what was received (post-decode);
+            # EF memory above tracks the *wire* payload — the client
+            # cannot observe the server's clipping/trimming
+            decoded = robust(decoded, self.mask, self.stats_out)
+        return decoded
+
+    def _roundtrip(self, codec, name, pkey, x, ef_eligible, ef_reset):
+        """Simulated encode->decode of one lossy payload (+ EF memory)."""
         ef = ef_eligible and self._config.ef_for(name)
         if ef and self._ef_record is not None:
             self._ef_record[pkey] = jax.ShapeDtypeStruct(x.shape, x.dtype)
@@ -386,6 +498,10 @@ class _NullComm:
     def memory_out(self):
         return {}
 
+    @property
+    def stats_out(self):
+        return {}
+
 
 NULL_COMM = _NullComm()
 
@@ -406,6 +522,10 @@ def probe_round(config: CommConfig, m: int, mask_dtype, plan: Dict[str, int],
     """
     spec: Dict[str, jax.ShapeDtypeStruct] = {}
     mask = None if full_cohort else jnp.zeros((m,), mask_dtype)
+    if config.dynamics is not None and config.dynamics.threat is not None:
+        # with a threat the sessions pack (delivery, attackers); probe
+        # the same pytree structure
+        mask = (mask, jnp.zeros((m,), mask_dtype))
     ck = jax.random.PRNGKey(0)
 
     def probe(mask, ck):
@@ -455,9 +575,17 @@ class CommSession:
         self._t = 0
         self._root = jax.random.PRNGKey(config.seed)
         self._mask_dtype = mask_dtype
-        # static decision: identical jit trace structure for every round
+        # static decision: identical jit trace structure for every round.
+        # Churn and correlated outages invalidate the statically-full
+        # path — the delivery mask must then be traced every round.
+        dyn = config.dynamics
         self._always_full = (
-            config.scheduler.is_full and config.channel.dropout_prob == 0.0)
+            config.scheduler.is_full and config.channel.dropout_prob == 0.0
+            and (dyn is None or not dyn.forces_mask))
+        # dynamics bookkeeping (all inert when dynamics is None)
+        self._elig_prev = None
+        self._attacker_arr = None
+        self.robust_stats: Dict[str, float] = {}
         # probe geometry: subclasses with a cohort axis narrower than m
         # (population mode) override these so abstract probes trace the
         # same shapes the real rounds will
@@ -525,11 +653,44 @@ class CommSession:
         """One lock-step round: draw cohort, execute, account."""
         t = self._t
         mask, ck = self.begin_round(t)
-        self._state, self.ef_memory = round_fn(
+        self._state, self.ef_memory, stats = round_fn(
             self._state, self.ef_memory, self.keys[t], mask, ck)
+        self._consume_stats(stats)
         self.end_round()
         self._t += 1
         return self._state
+
+    def _consume_stats(self, stats: Dict[str, Any]) -> None:
+        """Drain the round's traced robust-aggregation counters into
+        telemetry (empty dict — the no-dynamics case — is free)."""
+        for stat_name, val in stats.items():
+            v = float(val)
+            self.robust_stats[stat_name] = \
+                self.robust_stats.get(stat_name, 0.0) + v
+            self.obs.metrics.counter(stat_name).inc(v)
+
+    def _retire_ef(self, departed: np.ndarray) -> None:
+        """Zero newly-departed clients' EF memory rows (dense layout)."""
+        if self.ef_memory:
+            z = jnp.asarray(departed)
+            self.ef_memory = {k: v.at[z].set(0)
+                              for k, v in self.ef_memory.items()}
+
+    def _pack_threat(self, mask, ids=None):
+        """Bundle the attacker indicator next to the delivery mask when
+        a threat is active (``ids`` selects the cohort rows; dense
+        sessions pass None and cache the (m,) indicator)."""
+        dyn = self.config.dynamics
+        if dyn is None or dyn.threat is None:
+            return mask
+        if ids is None:
+            if self._attacker_arr is None:
+                self._attacker_arr = jnp.asarray(
+                    dyn.threat.attacker_mask(np.arange(self.m)),
+                    dtype=self._mask_dtype)
+            return (mask, self._attacker_arr)
+        return (mask, jnp.asarray(dyn.threat.attacker_mask(ids),
+                                  dtype=self._mask_dtype))
 
     def finalize(self) -> Transport:
         if self.obs.enabled:
@@ -569,9 +730,11 @@ class CommSession:
         """
         k = jax.random.fold_in(self._root, t)
         k_sched, k_chan, k_codec = jax.random.split(k, 3)
+        eligible = apply_churn(self, t)
+        chan = self.config.channel_at(t)
         scheduled = self.config.scheduler.participants(
-            k_sched, t, self.m, self.config.channel)
-        draw = self.config.channel.draw(k_chan, self.m)
+            k_sched, t, self.m, chan, eligible=eligible)
+        draw = chan.draw(k_chan, self.m)
         delivered = scheduled & ~draw.dropout
         if scheduled.any() and not delivered.any():
             # every scheduled client dropped: the server re-polls one
@@ -581,8 +744,9 @@ class CommSession:
             delivered[int(np.argmax(scheduled))] = True
         self._pending = (t, scheduled, delivered, draw)
         if self._always_full:
-            return None, k_codec
-        return jnp.asarray(delivered, dtype=self._mask_dtype), k_codec
+            return self._pack_threat(None), k_codec
+        mask = jnp.asarray(delivered, dtype=self._mask_dtype)
+        return self._pack_threat(mask), k_codec
 
     def end_round(self) -> RoundTrace:
         """Account the round just executed (reads the traced byte plan —
@@ -592,7 +756,7 @@ class CommSession:
         bytes_up = per_client * delivered.astype(np.float64)
         bytes_down = (float(self.bytes_down_per_client)
                       * scheduled.astype(np.float64))
-        sim = self.config.channel.round_time(
+        sim = self.config.channel_at(t).round_time(
             draw, delivered, bytes_up, bytes_down)
         trace = RoundTrace(
             round=t,
@@ -605,9 +769,24 @@ class CommSession:
         )
         self.traces.append(trace)
         self._pending = None
+        self._count_corrupted(delivered, None)
         if self.obs.enabled:
             self._observe(trace)
         return trace
+
+    def _count_corrupted(self, delivered: np.ndarray,
+                         ids: "np.ndarray | None") -> None:
+        """Host-side tally of corrupted uploads that reached the server
+        this round (attacker AND delivered client-rounds)."""
+        dyn = self.config.dynamics
+        if dyn is None or dyn.threat is None:
+            return
+        att = dyn.threat.attacker_mask(
+            np.arange(self.m) if ids is None else ids)
+        n_bad = float((att & delivered).sum())
+        self.robust_stats["uploads_corrupted"] = \
+            self.robust_stats.get("uploads_corrupted", 0.0) + n_bad
+        self.obs.metrics.counter("uploads_corrupted").inc(n_bad)
 
     def _observe(self, trace: RoundTrace) -> None:
         """Populate per-round telemetry (host-side, after the round ran)."""
@@ -663,13 +842,17 @@ class PopulationCommSession(CommSession):
         # probes must trace cohort-shaped rounds, not (m,) ones
         self._probe_m = self.cohort_size
         self._pending_ids = None
+        self._pending_real = None
 
     @property
     def _probe_full(self) -> bool:
         # every cohort member is scheduled by construction; the mask only
         # carries dropout, so no-dropout channels keep the mask=None
-        # (bit-exact identity) path even under q < 1 sampling
-        return self.config.channel.dropout_prob == 0.0
+        # (bit-exact identity) path even under q < 1 sampling. Churn
+        # (cohorts padded below the static size) and outages force it.
+        dyn = self.config.dynamics
+        return (self.config.channel.dropout_prob == 0.0
+                and (dyn is None or not dyn.forces_mask))
 
     def _materialize(self, ids):
         cohort = self.population.materialize(ids)
@@ -700,20 +883,35 @@ class PopulationCommSession(CommSession):
         """
         k = jax.random.fold_in(self._root, t)
         k_sched, k_chan, k_codec = jax.random.split(k, 3)
+        eligible = apply_churn(self, t)
+        chan = self.config.channel_at(t)
         ids = self.config.scheduler.sample_ids(
-            k_sched, t, self.m, self.config.channel)
-        draw = self.config.channel.draw_for(k_chan, ids)
+            k_sched, t, self.m, chan, eligible=eligible)
+        n_real = len(ids)
+        if n_real < self.cohort_size:
+            # churn shrank the eligible set below the static cohort
+            # size: pad with the first sampled id under a zero delivery
+            # mask so every round keeps the one traced jaxpr
+            ids = np.concatenate([
+                ids, np.full(self.cohort_size - n_real, ids[0],
+                             dtype=np.int64)])
+        draw = chan.draw_for(k_chan, ids)
         delivered = ~draw.dropout
+        delivered[n_real:] = False
         if not delivered.any():
             # every sampled client dropped: re-poll the lowest id so
             # aggregation weights stay well-defined (dense-path rule)
             delivered = np.zeros_like(delivered)
             delivered[0] = True
-        self._pending = (t, np.ones_like(delivered), delivered, draw)
+        scheduled = np.ones_like(delivered)
+        scheduled[n_real:] = False
+        self._pending = (t, scheduled, delivered, draw)
         self._pending_ids = ids
+        self._pending_real = n_real
         if self._probe_full:
-            return ids, None, k_codec
-        return ids, jnp.asarray(delivered, dtype=self._mask_dtype), k_codec
+            return ids, self._pack_threat(None, ids), k_codec
+        mask = jnp.asarray(delivered, dtype=self._mask_dtype)
+        return ids, self._pack_threat(mask, ids), k_codec
 
     def step(self, round_fn) -> Any:
         """One cohort round: sample ids, materialize, execute, account.
@@ -726,13 +924,22 @@ class PopulationCommSession(CommSession):
         ids, mask, ck = self.begin_round(t)
         cohort = self._materialize(ids)
         memory = self.ef_store.gather(ids) if self.ef_store else {}
-        self._state, mem_out = round_fn(
+        self._state, mem_out, stats = round_fn(
             cohort, self._state, memory, self.keys[t], mask, ck)
+        self._consume_stats(stats)
         if self.ef_store is not None:
-            self.ef_store.scatter(ids, mem_out)
+            # real ids only: churn-padded rows duplicate ids[0] and must
+            # not race its real row on scatter
+            self.ef_store.scatter(ids[:self._pending_real], mem_out)
         self.end_round()
         self._t += 1
         return self._state
+
+    def _retire_ef(self, departed: np.ndarray) -> None:
+        """Departed clients leave the EF hot set (their slot is freed
+        and zeroed — deterministic retirement, not LRU luck)."""
+        if self.ef_store is not None:
+            self.ef_store.retire(departed)
 
     def end_round(self) -> RoundTrace:
         t, scheduled, delivered, draw = self._pending
@@ -741,7 +948,7 @@ class PopulationCommSession(CommSession):
         bytes_up = per_client * delivered.astype(np.float64)
         bytes_down = (float(self.bytes_down_per_client)
                       * scheduled.astype(np.float64))
-        sim = self.config.channel.round_time_for(
+        sim = self.config.channel_at(t).round_time_for(
             ids, self.m, draw, delivered, bytes_up, bytes_down)
         trace = RoundTrace(
             round=t,
@@ -757,6 +964,8 @@ class PopulationCommSession(CommSession):
         self.traces.append(trace)
         self._pending = None
         self._pending_ids = None
+        self._pending_real = None
+        self._count_corrupted(delivered, ids)
         if self.obs.enabled:
             self._observe(trace)
         return trace

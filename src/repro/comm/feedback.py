@@ -191,7 +191,9 @@ class BoundedMemory:
             for name, s in spec.items()
         }
         self._slot_of: "dict[int, int]" = {}  # client id -> slot (LRU order)
+        self._free: "list[int]" = []  # slots released by retire()
         self.evictions = 0  # long-tail resets observed so far
+        self.retirements = 0  # churn-departed rows dropped so far
 
     @property
     def payload_names(self):
@@ -211,8 +213,13 @@ class BoundedMemory:
                 # refresh recency
                 self._slot_of[cid] = self._slot_of.pop(cid)
                 continue
-            if len(self._slot_of) < self.capacity:
-                slot = len(self._slot_of)
+            if self._free:
+                slot = self._free.pop()
+            elif len(self._slot_of) < self.capacity:
+                # invariant: slots [0, len(_slot_of) + len(_free)) are
+                # allocated, and _free holds the retired ones — so the
+                # next virgin slot is the allocation high-water mark
+                slot = len(self._slot_of) + len(self._free)
             else:
                 # evict the least recently sampled id (oldest dict entry)
                 victim = next(iter(self._slot_of))
@@ -248,6 +255,24 @@ class BoundedMemory:
                             dtype=jnp.int32)
         self._bufs = {name: buf.at[slots].set(memory[name][: len(ids)])
                       for name, buf in self._bufs.items()}
+
+    def retire(self, ids) -> int:
+        """Drop hot-set rows for churn-departed clients.
+
+        Zeros the rows (so a recycled slot starts clean even if a later
+        ``gather`` misses it) and releases the slots for reuse. Ids not
+        in the hot set are ignored. Returns the number retired.
+        """
+        gone = [int(c) for c in ids if int(c) in self._slot_of]
+        if not gone:
+            return 0
+        slots = [self._slot_of.pop(c) for c in gone]
+        z = jnp.asarray(slots, dtype=jnp.int32)
+        self._bufs = {name: buf.at[z].set(0)
+                      for name, buf in self._bufs.items()}
+        self._free.extend(slots)
+        self.retirements += len(gone)
+        return len(gone)
 
     def residual_norms(self) -> "Dict[str, float]":
         return residual_norms(self._bufs)

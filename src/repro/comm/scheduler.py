@@ -24,6 +24,13 @@ consumes (only the cohort's shards ever exist). ``participants`` and
 exactly the indicator of the ids), so dense and population runs of one
 seed schedule identical cohorts. ``cohort_size`` exposes the static
 per-round cohort cardinality so jitted rounds trace once per size.
+
+Churn (``repro.dynamics``): every policy takes an optional ``eligible``
+id array restricting the draw to the clients alive this round. With
+``eligible=None`` (the default, and the only call shape without
+dynamics) each policy's draw is byte-identical to the pre-churn code:
+the restricted path draws *indices into the eligible set*, so it never
+perturbs the unrestricted stream.
 """
 from __future__ import annotations
 
@@ -36,31 +43,38 @@ import numpy as np
 
 from repro.comm.channel import ChannelModel
 
+SCHEDULER_SPECS = ("full", "uniform:<q>", "bandwidth:<q>")
+
 
 class Scheduler:
     name: str = "scheduler"
 
     def participants(
-        self, key: jax.Array, round_idx: int, m: int, channel: ChannelModel
+        self, key: jax.Array, round_idx: int, m: int, channel: ChannelModel,
+        eligible: "np.ndarray | None" = None,
     ) -> np.ndarray:
         """(m,) bool mask of clients scheduled this round."""
         mask = np.zeros((m,), dtype=bool)
-        mask[self.sample_ids(key, round_idx, m, channel)] = True
+        mask[self.sample_ids(key, round_idx, m, channel,
+                             eligible=eligible)] = True
         return mask
 
     def sample_ids(
-        self, key: jax.Array, round_idx: int, m: int, channel: ChannelModel
+        self, key: jax.Array, round_idx: int, m: int, channel: ChannelModel,
+        eligible: "np.ndarray | None" = None,
     ) -> np.ndarray:
         """Sorted int64 client ids of this round's cohort.
 
         Same draw as ``participants`` (identical key → identical
         cohort); O(cohort) output, never an ``(m,)`` mask, so q ~ 10⁻³
-        participation over m ~ 10⁵ populations stays cheap.
+        participation over m ~ 10⁵ populations stays cheap. ``eligible``
+        (sorted ids) restricts the draw to churn survivors.
         """
         raise NotImplementedError
 
     def cohort_size(self, m: int) -> int:
-        """Static number of clients sampled per round."""
+        """Static number of clients sampled per round (an upper bound
+        under churn: a shrunken eligible set yields fewer ids)."""
         return m
 
     @property
@@ -71,11 +85,17 @@ class Scheduler:
 class FullParticipation(Scheduler):
     name = "full"
 
-    def participants(self, key, round_idx, m, channel):
-        return np.ones((m,), dtype=bool)
+    def participants(self, key, round_idx, m, channel, eligible=None):
+        if eligible is None:
+            return np.ones((m,), dtype=bool)
+        mask = np.zeros((m,), dtype=bool)
+        mask[eligible] = True
+        return mask
 
-    def sample_ids(self, key, round_idx, m, channel):
-        return np.arange(m, dtype=np.int64)
+    def sample_ids(self, key, round_idx, m, channel, eligible=None):
+        if eligible is None:
+            return np.arange(m, dtype=np.int64)
+        return np.asarray(eligible, dtype=np.int64)
 
     @property
     def is_full(self):
@@ -95,10 +115,18 @@ class UniformSampler(Scheduler):
     def _count(self, m: int) -> int:
         return max(1, min(m, int(math.ceil(self.q * m))))
 
-    def sample_ids(self, key, round_idx, m, channel):
-        chosen = jax.random.choice(
-            key, m, shape=(self._count(m),), replace=False)
-        return np.sort(np.asarray(chosen, dtype=np.int64))
+    def sample_ids(self, key, round_idx, m, channel, eligible=None):
+        if eligible is None:
+            chosen = jax.random.choice(
+                key, m, shape=(self._count(m),), replace=False)
+            return np.sort(np.asarray(chosen, dtype=np.int64))
+        eligible = np.asarray(eligible, dtype=np.int64)
+        n = len(eligible)
+        count = min(self._count(m), n)
+        # draw indices INTO the eligible set: the cohort size follows
+        # the shrunken population, the stream stays per-round pure
+        chosen = jax.random.choice(key, n, shape=(count,), replace=False)
+        return np.sort(eligible[np.asarray(chosen, dtype=np.int64)])
 
     def cohort_size(self, m: int) -> int:
         return self._count(m)
@@ -119,11 +147,19 @@ class BandwidthAware(UniformSampler):
     def name(self):
         return f"bandwidth:{self.q}"
 
-    def sample_ids(self, key, round_idx, m, channel):
-        rates = channel.uplink_rates(m)
-        scores = jnp.log(jnp.asarray(rates)) + jax.random.gumbel(key, (m,))
-        _, top = jax.lax.top_k(scores, self._count(m))
-        return np.sort(np.asarray(top, dtype=np.int64))
+    def sample_ids(self, key, round_idx, m, channel, eligible=None):
+        if eligible is None:
+            rates = channel.uplink_rates(m)
+            scores = jnp.log(jnp.asarray(rates)) + jax.random.gumbel(key, (m,))
+            _, top = jax.lax.top_k(scores, self._count(m))
+            return np.sort(np.asarray(top, dtype=np.int64))
+        eligible = np.asarray(eligible, dtype=np.int64)
+        n = len(eligible)
+        count = min(self._count(m), n)
+        rates = channel.uplink_rates_for(eligible, m)
+        scores = jnp.log(jnp.asarray(rates)) + jax.random.gumbel(key, (n,))
+        _, top = jax.lax.top_k(scores, count)
+        return np.sort(eligible[np.asarray(top, dtype=np.int64)])
 
 
 def make_scheduler(spec: "str | Scheduler") -> Scheduler:
@@ -132,9 +168,16 @@ def make_scheduler(spec: "str | Scheduler") -> Scheduler:
         return spec
     if spec == "full":
         return FullParticipation()
-    kind, _, arg = spec.partition(":")
-    if kind == "uniform":
-        return UniformSampler(q=float(arg or 0.5))
-    if kind == "bandwidth":
-        return BandwidthAware(q=float(arg or 0.5))
-    raise ValueError(f"unknown scheduler spec {spec!r}")
+    kind, _, arg = str(spec).partition(":")
+    known = ", ".join(repr(s) for s in SCHEDULER_SPECS)
+    try:
+        if kind == "uniform":
+            return UniformSampler(q=float(arg or 0.5))
+        if kind == "bandwidth":
+            return BandwidthAware(q=float(arg or 0.5))
+    except ValueError:
+        raise ValueError(
+            f"bad parameter in scheduler spec {spec!r} (q must be a "
+            f"float); expected one of {known}") from None
+    raise ValueError(
+        f"unknown scheduler spec {spec!r}; expected one of {known}")

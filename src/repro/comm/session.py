@@ -128,8 +128,8 @@ class NullSession(Session):
         return NULL_COMM
 
     def step(self, round_fn) -> Any:
-        self._state, _ = round_fn(self._state, {}, self.keys[self._t],
-                                  None, None)
+        self._state, _, _ = round_fn(self._state, {}, self.keys[self._t],
+                                     None, None)
         self._per_round.append(self._formula)
         self._t += 1
         if self.obs.enabled:

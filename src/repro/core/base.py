@@ -376,7 +376,7 @@ def run_rounds(
         def _round(cohort, s, mem, k, mask, ck):
             cr = session.comm_round(mem, mask, ck)
             s_next = opt.round(cohort, s, k, comm=cr)
-            return s_next, cr.memory_out
+            return s_next, cr.memory_out, cr.stats_out
 
         # probe cohort: ids are irrelevant (shape-only eval_shape trace)
         _probe_cohort = population.materialize(np.zeros(
@@ -389,7 +389,7 @@ def run_rounds(
         def _round(s, mem, k, mask, ck):
             cr = session.comm_round(mem, mask, ck)
             s_next = opt.round(problem, s, k, comm=cr)
-            return s_next, cr.memory_out
+            return s_next, cr.memory_out, cr.stats_out
 
         # trace-time discovery (byte plan / EF shapes / async launch):
         # one abstract probe of the round — nothing executes here (any

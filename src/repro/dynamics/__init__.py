@@ -1,0 +1,59 @@
+"""Scenario dynamics: churn, time-varying channels, threats, robustness.
+
+``repro.comm`` models a static, honest population over a channel whose
+statistics never change. This package composes three *dynamic* layers on
+top of it, threaded through ``CommConfig(dynamics=DynamicsConfig(...))``:
+
+  * **population churn** (``repro.dynamics.churn``) — arrival/departure
+    processes over rounds shrink/grow the eligible client id set that
+    ``Scheduler.sample_ids`` and the population sessions consume;
+  * **time-varying channels** (``repro.dynamics.process``) — a
+    ``ChannelProcess`` wrapper over ``ChannelModel`` whose per-field
+    multipliers follow diurnal cycles, drift, and correlated regional
+    outages, keyed by ``(field, client_id, round)``;
+  * **adversarial uploads + robust aggregation**
+    (``repro.dynamics.threat`` / ``repro.dynamics.robust``) — a
+    ``ThreatModel`` corrupting a seeded subset of uplinks inside the
+    traced round, and pluggable robust aggregators composed with the
+    existing participation and staleness weights.
+
+Every layer defaults off; a ``CommConfig`` without ``dynamics`` (or with
+an all-``None`` ``DynamicsConfig``) runs the exact pre-dynamics code
+paths, bit-identical on all drivers (tested).
+"""
+from repro.dynamics.churn import (
+    ChurnProcess,
+    LifetimeChurn,
+    PoissonChurn,
+    StepChurn,
+    make_churn,
+)
+from repro.dynamics.config import DynamicsConfig
+from repro.dynamics.process import ChannelProcess
+from repro.dynamics.robust import (
+    ChainAggregator,
+    ClipAggregator,
+    CoordinateMedian,
+    RobustAggregator,
+    TrimmedMean,
+    make_aggregator,
+)
+from repro.dynamics.threat import ThreatModel, make_threat
+
+__all__ = [
+    "ChainAggregator",
+    "ChannelProcess",
+    "ChurnProcess",
+    "ClipAggregator",
+    "CoordinateMedian",
+    "DynamicsConfig",
+    "LifetimeChurn",
+    "PoissonChurn",
+    "RobustAggregator",
+    "StepChurn",
+    "ThreatModel",
+    "TrimmedMean",
+    "make_aggregator",
+    "make_churn",
+    "make_threat",
+]

@@ -1,0 +1,86 @@
+"""``DynamicsConfig``: the one knob that threads scenario dynamics
+through ``CommConfig``.
+
+``CommConfig(dynamics=DynamicsConfig(...))`` composes up to four
+independent layers — churn, a time-varying channel process, a Byzantine
+threat model, and a robust aggregation chain. Each accepts either a
+spec string (parsed by the layer's ``make_*``) or a constructed object;
+``None`` (the default everywhere) turns the layer off. An all-``None``
+config is *null* and ``CommConfig`` normalizes it away entirely, so the
+no-dynamics code paths stay literally unchanged.
+
+``seed`` feeds every layer whose spec-string form doesn't carry its
+own: churn lifetimes, channel modulator phases, outage windows, and the
+attacker subset all derive their per-id streams from it (objects passed
+directly keep their own seeds).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.dynamics.churn import ChurnProcess, make_churn
+from repro.dynamics.process import ChannelProcess
+from repro.dynamics.robust import RobustAggregator, make_aggregator
+from repro.dynamics.threat import ThreatModel, make_threat
+
+
+@dataclasses.dataclass
+class DynamicsConfig:
+    """Scenario-dynamics description (see module docstring).
+
+    ``churn`` — ``"step:t=T[,frac=f]" | "poisson:rate" |
+    "lifetime:mean[,stagger]"`` or a ``ChurnProcess``;
+    ``channel`` — a ``ChannelProcess`` (field multiplier specs +
+    optional ``outage="outage:p,dur[,groups]"``);
+    ``threat`` — ``"signflip:f" | "scale:f[,c]" | "noise:f[,s]"`` or a
+    ``ThreatModel``;
+    ``robust`` — ``"clip:tau" | "trimmed:f" | "median"``
+    (``"+"``-chainable) or a ``RobustAggregator``.
+    """
+
+    churn: "str | ChurnProcess | None" = None
+    channel: "ChannelProcess | None" = None
+    threat: "str | ThreatModel | None" = None
+    robust: "str | RobustAggregator | None" = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.churn is not None:
+            self.churn = make_churn(self.churn, seed=self.seed)
+        if self.channel is not None and not isinstance(
+                self.channel, ChannelProcess):
+            raise ValueError(
+                f"DynamicsConfig.channel wants a ChannelProcess, got "
+                f"{self.channel!r} — field multipliers need to be named "
+                f"(e.g. ChannelProcess(uplink_bytes_per_s='sin:24,0.5'))")
+        if self.threat is not None:
+            self.threat = make_threat(self.threat, seed=self.seed)
+        if self.robust is not None:
+            self.robust = make_aggregator(self.robust)
+
+    @property
+    def is_null(self) -> bool:
+        """No layer active: behave exactly as if dynamics were None."""
+        return (self.churn is None and self.channel is None
+                and self.threat is None and self.robust is None)
+
+    @property
+    def forces_mask(self) -> bool:
+        """Churn and outages invalidate the statically-full fast paths:
+        the delivery mask must be traced even under a full scheduler
+        with no iid dropout."""
+        return (self.churn is not None
+                or (self.channel is not None and self.channel.has_outage))
+
+    def describe(self) -> "dict[str, Any]":
+        """JSON-friendly summary for benchmark/example records."""
+        return {
+            "churn": getattr(self.churn, "__class__", type(None)).__name__
+            if self.churn is not None else None,
+            "channel": dataclasses.asdict(self.channel)
+            if self.channel is not None else None,
+            "threat": f"{self.threat.kind}:{self.threat.fraction}"
+            if self.threat is not None else None,
+            "robust": self.robust.name if self.robust is not None else None,
+        }

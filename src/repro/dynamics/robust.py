@@ -1,0 +1,225 @@
+"""Robust server-side aggregation transforms for uplink payloads.
+
+A robust aggregator is a traced transform of the decoded, stacked
+``(c, ...)`` uplink payload, applied by ``CommRound.uplink`` AFTER the
+codec decode (the server defends itself with what it received) and
+BEFORE the optimizer's weighted aggregation — so it composes with the
+existing participation weights (``CommRound.weights`` renormalizes over
+the delivering cohort) and, in the async driver, with staleness
+weights: the composition order is clip -> trim/median -> staleness ->
+participation.
+
+Aggregators (spec grammar, ``"+"``-chained left to right, parsed by
+``make_aggregator``):
+
+  * ``"clip:tau"`` — per-client norm clipping: row ``i`` is scaled by
+    ``min(1, tau/||x_i||)``. Defeats scaled-gradient attacks; leaves
+    norm-preserving attacks (sign flips) untouched.
+  * ``"trimmed:f"`` — coordinate-wise trimmed mean: per coordinate, the
+    ``ceil(f*c)`` largest and smallest delivered contributions are
+    discarded and every row is replaced by the mean of the survivors.
+    Because the downstream participation weights sum to 1 over the
+    cohort, the weighted aggregate then equals the trimmed mean —
+    robust to any ``< f`` fraction of outliers, including sign flips.
+  * ``"median"`` — coordinate-wise median of the delivered rows
+    (the ``f -> 1/2`` limit of trimming; maximally robust, highest
+    bias).
+
+Undelivered rows (the delivery mask) never count as extremes: they are
+replaced by the delivered mean before sorting, so dropout cannot eat
+the trim budget. Row-replacing aggregators (trim/median) broadcast the
+robust aggregate back to every row — each client's "contribution" IS
+the aggregate, which is exactly what makes the subsequent weighted sum
+produce it.
+
+Each transform accumulates traced counters into the round's
+``stats_out`` dict (``uploads_clipped``, ``uploads_trimmed``), which
+the sessions drain into ``repro.obs`` after each round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+ROBUST_KINDS = ("clip", "trimmed", "median")
+
+
+def _bump(stats: dict, key: str, value) -> None:
+    stats[key] = stats.get(key, 0.0) + value
+
+
+def _mask_col(mask, c: int, dtype):
+    """(c, 1) 0/1 delivery column, or None for a fully-delivered cohort."""
+    if mask is None:
+        return None
+    return jnp.asarray(mask, dtype).reshape(-1, 1)[:c]
+
+
+class RobustAggregator:
+    """Base: ``__call__(x, mask, stats) -> x_robust`` (traced)."""
+
+    name: str = "robust"
+
+    def __call__(self, x, mask, stats: dict):
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.name!r})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClipAggregator(RobustAggregator):
+    """Per-client norm clipping to radius ``tau``."""
+
+    tau: float = 1.0
+
+    def __post_init__(self):
+        if self.tau <= 0:
+            raise ValueError(f"clip tau must be > 0, got {self.tau}")
+
+    @property
+    def name(self):
+        return f"clip:{self.tau}"
+
+    def __call__(self, x, mask, stats):
+        c = x.shape[0]
+        flat = x.reshape(c, -1)
+        norms = jnp.linalg.norm(flat, axis=1)
+        tau = jnp.asarray(self.tau, x.dtype)
+        factor = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
+        clipped = (norms > tau).astype(x.dtype)
+        mcol = _mask_col(mask, c, x.dtype)
+        if mcol is not None:
+            clipped = clipped * mcol[:, 0]
+        _bump(stats, "uploads_clipped", jnp.sum(clipped))
+        return x * factor.reshape((-1,) + (1,) * (x.ndim - 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrimmedMean(RobustAggregator):
+    """Coordinate-wise trimmed mean over the delivered rows."""
+
+    fraction: float = 0.1
+
+    def __post_init__(self):
+        if not 0.0 < self.fraction < 0.5:
+            raise ValueError(
+                f"trimmed fraction must be in (0, 0.5), got {self.fraction}")
+
+    @property
+    def name(self):
+        return f"trimmed:{self.fraction}"
+
+    def _trims(self, c: int) -> int:
+        k = max(1, int(math.ceil(self.fraction * c)))
+        if 2 * k >= c:  # tiny cohorts: keep at least one survivor
+            k = (c - 1) // 2
+        return k
+
+    def __call__(self, x, mask, stats):
+        c = x.shape[0]
+        k = self._trims(c)
+        flat = x.reshape(c, -1)
+        mcol = _mask_col(mask, c, x.dtype)
+        if mcol is not None:
+            # undelivered rows -> delivered mean: never an extreme, so
+            # dropout cannot consume the trim budget
+            n_del = jnp.maximum(jnp.sum(mcol), 1.0)
+            mean_del = jnp.sum(flat * mcol, axis=0, keepdims=True) / n_del
+            flat = mcol * flat + (1 - mcol) * mean_del
+        if k == 0:
+            agg = jnp.mean(flat, axis=0, keepdims=True)
+            _bump(stats, "uploads_trimmed", jnp.asarray(0.0, x.dtype))
+        else:
+            srt = jnp.sort(flat, axis=0)
+            agg = jnp.mean(srt[k:c - k], axis=0, keepdims=True)
+            lo, hi = srt[k:k + 1], srt[c - k - 1:c - k]
+            out = ((flat < lo) | (flat > hi)).astype(x.dtype)
+            if mcol is not None:
+                out = out * mcol
+            # row-equivalents trimmed: coordinate trims / n_coordinates
+            _bump(stats, "uploads_trimmed",
+                  jnp.sum(out) / flat.shape[1])
+        return jnp.broadcast_to(agg, flat.shape).reshape(x.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoordinateMedian(RobustAggregator):
+    """Coordinate-wise median over the delivered rows."""
+
+    name = "median"
+
+    def __call__(self, x, mask, stats):
+        c = x.shape[0]
+        flat = x.reshape(c, -1)
+        mcol = _mask_col(mask, c, x.dtype)
+        if mcol is None:
+            agg = jnp.median(flat, axis=0, keepdims=True)
+        else:
+            # delivered-only median: undelivered rows sort to +inf and
+            # the (traced) delivered count indexes the middle
+            big = jnp.where(mcol > 0, flat, jnp.inf)
+            srt = jnp.sort(big, axis=0)
+            n = jnp.sum(mcol[:, 0]).astype(jnp.int32)
+            n = jnp.maximum(n, 1)
+            agg = 0.5 * (srt[(n - 1) // 2] + srt[n // 2])[None, :]
+        return jnp.broadcast_to(agg, flat.shape).reshape(x.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainAggregator(RobustAggregator):
+    """Left-to-right composition of robust transforms."""
+
+    stages: "tuple[RobustAggregator, ...]" = ()
+
+    @property
+    def name(self):
+        return "+".join(s.name for s in self.stages)
+
+    def __call__(self, x, mask, stats):
+        for stage in self.stages:
+            x = stage(x, mask, stats)
+        return x
+
+
+def make_aggregator(
+        spec: "str | RobustAggregator") -> RobustAggregator:
+    """Parse ``"clip:tau" | "trimmed:f" | "median"`` (``"+"``-chainable,
+    e.g. ``"clip:5+trimmed:0.1"``) or pass an aggregator through."""
+    if isinstance(spec, RobustAggregator):
+        return spec
+    known = "clip:tau, trimmed:f, median"
+    stages = []
+    for part in str(spec).split("+"):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, rest = part.partition(":")
+        if kind not in ROBUST_KINDS:
+            raise ValueError(
+                f"unknown robust aggregator {part!r} in {spec!r}; "
+                f"expected one of {known}")
+        try:
+            if kind == "clip":
+                stages.append(ClipAggregator(tau=float(rest or 1.0)))
+            elif kind == "trimmed":
+                stages.append(TrimmedMean(fraction=float(rest or 0.1)))
+            else:
+                if rest:
+                    raise ValueError(
+                        f"median takes no parameters, got {part!r}")
+                stages.append(CoordinateMedian())
+        except ValueError as e:
+            if e.args and ("must be" in str(e) or "takes no" in str(e)):
+                raise
+            raise ValueError(
+                f"bad parameters in robust aggregator {part!r} (spec "
+                f"{spec!r}); expected one of {known}") from e
+    if not stages:
+        raise ValueError(
+            f"empty robust aggregator spec {spec!r}; expected one of {known}")
+    if len(stages) == 1:
+        return stages[0]
+    return ChainAggregator(stages=tuple(stages))

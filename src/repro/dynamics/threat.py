@@ -1,0 +1,123 @@
+"""Byzantine threat model: seeded clients corrupt their uplinks.
+
+A ``ThreatModel`` marks a deterministic, seeded subset of client ids as
+attackers (the subset is a pure per-id function, so the same clients
+attack in every driver and at any cohort composition) and corrupts
+their *uplink payloads inside the traced round*, BEFORE the codec runs
+— an attacker crafts what it puts on the wire, so compression and
+error feedback operate on the corrupted payload exactly as they would
+on an honest one. Downlinks are never corrupted (the server is honest).
+
+Attack kinds (spec grammar ``"kind:fraction[,param]"``, parsed by
+``make_threat``):
+
+  * ``"signflip:f"`` — attackers send ``-x`` (gradient/Hessian sign
+    flip; norm-preserving, so norm-clipping alone cannot filter it);
+  * ``"scale:f,c"`` — attackers send ``c * x`` (default ``c=10``, a
+    scaled-gradient / model-boosting attack that norm clipping defeats);
+  * ``"noise:f,s"`` — attackers replace the payload with ``N(0, s^2)``
+    noise (default ``s=1``, random-noise Hessian sketches / gradients).
+
+``payloads`` optionally restricts the attack to named payloads (e.g.
+only the ``"h_sk"`` Hessian sketch); the default corrupts every uplink
+the attacker sends — including scalar control payloads, which is the
+honest adversarial reading.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+THREAT_KINDS = ("signflip", "scale", "noise")
+
+_THREAT_TAG = zlib.crc32(b"repro.dynamics.threat")
+
+_DEFAULT_PARAM = {"signflip": 0.0, "scale": 10.0, "noise": 1.0}
+
+
+@functools.lru_cache(maxsize=None)
+def _attacker_sampler(fraction: float, salt: int):
+    """Compiled per-id attacker coin: pure in ``(fraction, salt, id)``."""
+    key0 = jax.random.PRNGKey(np.uint32(salt))
+
+    def one(cid):
+        return jax.random.uniform(jax.random.fold_in(key0, cid)) < fraction
+
+    return jax.jit(jax.vmap(one))
+
+
+@dataclasses.dataclass(frozen=True)
+class ThreatModel:
+    """Seeded Byzantine uplink corruption (see module docstring)."""
+
+    kind: str = "signflip"
+    fraction: float = 0.1
+    param: float = 0.0
+    payloads: "tuple | None" = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in THREAT_KINDS:
+            raise ValueError(
+                f"unknown threat kind {self.kind!r}; expected one of "
+                f"{', '.join(THREAT_KINDS)}")
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(
+                f"threat fraction must be in [0, 1], got {self.fraction}")
+
+    def applies(self, name: str) -> bool:
+        """Does the attack touch the uplink payload ``name``?"""
+        return self.payloads is None or name in self.payloads
+
+    def attacker_mask(self, ids) -> np.ndarray:
+        """(len(ids),) bool — is each client an attacker? Pure per-id:
+        the same ids attack in every cohort, round, and driver."""
+        ids = np.asarray(ids, dtype=np.int64)
+        salt = (_THREAT_TAG ^ (self.seed & 0xFFFFFFFF)) & 0xFFFFFFFF
+        coins = _attacker_sampler(float(self.fraction), salt)(
+            jnp.asarray(ids, jnp.uint32))
+        return np.asarray(coins, dtype=bool)
+
+    def corrupt(self, key: jax.Array, x: jax.Array,
+                attackers: jax.Array) -> jax.Array:
+        """Traced corruption of a stacked ``(c, ...)`` uplink payload;
+        ``attackers`` is the (c,) 0/1 attacker indicator."""
+        a = jnp.asarray(attackers, x.dtype).reshape(
+            (-1,) + (1,) * (x.ndim - 1))
+        if self.kind == "signflip":
+            bad = -x
+        elif self.kind == "scale":
+            bad = x * jnp.asarray(self.param, x.dtype)
+        else:  # noise
+            bad = jnp.asarray(self.param, x.dtype) * jax.random.normal(
+                key, x.shape, x.dtype)
+        return a * bad + (1 - a) * x
+
+
+def make_threat(spec: "str | ThreatModel", seed: int = 0) -> ThreatModel:
+    """Parse ``"signflip:f" | "scale:f[,c]" | "noise:f[,s]"`` or pass a
+    ``ThreatModel`` through."""
+    if isinstance(spec, ThreatModel):
+        return spec
+    kind, _, rest = str(spec).partition(":")
+    known = ", ".join(k + ":fraction" for k in THREAT_KINDS)
+    if kind not in THREAT_KINDS:
+        raise ValueError(
+            f"unknown threat spec {spec!r}; expected one of {known}")
+    try:
+        params = tuple(float(p) for p in rest.split(",") if p != "")
+    except ValueError:
+        raise ValueError(
+            f"bad parameters in threat spec {spec!r}; expected "
+            f"'{kind}:fraction[,param]'") from None
+    if len(params) not in (1, 2):
+        raise ValueError(
+            f"threat spec {spec!r} wants 1-2 parameters "
+            f"(fraction[, param]), got {len(params)}")
+    param = params[1] if len(params) == 2 else _DEFAULT_PARAM[kind]
+    return ThreatModel(kind=kind, fraction=params[0], param=param, seed=seed)

@@ -150,6 +150,12 @@ def render_summary(rec: dict) -> str:
     if extra_counters:
         lines.append("  counters: " + "  ".join(
             f"{k}={v:g}" for k, v in sorted(extra_counters.items())))
+    gauges = metrics.get("gauges", {})
+    if gauges:
+        # scenario-dynamics / EF state gauges (active_population,
+        # ef_memory_bytes, ...) — last-set values at run end
+        lines.append("  gauges: " + "  ".join(
+            f"{k}={v:g}" for k, v in sorted(gauges.items())))
     fl = rec.get("flight", {})
     if fl.get("total"):
         lines.append(

@@ -1,0 +1,428 @@
+"""Scenario dynamics: churn, time-varying channels, Byzantine robustness.
+
+Invariant families:
+
+  * **Off-switch bit-identity** — a null ``DynamicsConfig`` normalizes
+    away and every driver (sync, async, population) reproduces the
+    no-dynamics trajectory bit-for-bit.
+  * **Per-id determinism** — churn lifetimes, channel multipliers,
+    outage windows, and the attacker subset are pure functions of
+    ``(seed, client_id, round)``: identical across runs, drivers, and
+    cohort compositions.
+  * **Correlated outages** — every member of a dark region drops
+    together, something no iid dropout coin reproduces.
+  * **Robust aggregation** — clip bounds row norms, trimmed mean /
+    median defeat a minority of sign-flipped rows, undelivered rows
+    never consume the trim budget; end-to-end, ``trimmed`` recovers
+    most of the loss gap a sign-flip attack opens.
+  * **Bookkeeping** — departed clients' EF rows are retired (dense rows
+    zeroed; ``BoundedMemory`` slots freed and reused), and the
+    dynamics counters land in the telemetry summary.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import BoundedMemory, CommConfig
+from repro.comm.codecs import make_codec
+from repro.comm.scheduler import make_scheduler
+from repro.core import (
+    SyntheticPopulation,
+    make_optimizer,
+    make_problem,
+    newton_solve,
+    run_rounds,
+)
+from repro.core.losses import logistic
+from repro.data import make_classification
+from repro.dynamics import (
+    ChannelProcess,
+    DynamicsConfig,
+    make_aggregator,
+    make_churn,
+    make_threat,
+)
+from repro.obs import TelemetryConfig
+
+
+# ---------------------------------------------------------------------------
+# spec parsing: offending spec + known names in every error
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("maker,bad,fragment", [
+    (make_churn, "stepp:3", "step:"),
+    (make_churn, "step:frac=x", "step:"),
+    (make_threat, "gaussian:0.1", "signflip:"),
+    (make_aggregator, "trim:0.1", "clip:tau"),
+    (make_scheduler, "unifrom:0.5", "uniform:<q>"),
+    (make_codec, "fp8", "qint8"),
+    (lambda s: ChannelProcess(uplink_bytes_per_s=s), "cos:2,1", "sin:"),
+    (lambda s: ChannelProcess(outage=s), "outage:0.1", "p, dur[, groups]"),
+])
+def test_parse_errors_name_spec_and_alternatives(maker, bad, fragment):
+    """An unknown spec head is echoed back with the known alternatives."""
+    with pytest.raises(ValueError) as ei:
+        maker(bad)
+    msg = str(ei.value)
+    assert fragment in msg
+    # the offending spec itself is always quoted back
+    assert bad.split(":")[0] in msg
+
+
+@pytest.mark.parametrize("maker,bad,fragment", [
+    (make_threat, "signflip:2.0", "must be in [0, 1]"),
+    (make_aggregator, "trimmed:0.7", "must be in (0, 0.5)"),
+])
+def test_out_of_range_parameters_rejected(maker, bad, fragment):
+    with pytest.raises(ValueError, match="must be in"):
+        maker(bad)
+
+
+def test_null_dynamics_normalizes_away():
+    cfg = CommConfig(dynamics=DynamicsConfig())
+    assert cfg.dynamics is None
+    with pytest.raises(ValueError, match="DynamicsConfig"):
+        CommConfig(dynamics="signflip:0.1")
+
+
+def test_forces_mask_gate():
+    assert DynamicsConfig(churn="step:t=1").forces_mask
+    assert DynamicsConfig(
+        channel=ChannelProcess(outage="outage:0.1,2")).forces_mask
+    assert not DynamicsConfig(
+        channel=ChannelProcess(uplink_bytes_per_s="sin:8,0.5")).forces_mask
+    assert not DynamicsConfig(threat="signflip:0.1",
+                              robust="median").forces_mask
+
+
+# ---------------------------------------------------------------------------
+# churn
+# ---------------------------------------------------------------------------
+
+def test_step_churn_departs_once_at_t0():
+    ch = make_churn("step:t=3,frac=0.4", seed=7)
+    m = 200
+    before = ch.eligible_mask(2, m)
+    assert before.all()
+    after = ch.eligible_mask(3, m)
+    assert 0.2 < 1.0 - after.mean() < 0.6  # ~frac depart
+    np.testing.assert_array_equal(after, ch.eligible_mask(9, m))
+
+
+def test_churn_per_id_purity_and_determinism():
+    for spec in ("poisson:0.2", "lifetime:5,3"):
+        ch1 = make_churn(spec, seed=5)
+        ch2 = make_churn(spec, seed=5)
+        full = ch1.alive(np.arange(64), 4, 64)
+        # a sub-cohort sees exactly the full draw's restriction
+        sub = np.array([3, 17, 42])
+        np.testing.assert_array_equal(ch1.alive(sub, 4, 64), full[sub])
+        np.testing.assert_array_equal(full, ch2.alive(np.arange(64), 4, 64))
+        # a different seed is a different population
+        assert not np.array_equal(
+            full, make_churn(spec, seed=6).alive(np.arange(64), 4, 64))
+
+
+def test_poisson_churn_clients_come_and_go():
+    ch = make_churn("poisson:0.2", seed=1)
+    m = 50
+    alive = np.stack([ch.eligible_mask(t, m) for t in range(40)])
+    per_client_changes = (alive[1:] != alive[:-1]).sum(axis=0)
+    assert (per_client_changes > 0).any()  # departures happen
+    assert alive.any(axis=1).all()  # never a fully-dead round at this rate
+    # departures are spells, not coin flips: some client returns
+    came_back = ((~alive[:-1]) & alive[1:]).any()
+    assert came_back
+
+
+# ---------------------------------------------------------------------------
+# time-varying channels
+# ---------------------------------------------------------------------------
+
+def test_channel_multiplier_deterministic_across_cohorts():
+    cp = ChannelProcess(uplink_bytes_per_s="sin:24,0.5", seed=3)
+    full = cp.multiplier("uplink_bytes_per_s", np.arange(100), t=7)
+    sub = np.array([5, 50, 99])
+    np.testing.assert_array_equal(
+        cp.multiplier("uplink_bytes_per_s", sub, t=7), full[sub])
+    # bit-identical on a fresh construction (no hidden state)
+    cp2 = ChannelProcess(uplink_bytes_per_s="sin:24,0.5", seed=3)
+    np.testing.assert_array_equal(
+        cp2.multiplier("uplink_bytes_per_s", np.arange(100), t=7), full)
+    # fields draw independent phases
+    assert not np.array_equal(
+        cp.multiplier("uplink_bytes_per_s", np.arange(100), t=7),
+        ChannelProcess(latency_s="sin:24,0.5", seed=3).multiplier(
+            "latency_s", np.arange(100), t=7))
+
+
+def test_channel_multiplier_clipped_and_time_varying():
+    cp = ChannelProcess(uplink_bytes_per_s="sin:8,0.9+drift:0.5", seed=0)
+    vals = np.stack([
+        cp.multiplier("uplink_bytes_per_s", np.arange(32), t) for t in
+        range(16)])
+    assert (vals >= 0.05).all() and (vals <= 20.0).all()
+    assert (np.ptp(vals, axis=0) > 0).all()  # every link actually moves
+
+
+def test_outage_groups_are_correlated():
+    cp = ChannelProcess(outage="outage:0.5,3,4", seed=2)
+    m, groups = 64, 4
+    hit_any = False
+    for t in range(12):
+        dark = cp.outage_mask(np.arange(m), t)
+        for g in range(groups):
+            region = dark[np.arange(m) % groups == g]
+            # a region is all-dark or all-up — never split
+            assert region.all() or not region.any()
+        hit_any = hit_any or dark.any()
+        # constant within an outage window
+        np.testing.assert_array_equal(
+            dark, cp.outage_mask(np.arange(m), (t // 3) * 3))
+    assert hit_any  # p=0.5 over 4 windows x 4 groups: some region went dark
+
+
+# ---------------------------------------------------------------------------
+# threat + robust aggregation (unit level)
+# ---------------------------------------------------------------------------
+
+def test_attacker_subset_is_pure_per_id():
+    th = make_threat("signflip:0.3", seed=4)
+    full = th.attacker_mask(np.arange(500))
+    sub = np.array([7, 77, 477])
+    np.testing.assert_array_equal(th.attacker_mask(sub), full[sub])
+    assert 0.15 < full.mean() < 0.45
+
+
+def test_signflip_corrupts_exactly_the_attacker_rows():
+    th = make_threat("signflip:0.5", seed=0)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 5))
+    att = jnp.asarray(np.array([1, 0, 1, 0, 0, 0, 1, 0]), x.dtype)
+    out = th.corrupt(jax.random.PRNGKey(1), x, att)
+    np.testing.assert_array_equal(np.asarray(out[0]), -np.asarray(x[0]))
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(x[1]))
+
+
+def test_clip_bounds_row_norms_and_counts():
+    agg = make_aggregator("clip:1.0")
+    x = jnp.asarray(np.array([[3.0, 4.0], [0.3, 0.4], [0.0, 0.0]]))
+    stats = {}
+    out = agg(x, None, stats)
+    norms = np.linalg.norm(np.asarray(out), axis=1)
+    assert norms.max() <= 1.0 + 1e-12
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(x[1]))
+    assert float(stats["uploads_clipped"]) == 1.0
+
+
+def test_trimmed_mean_defeats_sign_flips():
+    rng = np.random.default_rng(0)
+    honest = rng.normal(1.0, 0.05, size=(10, 6))
+    x = honest.copy()
+    x[:2] = -x[:2] * 5  # 20% attackers, large negative outliers
+    agg = make_aggregator("trimmed:0.2")
+    out = np.asarray(agg(jnp.asarray(x), None, {}))
+    # every row carries the robust aggregate; it tracks the honest mean
+    np.testing.assert_allclose(out, out[:1].repeat(10, axis=0))
+    np.testing.assert_allclose(out[0], honest[2:].mean(axis=0), atol=0.05)
+
+
+def test_trimmed_mean_ignores_undelivered_rows():
+    x = np.ones((6, 4))
+    x[0] = 1e6  # undelivered garbage must not eat the trim budget
+    x[1] = -50.0  # the actual attacker
+    mask = jnp.asarray(np.array([0.0, 1, 1, 1, 1, 1]))
+    stats = {}
+    out = np.asarray(make_aggregator("trimmed:0.2")(
+        jnp.asarray(x), mask, stats))
+    np.testing.assert_allclose(out[2], np.ones(4), atol=1e-9)
+    assert float(stats["uploads_trimmed"]) > 0
+
+
+def test_median_is_delivered_only():
+    x = np.zeros((5, 3))
+    x[0] = 1e9  # undelivered
+    x[1:] = [[1, 1, 1], [2, 2, 2], [3, 3, 3], [4, 4, 4]]
+    mask = jnp.asarray(np.array([0.0, 1, 1, 1, 1]))
+    out = np.asarray(make_aggregator("median")(jnp.asarray(x), mask, {}))
+    np.testing.assert_allclose(out[0], [2.5, 2.5, 2.5])
+
+
+# ---------------------------------------------------------------------------
+# EF retirement under churn
+# ---------------------------------------------------------------------------
+
+def test_bounded_memory_retire_frees_and_zeroes():
+    spec = {"g": jax.ShapeDtypeStruct((4, 3), jnp.float64)}
+    store = BoundedMemory(spec, capacity=4)
+    store.gather([10, 11, 12, 13])
+    store.scatter([10, 11, 12, 13],
+                  {"g": jnp.ones((4, 3), jnp.float64)})
+    assert store.retire([11, 13, 99]) == 2  # 99 was never hot
+    assert store.retirements == 2
+    # freed slots are reused (no eviction needed at capacity)
+    rows = store.gather([10, 12, 20, 21])
+    assert store.evictions == 0
+    got = np.asarray(rows["g"])
+    np.testing.assert_array_equal(got[0], np.ones(3))  # 10 kept its row
+    np.testing.assert_array_equal(got[2], np.zeros(3))  # 20 starts clean
+    # slot invariant held: all four ids fit without eviction
+    assert store.retire([10, 12, 20, 21]) == 4
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the three drivers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def edge_problem():
+    X, y = make_classification(jax.random.PRNGKey(2), 600, 24)
+    prob = make_problem(X, y, m=6, lam=1e-3, objective=logistic)
+    w0 = jnp.zeros(prob.dim, jnp.float64)
+    w_star = newton_solve(prob, w0, iters=30)
+    return prob, w0, w_star
+
+
+def test_dynamics_disabled_bit_identical_all_drivers(edge_problem):
+    """A null DynamicsConfig must leave every driver's trajectory
+    untouched — the PR's backward-compatibility guarantee."""
+    prob, w0, w_star = edge_problem
+    opt = lambda: make_optimizer("flens", k=8)
+    h0 = run_rounds(opt(), prob, w0, w_star, rounds=3)
+    hs = run_rounds(opt(), prob, w0, w_star, rounds=3,
+                    comm=CommConfig(dynamics=DynamicsConfig()))
+    ha = run_rounds(opt(), prob, w0, w_star, rounds=3,
+                    comm=CommConfig(async_mode=True,
+                                    dynamics=DynamicsConfig()))
+    np.testing.assert_array_equal(h0.loss, hs.loss)
+    np.testing.assert_array_equal(h0.loss, ha.loss)
+
+    pop = SyntheticPopulation(m=16, dim=6, seed=4)
+    w0p = jnp.zeros(pop.dim, jnp.float64)
+    wsp = newton_solve(pop.eval_problem(), w0p)
+    hp0 = run_rounds(make_optimizer("flens", k=4), pop, w0p, wsp, rounds=3,
+                     comm=CommConfig())
+    hp1 = run_rounds(make_optimizer("flens", k=4), pop, w0p, wsp, rounds=3,
+                     comm=CommConfig(dynamics=DynamicsConfig()))
+    np.testing.assert_array_equal(hp0.loss, hp1.loss)
+
+
+def test_churn_shrinks_cohorts_and_is_reproducible(edge_problem):
+    prob, w0, w_star = edge_problem
+    mk = lambda: CommConfig(dynamics=DynamicsConfig(
+        churn="step:t=2,frac=0.5", seed=9))
+    h1 = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=4,
+                    comm=mk())
+    h2 = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=4,
+                    comm=mk())
+    np.testing.assert_array_equal(h1.loss, h2.loss)
+    sched = np.stack([t.scheduled for t in h1.traces])
+    assert sched[:2].all()  # everyone participates before the step
+    assert sched[2:].sum() < sched[:2].sum()  # departures bite after
+    # the departed set is persistent (step churn never returns)
+    np.testing.assert_array_equal(sched[2], sched[3])
+
+
+def test_outage_drops_whole_regions_in_round_traces(edge_problem):
+    prob, w0, w_star = edge_problem
+    cp = ChannelProcess(outage="outage:0.6,2,3", seed=11)
+    h = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=6,
+                   comm=CommConfig(dynamics=DynamicsConfig(channel=cp)))
+    m = prob.m
+    outage_rounds = 0
+    for t, tr in enumerate(h.traces):
+        dark = cp.outage_mask(np.arange(m), t)
+        # every scheduled member of a dark region fails to deliver
+        assert not (tr.delivered & dark).any() or dark.sum() == m
+        outage_rounds += int(dark.any())
+    assert outage_rounds > 0
+
+
+def test_sin_modulation_changes_round_times(edge_problem):
+    prob, w0, w_star = edge_problem
+    cp = ChannelProcess(uplink_bytes_per_s="sin:4,0.8", seed=0)
+    h = run_rounds(make_optimizer("flens", k=8), prob, w0, w_star, rounds=6,
+                   comm=CommConfig(dynamics=DynamicsConfig(channel=cp)))
+    h0 = run_rounds(make_optimizer("flens", k=8), prob, w0, w_star, rounds=6,
+                    comm=CommConfig())
+    times = np.array([t.sim_time_s for t in h.traces])
+    base = np.array([t.sim_time_s for t in h0.traces])
+    # modulation must move the clock round-to-round; the base is flat
+    assert np.ptp(times) > 10 * np.ptp(base)
+    # the trajectory itself is untouched (no outage => no mask change)
+    np.testing.assert_array_equal(h.loss, h0.loss)
+
+
+def test_signflip_attack_hurts_and_trimmed_recovers(edge_problem):
+    """The acceptance gate in miniature: a 1/3 sign-flip coalition
+    stalls FedAvg; the trimmed mean recovers most of the gap."""
+    prob, w0, w_star = edge_problem
+    rounds = 6
+    clean = run_rounds(make_optimizer("fedavg"), prob, w0, w_star,
+                       rounds=rounds, comm=CommConfig())
+    attacked = run_rounds(
+        make_optimizer("fedavg"), prob, w0, w_star, rounds=rounds,
+        comm=CommConfig(dynamics=DynamicsConfig(threat="signflip:0.34",
+                                                seed=1)))
+    defended = run_rounds(
+        make_optimizer("fedavg"), prob, w0, w_star, rounds=rounds,
+        comm=CommConfig(dynamics=DynamicsConfig(
+            threat="signflip:0.34", robust="trimmed:0.34", seed=1)))
+    gap_attacked = float(attacked.loss[-1] - clean.loss[-1])
+    gap_defended = float(defended.loss[-1] - clean.loss[-1])
+    assert gap_attacked > 0
+    assert gap_defended < 0.5 * gap_attacked  # >= 2x recovery
+
+
+def test_threat_deterministic_across_drivers(edge_problem):
+    """The same seeded coalition attacks in the sync and async drivers;
+    on the lockstep path (threat only — no mask change) the corrupted
+    trajectories still agree bit-for-bit."""
+    prob, w0, w_star = edge_problem
+    dk = dict(threat="scale:0.34,10", robust="clip:2.0", seed=2)
+    hs = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=4,
+                    comm=CommConfig(dynamics=DynamicsConfig(**dk)))
+    ha = run_rounds(make_optimizer("fedavg"), prob, w0, w_star, rounds=4,
+                    comm=CommConfig(async_mode=True,
+                                    dynamics=DynamicsConfig(**dk)))
+    np.testing.assert_array_equal(hs.loss, ha.loss)
+
+
+def test_population_dynamics_deterministic():
+    pop = SyntheticPopulation(m=64, dim=8, seed=3)
+    w0 = jnp.zeros(pop.dim, jnp.float64)
+    w_star = newton_solve(pop.eval_problem(), w0)
+    mk = lambda: CommConfig(
+        scheduler="uniform:0.25", async_mode=True, buffer_size=4,
+        dynamics=DynamicsConfig(
+            churn="poisson:0.1",
+            channel=ChannelProcess(uplink_bytes_per_s="sin:8,0.5",
+                                   outage="outage:0.2,2,4", seed=1),
+            threat="signflip:0.2", robust="trimmed:0.25", seed=5))
+    h1 = run_rounds(make_optimizer("flens", k=4), pop, w0, w_star,
+                    rounds=5, comm=mk())
+    h2 = run_rounds(make_optimizer("flens", k=4), pop, w0, w_star,
+                    rounds=5, comm=mk())
+    np.testing.assert_array_equal(h1.loss, h2.loss)
+    for t1, t2 in zip(h1.traces, h2.traces):
+        np.testing.assert_array_equal(t1.ids, t2.ids)
+        np.testing.assert_array_equal(t1.delivered, t2.delivered)
+
+
+def test_dynamics_counters_in_telemetry(edge_problem):
+    prob, w0, w_star = edge_problem
+    cp = ChannelProcess(outage="outage:0.4,2,3", seed=11)
+    h = run_rounds(
+        make_optimizer("fedavg"), prob, w0, w_star, rounds=6,
+        comm=CommConfig(dynamics=DynamicsConfig(
+            churn="step:t=3,frac=0.5", channel=cp,
+            threat="signflip:0.34", robust="clip:0.5+trimmed:0.34",
+            seed=1)),
+        obs=TelemetryConfig())
+    counters = h.telemetry["metrics"]["counters"]
+    assert counters["uploads_corrupted"] > 0
+    assert counters["uploads_clipped"] > 0
+    assert counters["uploads_trimmed"] > 0
+    assert counters.get("clients_departed", 0) > 0
+    gauges = h.telemetry["metrics"]["gauges"]
+    assert 0 < gauges["active_population"] < prob.m
