@@ -1,0 +1,20 @@
+"""Static analysis: repo-specific lint rules + the jaxpr trace auditor.
+
+Two passes behind one CLI (``python -m repro.analysis [lint|audit|all]``):
+``repro.analysis.lint`` (AST rules RA000–RA006 over ``src/repro/**``)
+and ``repro.analysis.audit`` (traces every optimizer's jitted round
+across codecs x session drivers and checks retrace stability, the
+dtype census, constant bloat, forbidden primitives, and wire
+consistency). Findings diff against ``results/analysis_baseline.json``.
+"""
+from repro.analysis.findings import Finding, diff_baseline, load_baseline
+from repro.analysis.lint import RULES, lint_repo, lint_source
+
+__all__ = [
+    "Finding",
+    "RULES",
+    "diff_baseline",
+    "lint_repo",
+    "lint_source",
+    "load_baseline",
+]

@@ -1,0 +1,70 @@
+"""CLI: ``python -m repro.analysis [lint|audit|all] [options]``.
+
+Exit status 0 when every finding is baselined (or none exist), 1 when
+NEW findings appear relative to ``--baseline``. ``--update`` rewrites
+the baseline to the current finding set instead of failing.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.findings import diff_baseline, load_baseline, save_baseline
+from repro.analysis.lint import lint_repo
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("mode", nargs="?", default="all",
+                    choices=("lint", "audit", "all"))
+    ap.add_argument("--baseline", default="results/analysis_baseline.json")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline to the current findings")
+    ap.add_argument("--root", default=".",
+                    help="repo root holding src/repro (lint scope)")
+    ap.add_argument("--optimizers", default=None,
+                    help="comma list restricting the audited optimizers")
+    ap.add_argument("--sessions", default=None,
+                    help="comma list restricting the audited drivers "
+                         "(sync,async,population)")
+    ap.add_argument("--codecs", default=None,
+                    help="comma list restricting the audited codec legs "
+                         "(identity,topk,sympack)")
+    ap.add_argument("--no-dynamic", action="store_true",
+                    help="skip the instrumented retrace cross-check runs")
+    args = ap.parse_args(argv)
+
+    findings = []
+    if args.mode in ("lint", "all"):
+        findings += lint_repo(args.root)
+    if args.mode in ("audit", "all"):
+        from repro.analysis.audit import audit_repo
+
+        split = (lambda s: [x for x in s.split(",") if x] if s else None)
+        findings += audit_repo(
+            optimizers=split(args.optimizers),
+            sessions=split(args.sessions),
+            codecs=split(args.codecs),
+            dynamic=not args.no_dynamic)
+
+    if args.update:
+        save_baseline(args.baseline, findings)
+        print(f"baseline updated: {len(findings)} finding(s) -> "
+              f"{args.baseline}")
+        return 0
+
+    diff = diff_baseline(findings, load_baseline(args.baseline))
+    for f in diff.new:
+        print(f"NEW      {f.render()}")
+    for f in diff.accepted:
+        print(f"ACCEPTED {f.render()}")
+    if diff.resolved:
+        print(f"resolved {len(diff.resolved)} baselined finding(s) — "
+              f"rerun with --update to record the progress")
+    print(f"{args.mode}: {len(diff.new)} new, {len(diff.accepted)} "
+          f"accepted, {len(diff.resolved)} resolved")
+    return 1 if diff.failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,571 @@
+"""Layer 2: the jaxpr trace auditor.
+
+Traces every optimizer's jitted round — the EXACT closure ``run_rounds``
+jits, via ``repro.core.base.build_round`` — across a combo matrix of
+codecs x session drivers, and statically checks the jaxprs for the
+invariants the dynamic tests only cover on the paths they execute:
+
+  * **retrace stability** — re-tracing the round with its own output
+    avals must reproduce an identical jaxpr fingerprint (shape/dtype/
+    weak-type drift in the carried state is exactly what forces the
+    one-jaxpr-per-config guarantee to silently retrace every round);
+  * **dtype census** — no float64/complex128 avals anywhere in the
+    round when x64 is off (run under both settings in the nightly), and
+    no weak-type promotion leaking into the carried state;
+  * **constant bloat** — closure-captured constants above a size
+    threshold baked into the jaxpr (the dense-population regression
+    class PR 7 fixed by hand); the dense problem's own shards are the
+    one allowlisted capture, population mode is strict;
+  * **forbidden primitives** — no ``pure_callback`` / ``io_callback`` /
+    ``debug_callback`` / ``debug_print`` inside round bodies
+    (host round-trips break the pure-round contract and async replay);
+  * **wire consistency** — every ``uplink``/``downlink`` occurrence's
+    billed plan bytes equal its codec's ``nbytes`` over the aval shape
+    actually traced, the plan filled by the real jit trace matches an
+    independent ``eval_shape`` probe, and payloads untargeted by a
+    scoped ``ThreatModel`` stay byte-identical to the threat-free round.
+
+A dynamic cross-check (``audit_retraces_dynamic``) additionally runs a
+short instrumented trajectory per driver and asserts the ``repro.obs``
+``variant_retraces`` counter stayed zero — the runtime witness the
+static fingerprint check is cross-checked against.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.comm import CommConfig, make_session
+from repro.comm.config import CommRound
+from repro.core import ALGORITHMS, make_optimizer
+from repro.core.base import build_round, root_key
+from repro.core.federated import SyntheticPopulation, make_problem
+from repro.core.losses import logistic
+from repro.dynamics import DynamicsConfig
+
+SESSIONS = ("sync", "async", "population")
+
+# codec legs: lossless identity (the bit-exactness contract), a lossy
+# default over every payload, and a payload-scoped spectral codec
+CODECS: Dict[str, dict] = {
+    "identity": {},
+    "topk": {"default": "topk0.25"},
+    "sympack": {"h_sk": "sympack"},
+}
+
+# jaxpr primitives that must never appear inside a round body
+FORBIDDEN_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "debug_print",
+    "callback",
+})
+
+# constants larger than this many bytes count as bloat at audit scale
+# (the toy problems below keep every legitimate capture well under it)
+CONST_BLOAT_BYTES = 4096
+
+_AUDIT_SEED = 0
+_DIM = 8
+_M = 4
+_K = 4
+
+
+def combos(optimizers: Optional[Iterable[str]] = None,
+           sessions: Optional[Iterable[str]] = None,
+           codecs: Optional[Iterable[str]] = None) -> List[tuple]:
+    """The audited (optimizer, session, codec) matrix. FedNew keeps
+    dense per-client ADMM duals and is rejected by population mode by
+    design, so that one combination is skipped (not silently passed)."""
+    opts = tuple(optimizers) if optimizers is not None else ALGORITHMS
+    sess = tuple(sessions) if sessions is not None else SESSIONS
+    cods = tuple(codecs) if codecs is not None else tuple(CODECS)
+    out = []
+    for o in opts:
+        for s in sess:
+            if s == "population" and o == "fednew":
+                continue  # per_client_state: rejected by the driver
+            for c in cods:
+                out.append((o, s, c))
+    return out
+
+
+def _make_optimizer(name: str):
+    if name in ("flens", "flens_plus", "fedns"):
+        return make_optimizer(name, k=_K)
+    return make_optimizer(name)
+
+
+def _toy_problem(seed: int = _AUDIT_SEED):
+    key = root_key(seed, 17)
+    kx, ky = jax.random.split(key)
+    n = _M * 8
+    X = jax.random.normal(kx, (n, _DIM))
+    y = jnp.sign(jax.random.normal(ky, (n,)) + 0.1)
+    return make_problem(X, y, m=_M, lam=1e-3, objective=logistic)
+
+
+def _toy_population(seed: int = _AUDIT_SEED):
+    return SyntheticPopulation(m=64, dim=_DIM, lam=1e-3, seed=seed,
+                               n_per_client=8)
+
+
+def _comm_config(session: str, codec: str,
+                 dynamics: "DynamicsConfig | None" = None) -> CommConfig:
+    kw: Dict[str, Any] = {"codecs": dict(CODECS[codec]),
+                          "seed": _AUDIT_SEED}
+    if dynamics is not None:
+        kw["dynamics"] = dynamics
+    if session == "async":
+        kw["async_mode"] = True
+    if session == "population":
+        kw["scheduler"] = "uniform:0.25"
+    return CommConfig(**kw)
+
+
+class _AuditTarget:
+    """One combo's fully-wired round: session prepared, probe arguments
+    shaped exactly as the driver's first ``step`` would pass them."""
+
+    def __init__(self, optimizer, session: str, codec: str,
+                 dynamics: "DynamicsConfig | None" = None):
+        # tests pass deliberately-broken optimizer INSTANCES; the CLI
+        # passes registry names
+        opt = self.opt = (_make_optimizer(optimizer)
+                          if isinstance(optimizer, str) else optimizer)
+        name = optimizer if isinstance(optimizer, str) else opt.name
+        self.id = f"{name}/{session}/{codec}"
+        self.optimizer, self.session_kind = name, session
+        comm = self.comm = _comm_config(session, codec, dynamics)
+        population = None
+        if session == "population":
+            population = _toy_population()
+            problem = population.eval_problem()
+        else:
+            problem = _toy_problem()
+        self.problem, self.population = problem, population
+        state = opt.init(problem, jnp.zeros((problem.dim,), problem.X.dtype))
+        self.keys = jax.random.split(root_key(_AUDIT_SEED), 2)
+        m = population.m if population is not None else problem.m
+        sess = self.sess = make_session(
+            comm, m=m, mask_dtype=problem.X.dtype,
+            client_weights=(population.client_weights
+                            if population is not None
+                            else np.asarray(problem.client_weights)),
+            keys=self.keys, state0=state, formula_bytes_per_round=0.0,
+            population=population)
+        probe_key = root_key(_AUDIT_SEED)
+        self._round, self.trace_with = build_round(
+            opt, problem, sess, probe_key,
+            population=population, comm=comm)
+        sess.prepare(self.trace_with(state))
+        self.state0 = state
+        self.args = self._probe_args(state)
+
+    def _probe_args(self, state) -> tuple:
+        """Concrete first-round arguments, built the way the driver's
+        ``step`` builds them (``begin_round`` for the sync clocks, the
+        lockstep mask + version-0 keys for the async one)."""
+        sess = self.sess
+        if self.session_kind == "async":
+            if sess.lockstep:
+                mask = None
+            else:
+                mask = jnp.asarray(np.ones(sess.m), sess._mask_dtype)
+            _, _, k_codec = sess._round_keys(0)
+            return (state, sess.ef_memory, self.keys[0],
+                    sess._pack_threat(mask), k_codec)
+        if self.population is not None:
+            ids, mask, ck = sess.begin_round(0)
+            cohort = sess._materialize(ids)
+            memory = sess.ef_store.gather(ids) if sess.ef_store else {}
+            return (cohort, state, memory, self.keys[0], mask, ck)
+        mask, ck = sess.begin_round(0)
+        return (state, sess.ef_memory, self.keys[0], mask, ck)
+
+    # -- traced artifacts ----------------------------------------------------
+    def closed_jaxpr(self, args=None):
+        return jax.make_jaxpr(self._round)(*(args or self.args))
+
+    def out_avals(self, args=None):
+        return jax.eval_shape(self._round, *(args or self.args))
+
+
+def _fingerprint(closed) -> str:
+    """Stable jaxpr identity: the printed jaxpr (no const values) plus
+    every closed-over constant's aval."""
+    h = hashlib.sha256()
+    h.update(str(closed.jaxpr).encode())
+    for c in closed.consts:
+        a = jnp.asarray(c)
+        h.update(f"{a.shape}:{a.dtype}".encode())
+    return h.hexdigest()[:16]
+
+
+def _walk_jaxprs(jaxpr):
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)  # ClosedJaxpr -> Jaxpr
+    yield jaxpr
+    is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")  # noqa: E731 — local predicate, not worth a def
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
+                if is_sub(sub):
+                    yield from _walk_jaxprs(sub)
+
+
+def _all_avals(jaxpr):
+    for j in _walk_jaxprs(jaxpr):
+        for v in j.invars + j.constvars + j.outvars:
+            if hasattr(v, "aval") and hasattr(v.aval, "dtype"):
+                yield v.aval
+        for eqn in j.eqns:
+            for v in eqn.outvars:
+                if hasattr(v, "aval") and hasattr(v.aval, "dtype"):
+                    yield v.aval
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(
+            jnp.shape(x), jnp.asarray(x).dtype if not hasattr(x, "dtype")
+            else x.dtype, weak_type=getattr(x, "weak_type", False)),
+        tree)
+
+
+# -- check families ----------------------------------------------------------
+
+def check_retrace(target: _AuditTarget) -> List[Finding]:
+    """Round-2 trace (fed the round-1 output avals) must fingerprint
+    identically to the round-1 trace, and the carried state/memory must
+    keep shape, dtype and weak-type bit-for-bit."""
+    out: List[Finding] = []
+    jx1 = target.closed_jaxpr()
+    state_out, mem_out, _ = target.out_avals()
+
+    args = target.args
+    if target.population is not None:
+        cohort, state_in, mem_in, key, mask, ck = args
+        args2 = (_sds(cohort), state_out, mem_out, key, mask, ck)
+    else:
+        state_in, mem_in, key, mask, ck = args
+        args2 = (state_out, mem_out, key, mask, ck)
+
+    in_sds = jax.tree_util.tree_map(
+        lambda x: (jnp.shape(x), jnp.asarray(x).dtype), (state_in, mem_in))
+    out_sds = jax.tree_util.tree_map(
+        lambda x: (x.shape, x.dtype), (state_out, mem_out))
+    if in_sds != out_sds:
+        out.append(Finding(
+            code="AUDIT-RETRACE", path=target.id, line=0,
+            message=f"carried state avals drift across the round: "
+                    f"{in_sds} -> {out_sds}",
+            context="carry-aval-drift"))
+        return out  # a drifted carry retraces by construction
+
+    weak = [p for p, x in _tree_items(state_out)
+            if getattr(x, "weak_type", False)]
+    weak += [p for p, x in _tree_items(mem_out)
+             if getattr(x, "weak_type", False)]
+    if weak:
+        out.append(Finding(
+            code="AUDIT-WEAKTYPE", path=target.id, line=0,
+            message=f"weak-type promotion leaks into the carried state "
+                    f"at {weak} (round 2 would retrace)",
+            context=f"weak:{sorted(weak)}"))
+
+    jx2 = target.closed_jaxpr(args2)
+    f1, f2 = _fingerprint(jx1), _fingerprint(jx2)
+    if f1 != f2:
+        out.append(Finding(
+            code="AUDIT-RETRACE", path=target.id, line=0,
+            message=f"jaxpr fingerprint unstable across rounds "
+                    f"({f1} != {f2})",
+            context="fingerprint-drift"))
+    return out
+
+
+def _tree_items(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), x) for p, x in flat]
+
+
+def check_dtypes(target: _AuditTarget) -> List[Finding]:
+    """No f64/c128 avals anywhere in the round unless x64 is on."""
+    if jax.config.jax_enable_x64:
+        return []  # f64 is the expected problem dtype under x64
+    bad = set()
+    for aval in _all_avals(target.closed_jaxpr().jaxpr):
+        if aval.dtype in (jnp.dtype("float64"), jnp.dtype("complex128")):
+            bad.add(str(aval.dtype))
+    if bad:
+        return [Finding(
+            code="AUDIT-DTYPE", path=target.id, line=0,
+            message=f"{sorted(bad)} avals traced with x64 disabled "
+                    f"(silent downcast at runtime)",
+            context=f"dtypes:{sorted(bad)}")]
+    return []
+
+
+def check_const_bloat(target: _AuditTarget,
+                      threshold: int = CONST_BLOAT_BYTES) -> List[Finding]:
+    """Closure-captured constants above the threshold. The dense
+    problem's own shards are the one legitimate capture (dense mode
+    closes over the problem by design); population mode allows none —
+    the cohort is a traced argument, a big constant there is exactly
+    the regression class PR 7 fixed."""
+    closed = target.closed_jaxpr()
+    allowed = {id(leaf) for leaf in jax.tree_util.tree_leaves(
+        target.problem)} if target.population is None else set()
+    allowed_sds = {(jnp.shape(x), str(jnp.asarray(x).dtype))
+                   for x in jax.tree_util.tree_leaves(target.problem)
+                   } if target.population is None else set()
+    out: List[Finding] = []
+    for c in closed.consts:
+        a = jnp.asarray(c)
+        nbytes = int(np.prod(a.shape)) * a.dtype.itemsize
+        if nbytes < threshold:
+            continue
+        if id(c) in allowed or (a.shape, str(a.dtype)) in allowed_sds:
+            continue
+        out.append(Finding(
+            code="AUDIT-CONST", path=target.id, line=0,
+            message=f"closure-captured constant {a.shape}:{a.dtype} "
+                    f"({nbytes} B) baked into the round jaxpr",
+            context=f"const:{a.shape}:{a.dtype}"))
+    return out
+
+
+def check_primitives(target: _AuditTarget) -> List[Finding]:
+    out: List[Finding] = []
+    seen = set()
+    for j in _walk_jaxprs(target.closed_jaxpr().jaxpr):
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            if name in FORBIDDEN_PRIMITIVES and name not in seen:
+                seen.add(name)
+                out.append(Finding(
+                    code="AUDIT-PRIMITIVE", path=target.id, line=0,
+                    message=f"forbidden primitive {name!r} inside the "
+                            f"round body (host round-trip in traced code)",
+                    context=f"primitive:{name}"))
+    return out
+
+
+class _RecordingRound(CommRound):
+    """CommRound that records every payload occurrence's billed shape
+    and dtype as traced (uplink payloads drop the leading client axis
+    unless a native ``wire_shape`` overrides it)."""
+
+    def __init__(self, *args, record, **kw):
+        super().__init__(*args, **kw)
+        self._record = record
+
+    def uplink(self, name, x, wire_shape=None, ef_eligible=True,
+               ef_reset=None):
+        occ = self._occurrences.get(name, 0)
+        pkey = name if occ == 0 else f"{name}#{occ}"
+        shape = (tuple(wire_shape) if wire_shape is not None
+                 else tuple(jnp.shape(x)[1:]))
+        self._record[pkey] = (name, shape, jnp.asarray(x).dtype)
+        return super().uplink(name, x, wire_shape=wire_shape,
+                              ef_eligible=ef_eligible, ef_reset=ef_reset)
+
+    def downlink(self, name, x, wire_shape=None):
+        from repro.comm.config import DOWN
+
+        dname = f"{DOWN}{name}"
+        occ = self._occurrences.get(dname, 0)
+        pkey = dname if occ == 0 else f"{dname}#{occ}"
+        shape = (tuple(wire_shape) if wire_shape is not None
+                 else tuple(jnp.shape(x)))
+        self._record[pkey] = (dname, shape, jnp.asarray(x).dtype)
+        return super().downlink(name, x, wire_shape=wire_shape)
+
+
+def _recorded_probe(target: _AuditTarget):
+    """Abstract probe of the round through a recording CommRound:
+    returns ``(plan, record)`` filled by one eval_shape pass."""
+    sess = target.sess
+    plan: Dict[str, int] = {}
+    record: Dict[str, tuple] = {}
+    trace_round = target.trace_with(target.state0)
+
+    args = target.args
+    mask, ck = args[-2], args[-1]
+
+    def probe(mask, ck):
+        cr = _RecordingRound(target.comm, plan, mask, ck,
+                             memory=dict(args[-4] if target.population
+                                         is not None else args[1]),
+                             record=record)
+        return trace_round(cr)
+
+    jax.eval_shape(probe, mask, ck)
+    return plan, record, sess
+
+
+def check_wire(target: _AuditTarget) -> List[Finding]:
+    """Billed plan bytes == codec.nbytes(traced aval shape) for every
+    payload occurrence, in both directions; and the plan the real jit
+    trace filled agrees with the independent probe."""
+    out: List[Finding] = []
+    probe_plan, record, sess = _recorded_probe(target)
+
+    for pkey, (name, shape, dtype) in sorted(record.items()):
+        codec = target.comm.codec_for(name)
+        expect = codec.nbytes(shape, dtype)
+        billed = probe_plan.get(pkey)
+        if billed != expect:
+            out.append(Finding(
+                code="AUDIT-WIRE", path=target.id, line=0,
+                message=f"payload {pkey!r}: billed {billed} B, codec "
+                        f"prices {expect} B for {shape}:{dtype}",
+                context=f"wire:{pkey}"))
+    missing = set(probe_plan) - set(record)
+    if missing:
+        out.append(Finding(
+            code="AUDIT-WIRE", path=target.id, line=0,
+            message=f"plan bills occurrences never traced: "
+                    f"{sorted(missing)}",
+            context=f"wire-extra:{sorted(missing)}"))
+
+    # the plan the REAL jit trace filled (during closed_jaxpr) must
+    # agree with the independent probe — a drift here means accounting
+    # and execution see different payload shapes
+    target.closed_jaxpr()  # ensure the live plan is filled
+    live = dict(sess.plan)
+    if live and live != probe_plan:
+        out.append(Finding(
+            code="AUDIT-WIRE", path=target.id, line=0,
+            message=f"live trace plan {live} != probe plan {probe_plan}",
+            context="wire-plan-drift"))
+    return out
+
+
+def check_threat_scope(optimizer: str = "fedavg",
+                       payload: str = "w_local") -> List[Finding]:
+    """Scoped-threat byte identity: with a ``ThreatModel`` restricted
+    to ``payloads=(payload,)``, every OTHER uplink of the eager round
+    must be byte-identical to the threat-free round, and the targeted
+    payload must differ on attacker rows."""
+    out: List[Finding] = []
+    dyn = DynamicsConfig(threat=f"signflip:0.5@{payload}", seed=3)
+
+    def eager_uplinks(dynamics):
+        t = _AuditTarget(optimizer, "sync", "identity", dynamics=dynamics)
+        captured: Dict[str, jax.Array] = {}
+
+        class _Capture(_RecordingRound):
+            def uplink(self, name, x, **kw):
+                y = super().uplink(name, x, **kw)
+                captured[name] = y
+                return y
+
+        args = t.args
+        state, mem, key, mask, ck = args
+        cr = _Capture(t.comm, {}, mask, ck, memory=dict(mem), record={})
+        t.opt.round(t.problem, state, key, comm=cr)
+        attackers = (dynamics.threat.attacker_mask(np.arange(t.sess.m))
+                     if dynamics is not None and dynamics.threat is not None
+                     else np.zeros(t.sess.m, dtype=bool))
+        return captured, attackers
+
+    clean, _ = eager_uplinks(None)
+    scoped, attackers = eager_uplinks(dyn)
+    if payload not in scoped:
+        out.append(Finding(
+            code="AUDIT-THREAT", path=f"{optimizer}/threat-scope", line=0,
+            message=f"targeted payload {payload!r} never uplinked by "
+                    f"{optimizer} — scope check is vacuous",
+            context="threat-missing-payload"))
+        return out
+    for name in clean:
+        a, b = np.asarray(clean[name]), np.asarray(scoped[name])
+        if name == payload:
+            if attackers.any() and np.array_equal(a, b):
+                out.append(Finding(
+                    code="AUDIT-THREAT", path=f"{optimizer}/threat-scope",
+                    line=0,
+                    message=f"targeted payload {name!r} unchanged under "
+                            f"a scoped threat with live attackers",
+                    context=f"threat-not-applied:{name}"))
+        elif not np.array_equal(a, b):
+            out.append(Finding(
+                code="AUDIT-THREAT", path=f"{optimizer}/threat-scope",
+                line=0,
+                message=f"untargeted payload {name!r} not byte-identical "
+                        f"under a threat scoped to {payload!r}",
+                context=f"threat-leak:{name}"))
+    return out
+
+
+def audit_combo(optimizer: str, session: str, codec: str) -> List[Finding]:
+    target = _AuditTarget(optimizer, session, codec)
+    out: List[Finding] = []
+    out += check_retrace(target)
+    out += check_dtypes(target)
+    out += check_const_bloat(target)
+    out += check_primitives(target)
+    out += check_wire(target)
+    return out
+
+
+def audit_retraces_dynamic(
+        optimizers: Iterable[str] = ("flens", "fedavg", "fednl"),
+        sessions: Iterable[str] = SESSIONS) -> List[Finding]:
+    """Run short instrumented trajectories and assert the ``repro.obs``
+    ``variant_retraces`` counter stayed zero — the runtime witness the
+    static fingerprint check cross-checks against."""
+    from repro.core.base import run_rounds
+    from repro.obs import TelemetryConfig
+
+    out: List[Finding] = []
+    for o in optimizers:
+        for s in sessions:
+            if s == "population" and o == "fednew":
+                continue
+            comm = _comm_config(s, "identity")
+            if s == "population":
+                problem: Any = _toy_population()
+                dim = _DIM
+            else:
+                problem = _toy_problem()
+                dim = problem.dim
+            opt = _make_optimizer(o)
+            w0 = jnp.zeros((dim,),
+                           problem.eval_problem().X.dtype
+                           if s == "population" else problem.X.dtype)
+            hist = run_rounds(opt, problem, w0, w0, rounds=3,
+                              seed=_AUDIT_SEED, comm=comm,
+                              obs=TelemetryConfig(sink="null"))
+            counters = (hist.telemetry or {}).get(
+                "metrics", {}).get("counters", {})
+            n = counters.get("variant_retraces", 0)
+            if n:
+                out.append(Finding(
+                    code="AUDIT-RETRACE", path=f"{o}/{s}/identity", line=0,
+                    message=f"obs variant_retraces counter hit {n} over a "
+                            f"3-round single-variant trajectory",
+                    context="dynamic-retrace-counter"))
+    return out
+
+
+def audit_repo(optimizers: Optional[Iterable[str]] = None,
+               sessions: Optional[Iterable[str]] = None,
+               codecs: Optional[Iterable[str]] = None,
+               *, dynamic: bool = True,
+               threat_scope: bool = True) -> List[Finding]:
+    """The full audit: every combo's static checks, the threat-scope
+    byte-identity check, and the dynamic retrace cross-check."""
+    out: List[Finding] = []
+    for o, s, c in combos(optimizers, sessions, codecs):
+        out.extend(audit_combo(o, s, c))
+    if threat_scope:
+        out.extend(check_threat_scope())
+    if dynamic:
+        out.extend(audit_retraces_dynamic(
+            sessions=tuple(sessions) if sessions is not None else SESSIONS))
+    return out

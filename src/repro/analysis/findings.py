@@ -1,0 +1,118 @@
+"""Finding records + the committed-baseline diff protocol.
+
+Both analysis passes (``repro.analysis.lint``, ``repro.analysis.audit``)
+emit ``Finding`` records. A finding's *fingerprint* deliberately
+excludes the line number — it hashes the rule code, the repo-relative
+path, and a context snippet (the stripped source line for lint, the
+check-specific detail key for audit) — so unrelated edits that shift
+line numbers never churn the committed baseline, while a genuinely new
+violation always diffs as new.
+
+Baseline workflow (mirrors the benchmark regression gate):
+
+  * ``python -m repro.analysis all`` — findings diff against
+    ``results/analysis_baseline.json``; NEW findings fail (exit 1),
+    baselined ones are reported as accepted debt, fixed ones as
+    resolved.
+  * ``--update`` rewrites the baseline to the current finding set (the
+    reviewed way to accept debt or record progress).
+
+The committed baseline is empty: every pre-existing violation was
+either fixed or given an inline ``# noqa: RAxxx — why`` sanction in the
+PR that introduced this layer, so any finding is a regression.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation: a lint rule hit or an audit check failure."""
+
+    code: str  # "RA001" ... (lint) or "AUDIT-*" (trace auditor)
+    path: str  # repo-relative file path, or the audited combo id
+    line: int  # 1-based line (0 for audit findings — no source span)
+    message: str
+    context: str = ""  # fingerprint anchor: source line / check detail
+
+    @property
+    def fingerprint(self) -> str:
+        h = hashlib.sha256()
+        h.update(self.code.encode())
+        h.update(b"\0")
+        h.update(self.path.encode())
+        h.update(b"\0")
+        h.update(self.context.strip().encode())
+        return h.hexdigest()[:16]
+
+    @property
+    def span(self) -> str:
+        return f"{self.path}:{self.line}" if self.line else self.path
+
+    def render(self) -> str:
+        return f"{self.span}: {self.code} {self.message}"
+
+    def to_dict(self) -> dict:
+        return {
+            "code": self.code,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "context": self.context,
+            "fingerprint": self.fingerprint,
+        }
+
+
+_BASELINE_SCHEMA = "repro.analysis/v1"
+
+
+def load_baseline(path) -> "set[str]":
+    """Accepted-finding fingerprints from a committed baseline JSON
+    (missing file = empty baseline: everything is new)."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return set()
+    doc = json.loads(p.read_text())
+    if doc.get("schema") != _BASELINE_SCHEMA:
+        raise ValueError(
+            f"{path}: baseline schema {doc.get('schema')!r} != "
+            f"{_BASELINE_SCHEMA!r}")
+    return {f["fingerprint"] for f in doc.get("findings", [])}
+
+
+def save_baseline(path, findings: List[Finding]) -> None:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "schema": _BASELINE_SCHEMA,
+        "findings": sorted((f.to_dict() for f in findings),
+                           key=lambda d: (d["path"], d["code"], d["line"])),
+    }
+    p.write_text(json.dumps(doc, indent=2) + "\n")
+
+
+@dataclasses.dataclass
+class Diff:
+    """Current findings split against the baseline fingerprints."""
+
+    new: List[Finding]
+    accepted: List[Finding]  # still present, already baselined
+    resolved: "set[str]"  # baselined fingerprints no longer found
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.new)
+
+
+def diff_baseline(findings: List[Finding],
+                  baseline: Optional["set[str]"]) -> Diff:
+    baseline = baseline or set()
+    new = [f for f in findings if f.fingerprint not in baseline]
+    accepted = [f for f in findings if f.fingerprint in baseline]
+    current = {f.fingerprint for f in findings}
+    return Diff(new=new, accepted=accepted, resolved=baseline - current)

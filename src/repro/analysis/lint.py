@@ -1,0 +1,320 @@
+"""Layer 1: repo-specific AST lint rules (RAxxx).
+
+The invariants every headline claim rests on — seeded determinism, one
+PRNG discipline, the x64 boundary, the ``repro.obs`` warning funnel —
+are conventions until something checks them. These rules check them at
+the AST level over ``src/repro/**``:
+
+  RA000  a ``# noqa: RAxxx`` suppression without a trailing
+         justification comment (every sanction must say why)
+  RA001  raw ``jax.random.PRNGKey(...)`` outside the sanctioned mint
+         helper (``repro.core.base.root_key``): keys must derive from
+         the driver key stream (``split`` / ``fold_in``) or from a
+         documented ``(seed, id)`` salt site carrying a suppression
+  RA002  PRNG key reuse: the same key binding consumed by two or more
+         ``jax.random.*`` draws without an intervening reassignment
+         (``split`` / ``fold_in`` derive — they do not draw)
+  RA003  ``warnings.warn`` outside ``repro.obs.log`` (the structured
+         warning funnel; ad-hoc warnings bypass run telemetry)
+  RA004  wall-clock / global-RNG nondeterminism in library code:
+         ``time.time``, ``datetime.now``/``utcnow``, ``np.random.*``
+         (the seeded ``np.random.default_rng`` is allowed only under
+         ``repro/data/`` — dataset synthesis owns its generators)
+  RA005  ``jnp.float64`` / ``jnp.complex128`` outside the documented
+         x64 allowlist (``optim/flens_head.py``); host-side
+         ``np.float64`` accounting is always allowed
+  RA006  mutable default arguments, and bare ``assert`` statements in
+         library code (stripped under ``python -O``)
+
+Suppression syntax (per line): ``# noqa: RA001 — why this is sanctioned``
+(multiple codes comma-separated; a bare ``# noqa`` suppresses every RA
+rule). RA000 itself enforces the justification text.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.findings import Finding
+
+RULES: Dict[str, str] = {
+    "RA000": "suppression without justification",
+    "RA001": "raw PRNGKey outside sanctioned sites",
+    "RA002": "PRNG key reuse without split/fold_in",
+    "RA003": "warnings.warn outside repro.obs.log",
+    "RA004": "wall-clock/global-RNG nondeterminism",
+    "RA005": "float64 leak outside the x64 allowlist",
+    "RA006": "mutable default arg / bare assert",
+}
+
+# jax.random.* callees that derive or wrap keys rather than draw from
+# them: they neither consume a binding (RA002) nor mint one (RA001)
+_KEY_DERIVERS = {"split", "fold_in", "key_data", "wrap_key_data", "clone",
+                 "key_impl"}
+
+# RA003: the one module allowed to call warnings.warn (the funnel)
+_WARN_FUNNEL = "obs/log.py"
+# RA004: seeded numpy generators are a dataset-synthesis tool
+_NP_RANDOM_OK_DIR = "repro/data/"
+# RA005: the documented x64 allowlist (paper-fidelity float64 paths)
+_X64_ALLOWLIST = ("optim/flens_head.py",)
+
+_NOQA_RE = re.compile(
+    r"#\s*noqa(?P<codes>:\s*[A-Z]+\d+(?:\s*,\s*[A-Z]+\d+)*)?(?P<rest>.*)",
+)
+_RA_CODE_RE = re.compile(r"RA\d{3}")
+
+
+def _parse_noqa(src: str) -> Dict[int, "Set[str] | None"]:
+    """Map line number -> suppressed RA codes (None = all RA codes).
+
+    Also returns implicit RA000 targets: handled by ``lint_source``
+    (a suppression whose trailing text is empty carries no why).
+    """
+    out: Dict[int, "Set[str] | None"] = {}
+    for i, line in enumerate(src.splitlines(), start=1):
+        m = _NOQA_RE.search(line)
+        if not m:
+            continue
+        codes = m.group("codes")
+        if codes is None:
+            out[i] = None  # bare noqa: everything suppressed
+            continue
+        ra = set(_RA_CODE_RE.findall(codes))
+        if ra:
+            out[i] = ra
+    return out
+
+
+def _justified(src_line: str) -> bool:
+    """A sanction must carry prose after the codes (``— why``)."""
+    m = _NOQA_RE.search(src_line)
+    if m is None:
+        return True
+    rest = (m.group("rest") or "").strip(" -—:\t")
+    return bool(rest)
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target / attribute chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+class _Rules(ast.NodeVisitor):
+    def __init__(self, path: str, lines: List[str]):
+        self.path = path
+        self.lines = lines
+        self.findings: List[Finding] = []
+        # RA002 per-scope key consumption state: name -> True (consumed)
+        self._consumed: Dict[str, int] = {}
+        self._seen: Set[tuple] = set()
+
+    # -- helpers -------------------------------------------------------------
+    def _emit(self, code: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if (code, line) in self._seen:
+            return
+        self._seen.add((code, line))
+        context = (self.lines[line - 1].strip()
+                   if 0 < line <= len(self.lines) else "")
+        self.findings.append(Finding(
+            code=code, path=self.path, line=line,
+            message=f"{message} [{RULES[code]}]", context=context))
+
+    def _in(self, *suffixes: str) -> bool:
+        return any(self.path.endswith(s) or f"/{s}" in f"/{self.path}"
+                   for s in suffixes)
+
+    # -- function-scope framing (RA002 state, RA006 defaults) ----------------
+    def _visit_function(self, node) -> None:
+        for default in list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]:
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                self._emit("RA006", default,
+                           "mutable default argument (shared across calls)")
+        outer = self._consumed
+        self._consumed = {}
+        self.generic_visit(node)
+        self._consumed = outer
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    # -- RA006: bare assert --------------------------------------------------
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._emit("RA006", node,
+                   "bare assert (stripped under -O); raise instead")
+        self.generic_visit(node)
+
+    # -- branch merging for RA002 (exclusive branches share a snapshot) ------
+    @staticmethod
+    def _terminates(body: list) -> bool:
+        """Does the branch leave the enclosing flow (so its consumed
+        state never reaches the code after the ``if``)?"""
+        return bool(body) and isinstance(
+            body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+    def visit_If(self, node: ast.If) -> None:
+        self.visit(node.test)
+        snapshot = dict(self._consumed)
+        for stmt in node.body:
+            self.visit(stmt)
+        after_body = (dict(snapshot) if self._terminates(node.body)
+                      else self._consumed)
+        self._consumed = dict(snapshot)
+        for stmt in node.orelse:
+            self.visit(stmt)
+        if self._terminates(node.orelse):
+            self._consumed = dict(snapshot)
+        # union: a key consumed on either surviving path stays consumed
+        self._consumed.update(after_body)
+
+    def _visit_loop(self, node) -> None:
+        # two passes over the body: the second catches draws that reuse
+        # a key binding across iterations (no reassignment in between)
+        for _ in range(2):
+            for stmt in node.body:
+                self.visit(stmt)
+        for stmt in node.orelse:
+            self.visit(stmt)
+
+    def visit_For(self, node: ast.For) -> None:
+        self.visit(node.iter)
+        self._visit_loop(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self.visit(node.test)
+        self._visit_loop(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.visit(node.value)
+        for tgt in node.targets:
+            for name in ast.walk(tgt):
+                if isinstance(name, ast.Name):
+                    self._consumed.pop(name.id, None)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.visit(node.value)
+        if isinstance(node.target, ast.Name):
+            self._consumed.pop(node.target.id, None)
+
+    # -- calls: RA001/RA002/RA003/RA004 --------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        leaf = dotted.rsplit(".", 1)[-1]
+
+        if leaf == "PRNGKey":
+            self._emit(
+                "RA001", node,
+                "raw jax.random.PRNGKey: derive from the driver key "
+                "stream or repro.core.base.root_key")
+
+        if dotted.startswith("jax.random.") and leaf != "PRNGKey":
+            if leaf not in _KEY_DERIVERS and node.args:
+                first = node.args[0]
+                if isinstance(first, ast.Name):
+                    prev = self._consumed.get(first.id)
+                    if prev is not None:
+                        self._emit(
+                            "RA002", node,
+                            f"key {first.id!r} already consumed by a "
+                            f"draw on line {prev}")
+                    else:
+                        self._consumed[first.id] = node.lineno
+
+        if dotted == "warnings.warn" and not self._in(_WARN_FUNNEL):
+            self._emit(
+                "RA003", node,
+                "route through repro.obs.log (warn_with_context)")
+
+        if dotted in ("time.time", "datetime.now", "datetime.datetime.now",
+                      "datetime.utcnow", "datetime.datetime.utcnow"):
+            self._emit("RA004", node, f"{dotted} in library code")
+
+        self.generic_visit(node)
+
+    # -- attributes: RA004 np.random, RA005 jnp.float64 ----------------------
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        dotted = _dotted(node)
+        if (dotted.startswith(("np.random.", "numpy.random."))
+                and _NP_RANDOM_OK_DIR not in self.path):
+            self._emit("RA004", node,
+                       f"{dotted}: global/numpy RNG outside repro/data/")
+        if (dotted in ("jnp.float64", "jnp.complex128",
+                       "jax.numpy.float64", "jax.numpy.complex128")
+                and not self._in(*_X64_ALLOWLIST)):
+            # the documented gating idiom — ``jnp.float64 if
+            # jax.config.jax_enable_x64 else jnp.float32`` — is allowed
+            # when the guard sits on the same source line
+            line = (self.lines[node.lineno - 1]
+                    if 0 < node.lineno <= len(self.lines) else "")
+            if "jax_enable_x64" not in line:
+                self._emit(
+                    "RA005", node,
+                    f"{dotted} outside the x64 allowlist (gate on "
+                    f"jax.config.jax_enable_x64 or sanction with a why)")
+        self.generic_visit(node)
+
+
+def lint_source(src: str, path: str = "<memory>") -> List[Finding]:
+    """Lint one source blob (the unit the rule tests drive)."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(code="RA000", path=path, line=e.lineno or 0,
+                        message=f"unparsable source: {e.msg}",
+                        context="syntax-error")]
+    lines = src.splitlines()
+    visitor = _Rules(path, lines)
+    visitor.visit(tree)
+    suppressions = _parse_noqa(src)
+
+    _UNSET = object()
+    kept: List[Finding] = []
+    for f in visitor.findings:
+        codes = suppressions.get(f.line, _UNSET)
+        if codes is _UNSET:
+            kept.append(f)
+        elif codes is None or f.code in codes:
+            pass  # suppressed (RA000 still audits the sanction below)
+        else:
+            kept.append(f)
+    # RA000: any RA suppression (used or not) must carry a justification
+    for line, codes in suppressions.items():
+        src_line = lines[line - 1] if 0 < line <= len(lines) else ""
+        if not _justified(src_line):
+            kept.append(Finding(
+                code="RA000", path=path, line=line,
+                message=f"suppression {sorted(codes) if codes else 'noqa'} "
+                        f"carries no justification [{RULES['RA000']}]",
+                context=src_line.strip()))
+    kept.sort(key=lambda f: (f.path, f.line, f.code))
+    return kept
+
+
+def _iter_files(root: pathlib.Path) -> Iterable[pathlib.Path]:
+    yield from sorted((root / "src" / "repro").rglob("*.py"))
+
+
+def lint_repo(root: "pathlib.Path | str" = ".",
+              files: Optional[Iterable] = None) -> List[Finding]:
+    """Lint the library tree (``src/repro/**``) and return findings."""
+    root = pathlib.Path(root)
+    paths = ([pathlib.Path(f) for f in files] if files is not None
+             else _iter_files(root))
+    out: List[Finding] = []
+    for p in paths:
+        try:
+            rel = p.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = p.as_posix()
+        out.extend(lint_source(p.read_text(), rel))
+    return out

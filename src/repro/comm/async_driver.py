@@ -139,7 +139,7 @@ class AsyncSession:
         client_weights: np.ndarray,
         keys: jax.Array,  # (rounds, 2) per-version optimizer round keys
         state0: Any = None,
-        mask_dtype=jnp.float64,
+        mask_dtype=jnp.float64,  # noqa: RA005 — caller passes the problem dtype; the default only names the widest mask the goldens were recorded with
         obs=NULL_TELEMETRY,
     ):
         self.config = config
@@ -152,7 +152,7 @@ class AsyncSession:
         self.traces: List[RoundTrace] = []
         self.ef_memory: Dict[str, jax.Array] = {}
         self._mask_dtype = mask_dtype
-        self._root = jax.random.PRNGKey(config.seed)
+        self._root = jax.random.PRNGKey(config.seed)  # noqa: RA001 — the transport root stream; repro.comm cannot import repro.core.base (cycle)
         self._staleness = make_staleness(config.staleness)
         if config.buffer_size is not None:
             self.quorum = min(m, int(config.buffer_size))
@@ -619,7 +619,7 @@ class PopulationAsyncSession(AsyncSession):
     """
 
     def __init__(self, config, population, *, keys, state0=None,
-                 mask_dtype=jnp.float64, obs=NULL_TELEMETRY,
+                 mask_dtype=jnp.float64, obs=NULL_TELEMETRY,  # noqa: RA005 — caller passes the problem dtype; default matches the recorded goldens
                  client_mesh=None):
         super().__init__(config, m=population.m,
                          client_weights=population.client_weights,

@@ -70,7 +70,7 @@ def _spec_sampler(spec: str, salt: int):
     independent of cohort composition, round, and driver.
     """
     kind, params = _parse_spec(spec)
-    key0 = jax.random.PRNGKey(np.uint32(salt))
+    key0 = jax.random.PRNGKey(np.uint32(salt))  # noqa: RA001 — documented (seed, field) salt: per-id draws must be pure in (spec, salt, id)
 
     def one(cid):
         k = jax.random.fold_in(key0, cid)

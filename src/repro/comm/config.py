@@ -526,7 +526,7 @@ def probe_round(config: CommConfig, m: int, mask_dtype, plan: Dict[str, int],
         # with a threat the sessions pack (delivery, attackers); probe
         # the same pytree structure
         mask = (mask, jnp.zeros((m,), mask_dtype))
-    ck = jax.random.PRNGKey(0)
+    ck = jax.random.PRNGKey(0)  # noqa: RA001 — shape-only eval_shape probe; the key value never executes
 
     def probe(mask, ck):
         cr = CommRound(config, plan, mask, ck, ef_record=spec)
@@ -550,7 +550,7 @@ class CommSession:
         self,
         config: CommConfig,
         m: int,
-        mask_dtype=jnp.float64,
+        mask_dtype=jnp.float64,  # noqa: RA005 — caller passes the problem dtype; the default only names the widest mask the goldens were recorded with
         keys: "jax.Array | None" = None,
         state0: Any = None,
         obs=NULL_TELEMETRY,
@@ -573,7 +573,7 @@ class CommSession:
         self.keys = keys
         self._state = state0
         self._t = 0
-        self._root = jax.random.PRNGKey(config.seed)
+        self._root = jax.random.PRNGKey(config.seed)  # noqa: RA001 — the transport root stream; repro.comm cannot import repro.core.base (cycle)
         self._mask_dtype = mask_dtype
         # static decision: identical jit trace structure for every round.
         # Churn and correlated outages invalidate the statically-full
@@ -831,7 +831,7 @@ class PopulationCommSession(CommSession):
     """
 
     def __init__(self, config: CommConfig, population, *,
-                 mask_dtype=jnp.float64, keys=None, state0=None,
+                 mask_dtype=jnp.float64, keys=None, state0=None,  # noqa: RA005 — caller passes the problem dtype; default matches the recorded goldens
                  obs=NULL_TELEMETRY, client_mesh=None):
         super().__init__(config, population.m, mask_dtype=mask_dtype,
                          keys=keys, state0=state0, obs=obs)

@@ -1,5 +1,11 @@
 """Core library: the paper's contribution (FLeNS) + every Table-I baseline."""
-from repro.core.base import FederatedOptimizer, History, run_rounds
+from repro.core.base import (
+    FederatedOptimizer,
+    History,
+    build_round,
+    root_key,
+    run_rounds,
+)
 from repro.core.federated import (
     ClientPopulation,
     DatasetPopulation,

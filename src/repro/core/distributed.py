@@ -86,7 +86,7 @@ class DistributedFLeNS:
             # the broadcast seed is the round index: fresh schedules key
             # the basis from PRNGKey(seed) directly (the pre-policy
             # wire contract), fixed/rotating ones from their epoch
-            sketch = policy.sample(jax.random.PRNGKey(seed[0]), seed[0],
+            sketch = policy.sample(jax.random.PRNGKey(seed[0]), seed[0],  # noqa: RA001 — wire contract: the broadcast round seed IS the key material every client re-derives
                                    dim, dtype=w.dtype)
             sst = sketch.apply(sketch.apply_t(jnp.eye(k, dtype=w.dtype)))
 

@@ -296,7 +296,7 @@ class DatasetPopulation(ClientPopulation):
     ):
         n = np.asarray(X).shape[0]
         if key is None:
-            key = jax.random.PRNGKey(0)
+            key = jax.random.PRNGKey(0)  # noqa: RA001 — documented default partition seed; repro.core.federated cannot import base (cycle)
         if heterogeneity == "dirichlet":
             if n < m:
                 raise ValueError(
@@ -398,7 +398,7 @@ class SyntheticPopulation(ClientPopulation):
         self.seed = int(seed)
         self.n_shard = int(n_shard if n_shard is not None
                            else max(2, 2 * n_per_client))
-        root = jax.random.PRNGKey(seed)
+        root = jax.random.PRNGKey(seed)  # noqa: RA001 — the population's own root stream; repro.core.federated cannot import base (cycle)
         k_sizes, k_true, self._k_data = jax.random.split(root, 3)
         if dirichlet_alpha is None:
             self.sizes = np.full((m,), int(n_per_client), dtype=np.int64)

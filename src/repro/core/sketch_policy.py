@@ -231,7 +231,7 @@ class SketchPolicy:
         rounds of one epoch regardless of the driver's key schedule."""
         if self.schedule == "fresh":
             return key
-        return jax.random.fold_in(jax.random.PRNGKey(self.seed),
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed),  # noqa: RA001 — documented policy seed stream: the shared basis must be pure in (seed, epoch), not the driver key
                                   self.epoch(round_idx))
 
     # -- operator construction -----------------------------------------------

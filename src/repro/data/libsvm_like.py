@@ -50,7 +50,7 @@ def make_classification(
     *,
     spectrum_decay: float = 1.0,
     label_noise: float = 0.05,
-    dtype=jnp.float64,
+    dtype=jnp.float64,  # noqa: RA005 — paper-dataset fidelity: the source tables are double precision
 ):
     """Logistic-model data with power-law feature covariance.
 
@@ -72,13 +72,13 @@ def make_classification(
     return X, y
 
 
-def load(name: str, *, dtype=jnp.float64, seed: int = 0):
+def load(name: str, *, dtype=jnp.float64, seed: int = 0):  # noqa: RA005 — paper-dataset fidelity: the source tables are double precision
     """Load one of the paper's datasets (synthetic twin). Returns spec, X, y."""
     spec = PAPER_DATASETS[name]
     # deterministic name hash: builtin hash() is salted per process
     # (PYTHONHASHSEED), which silently broke cross-run reproducibility
     name_h = zlib.crc32(name.encode()) % (2**31)
-    key = jax.random.PRNGKey(name_h + seed)
+    key = jax.random.PRNGKey(name_h + seed)  # noqa: RA001 — documented (crc32(name), seed) salt: dataset twins are pure in the name
     X, y = make_classification(
         key,
         spec.n,

@@ -44,7 +44,7 @@ _CHURN_TAG = zlib.crc32(b"repro.dynamics.churn")
 def _uniform_sampler(n_streams: int, salt: int):
     """Compiled per-id sampler of ``n_streams`` iid U[0,1) draws —
     client ``j``'s draws are a pure function of ``(salt, j)``."""
-    key0 = jax.random.PRNGKey(np.uint32(salt))
+    key0 = jax.random.PRNGKey(np.uint32(salt))  # noqa: RA001 — documented (seed, id) salt: lifetimes must be pure per id across drivers
 
     def one(cid):
         return jax.random.uniform(jax.random.fold_in(key0, cid),

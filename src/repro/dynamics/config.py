@@ -80,7 +80,9 @@ class DynamicsConfig:
             if self.churn is not None else None,
             "channel": dataclasses.asdict(self.channel)
             if self.channel is not None else None,
-            "threat": f"{self.threat.kind}:{self.threat.fraction}"
+            "threat": (f"{self.threat.kind}:{self.threat.fraction}"
+                       + (f"@{'+'.join(self.threat.payloads)}"
+                          if self.threat.payloads else ""))
             if self.threat is not None else None,
             "robust": self.robust.name if self.robust is not None else None,
         }

@@ -90,7 +90,7 @@ def _mod_sampler(spec: str, salt: int):
     """Compiled per-id multiplier for one (modulator spec, field salt):
     ``mult(j, t)`` is a pure function of ``(spec, salt, j, t)``."""
     stages = _parse_modulator(spec)
-    key0 = jax.random.PRNGKey(np.uint32(salt))
+    key0 = jax.random.PRNGKey(np.uint32(salt))  # noqa: RA001 — documented (seed, id) salt: modulator phases must be pure per id across drivers
 
     def one(cid, t):
         mult = 1.0
@@ -139,7 +139,7 @@ def _parse_outage(spec: str) -> "tuple[float, int, int]":
 @functools.lru_cache(maxsize=None)
 def _outage_window(p: float, groups: int, salt: int, window: int) -> tuple:
     """Which regions are dark in one outage window (seeded, correlated)."""
-    key = jax.random.fold_in(jax.random.PRNGKey(np.uint32(salt)), window)
+    key = jax.random.fold_in(jax.random.PRNGKey(np.uint32(salt)), window)  # noqa: RA001 — documented (seed, window) salt: outage draws must be pure per window
     dark = jax.random.bernoulli(key, p, (groups,))
     return tuple(bool(b) for b in np.asarray(dark))
 

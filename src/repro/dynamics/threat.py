@@ -8,8 +8,8 @@ their *uplink payloads inside the traced round*, BEFORE the codec runs
 error feedback operate on the corrupted payload exactly as they would
 on an honest one. Downlinks are never corrupted (the server is honest).
 
-Attack kinds (spec grammar ``"kind:fraction[,param]"``, parsed by
-``make_threat``):
+Attack kinds (spec grammar ``"kind:fraction[,param][@payloads]"``,
+parsed by ``make_threat``):
 
   * ``"signflip:f"`` — attackers send ``-x`` (gradient/Hessian sign
     flip; norm-preserving, so norm-clipping alone cannot filter it);
@@ -18,10 +18,11 @@ Attack kinds (spec grammar ``"kind:fraction[,param]"``, parsed by
   * ``"noise:f,s"`` — attackers replace the payload with ``N(0, s^2)``
     noise (default ``s=1``, random-noise Hessian sketches / gradients).
 
-``payloads`` optionally restricts the attack to named payloads (e.g.
-only the ``"h_sk"`` Hessian sketch); the default corrupts every uplink
-the attacker sends — including scalar control payloads, which is the
-honest adversarial reading.
+``payloads`` (the ``@p1+p2`` spec suffix) optionally restricts the
+attack to named payloads (e.g. ``"signflip:0.2@h_sk"`` corrupts only
+the Hessian sketch); the default corrupts every uplink the attacker
+sends — including scalar control payloads, which is the honest
+adversarial reading.
 """
 from __future__ import annotations
 
@@ -43,7 +44,7 @@ _DEFAULT_PARAM = {"signflip": 0.0, "scale": 10.0, "noise": 1.0}
 @functools.lru_cache(maxsize=None)
 def _attacker_sampler(fraction: float, salt: int):
     """Compiled per-id attacker coin: pure in ``(fraction, salt, id)``."""
-    key0 = jax.random.PRNGKey(np.uint32(salt))
+    key0 = jax.random.PRNGKey(np.uint32(salt))  # noqa: RA001 — documented (seed, id) salt: the attacker set must be pure per id across drivers
 
     def one(cid):
         return jax.random.uniform(jax.random.fold_in(key0, cid)) < fraction
@@ -100,11 +101,27 @@ class ThreatModel:
 
 
 def make_threat(spec: "str | ThreatModel", seed: int = 0) -> ThreatModel:
-    """Parse ``"signflip:f" | "scale:f[,c]" | "noise:f[,s]"`` or pass a
-    ``ThreatModel`` through."""
+    """Parse ``"kind:fraction[,param][@payload1+payload2]"`` or pass a
+    ``ThreatModel`` through.
+
+    The optional ``@`` suffix scopes the attack to the named uplink
+    payloads (``ThreatModel.payloads``): ``"signflip:0.2@h_sk"``
+    corrupts only the Hessian sketch, every other uplink of an attacker
+    stays byte-identical to its honest value (the trace auditor's
+    threat-scope check asserts exactly that). Without a suffix every
+    uplink is corrupted — the honest adversarial reading.
+    """
     if isinstance(spec, ThreatModel):
         return spec
-    kind, _, rest = str(spec).partition(":")
+    body, sep, scope = str(spec).partition("@")
+    payloads = None
+    if sep:
+        payloads = tuple(p for p in scope.split("+") if p)
+        if not payloads:
+            raise ValueError(
+                f"threat spec {spec!r} has an empty @payload scope; "
+                f"drop the '@' to corrupt every uplink")
+    kind, _, rest = body.partition(":")
     known = ", ".join(k + ":fraction" for k in THREAT_KINDS)
     if kind not in THREAT_KINDS:
         raise ValueError(
@@ -114,10 +131,11 @@ def make_threat(spec: "str | ThreatModel", seed: int = 0) -> ThreatModel:
     except ValueError:
         raise ValueError(
             f"bad parameters in threat spec {spec!r}; expected "
-            f"'{kind}:fraction[,param]'") from None
+            f"'{kind}:fraction[,param][@payloads]'") from None
     if len(params) not in (1, 2):
         raise ValueError(
             f"threat spec {spec!r} wants 1-2 parameters "
             f"(fraction[, param]), got {len(params)}")
     param = params[1] if len(params) == 2 else _DEFAULT_PARAM[kind]
-    return ThreatModel(kind=kind, fraction=params[0], param=param, seed=seed)
+    return ThreatModel(kind=kind, fraction=params[0], param=param,
+                       payloads=payloads, seed=seed)

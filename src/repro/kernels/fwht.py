@@ -26,7 +26,8 @@ from repro.kernels.ref import hadamard_matrix
 
 def _factor(n: int) -> tuple[int, int]:
     """n = a * b with both <= 128 when possible (n a power of two)."""
-    assert n & (n - 1) == 0 and n > 0, n
+    if n <= 0 or n & (n - 1) != 0:
+        raise ValueError(f"FWHT length must be a power of two, got {n}")
     b = min(n, 128)
     a = n // b
     while a > 128:  # n > 16384: grow b beyond 128 (still a power of 2)

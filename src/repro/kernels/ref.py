@@ -140,7 +140,9 @@ def mha(
     """
     b, tq, h, d = q.shape
     _, tk, hkv, _ = k.shape
-    assert h % hkv == 0
+    if h % hkv != 0:
+        raise ValueError(f"q heads ({h}) must be a multiple of kv heads "
+                         f"({hkv}) for grouped-query attention")
     group = h // hkv
     if scale is None:
         scale = 1.0 / (d ** 0.5)

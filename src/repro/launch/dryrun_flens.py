@@ -34,6 +34,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import cost_analysis, shard_map
+from repro.core.base import root_key
 
 
 def build_round(method: str, dim: int, k: int, n_per_client: int, lam: float):
@@ -100,8 +101,10 @@ def lower_method(method: str, mesh, dim: int, k: int, n_per_client: int,
             pr = jax.nn.sigmoid(margins)
             d = pr * (1 - pr)
             a = X * jnp.sqrt(d / X.shape[0])[:, None]
-            # per-client gaussian data-axis sketch (k x n) @ (n, dim)
-            key = jax.random.PRNGKey(0)
+            # per-client gaussian data-axis sketch (k x n) @ (n, dim):
+            # every client shares one FIXED sketch seed (the FedNS wire
+            # contract — the server must re-materialize the same S)
+            key = root_key(0)
             s_mat = jax.random.normal(key, (k, X.shape[0]), w.dtype) / jnp.sqrt(
                 jnp.asarray(k, w.dtype))
             sa = s_mat @ a  # (k, dim) on the wire per client

@@ -17,6 +17,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config
+from repro.core.base import root_key
 from repro.models.lm import LM
 from repro.optim.adamw import adamw_init, adamw_update
 from repro.sharding import rules
@@ -137,7 +138,7 @@ def build(arch: str, shape_name: str, mesh: Mesh, *,
     shp = INPUT_SHAPES[shape_name]
     model = LM(cfg)
 
-    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_shape = jax.eval_shape(model.init, root_key(0))
     n_params = _count_params(params_shape)
     n_active = _active_params(cfg, params_shape)
     param_sh = rules.tree_shardings(mesh, params_shape, rules.param_spec)

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.base import root_key
 from repro.models.lm import LM
 
 
@@ -30,17 +31,20 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
     model = LM(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
+    params = model.init(root_key(args.seed))
 
-    key = jax.random.PRNGKey(args.seed + 1)
+    # one key per synthetic payload: the init stream stays disjoint from
+    # the batch stream, and no key is drawn from twice
+    k_inputs, k_vision, k_audio = jax.random.split(root_key(args.seed, 1), 3)
     batch = {"inputs": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab)}
+        k_inputs, (args.batch, args.prompt_len), 0, cfg.vocab)}
     if cfg.family == "vlm":
         batch["vision"] = jax.random.normal(
-            key, (args.batch, cfg.vision_tokens, cfg.vision_dim), jnp.float32)
+            k_vision, (args.batch, cfg.vision_tokens, cfg.vision_dim),
+            jnp.float32)
     if cfg.family == "audio":
         batch["audio_frames"] = jax.random.normal(
-            key, (args.batch, cfg.audio_frames, cfg.d_model), jnp.float32)
+            k_audio, (args.batch, cfg.audio_frames, cfg.d_model), jnp.float32)
 
     cache_len = args.prompt_len + args.gen
     prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.checkpoint import latest_step, restore, save
 from repro.configs import get_config
+from repro.core.base import root_key
 from repro.data.lm_stream import FastLMStream
 from repro.models.lm import LM
 from repro.optim import adamw_init, adamw_update, linear_warmup_cosine
@@ -50,7 +51,7 @@ def main() -> None:
         cfg = cfg.reduced(**overrides)
     model = LM(cfg)
 
-    params = model.init(jax.random.PRNGKey(args.seed))
+    params = model.init(root_key(args.seed))
     opt_state = adamw_init(params)
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"arch={cfg.arch_id} params={n_params/1e6:.1f}M "

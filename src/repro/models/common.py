@@ -247,7 +247,9 @@ def chunked_cross_entropy(features, emb_table, labels, chunk, mask=None):
     features (B,T,D) -> per-chunk logits (B,c,V) -> nll, accumulated.
     """
     b, t, d = features.shape
-    assert t % chunk == 0, (t, chunk)
+    if t % chunk != 0:
+        raise ValueError(f"sequence length {t} must be divisible by the "
+                         f"cross-entropy chunk {chunk}")
     n_chunks = t // chunk
     feats = features.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
     labs = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)

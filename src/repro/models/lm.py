@@ -83,7 +83,10 @@ def build_groups(cfg: ModelConfig) -> list[GroupSpec]:
         return gs
     if cfg.family == "vlm":
         per = cfg.cross_attn_every  # self layers per cross layer
-        assert L % (per + 1) == 0, (L, per)
+        if L % (per + 1) != 0:
+            raise ValueError(
+                f"vlm layer count {L} must be a multiple of "
+                f"cross_attn_every+1 ({per + 1})")
         return [GroupSpec("vlm", L // (per + 1))]
     if cfg.family == "audio":
         return [GroupSpec("dec", L)]  # decoder; encoder handled separately

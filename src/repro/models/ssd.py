@@ -101,7 +101,9 @@ def ssd_scan(x, dt, a_neg, b_, c_, d_skip, *, chunk: int, init_state=None):
     """
     bsz, t, h, p = x.shape
     n = b_.shape[-1]
-    assert t % chunk == 0, (t, chunk)
+    if t % chunk != 0:
+        raise ValueError(f"sequence length {t} must be divisible by the "
+                         f"SSD scan chunk {chunk}")
     nc = t // chunk
     xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
     dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)

@@ -1,0 +1,363 @@
+"""repro.analysis: lint rules, the trace auditor, baseline semantics.
+
+Three layers under test:
+
+  * **Lint rules** (RA000–RA006) — each rule fires on a minimal
+    positive source blob, stays silent on the sanctioned idiom, and a
+    ``# noqa`` without a justification is itself a finding. The repo's
+    own tree must lint clean (every sanction carries a why).
+  * **Trace auditor** — deliberately-broken optimizer instances are
+    the positive cases: a carry-dtype drift, a weak-type leak, a bloated
+    closure constant, and a host callback each trip exactly their check,
+    while the honest toy round passes all five.
+  * **Baseline protocol** — fingerprints ignore line drift, the diff
+    splits new/accepted/resolved, and the CLI exits 1 on a seeded
+    violation until ``--update`` accepts it.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    Finding,
+    RULES,
+    diff_baseline,
+    lint_repo,
+    lint_source,
+    load_baseline,
+)
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.audit import (
+    _AuditTarget,
+    check_const_bloat,
+    check_dtypes,
+    check_primitives,
+    check_retrace,
+    check_threat_scope,
+    check_wire,
+    combos,
+)
+from repro.analysis.findings import save_baseline
+from repro.core.base import FederatedOptimizer
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+LIB = "src/repro/some_module.py"  # a generic library path for lint blobs
+
+
+def codes(findings):
+    return [f.code for f in findings]
+
+
+# -- lint rules: positive + sanctioned idiom per rule ------------------------
+
+def test_ra001_raw_prngkey():
+    src = "import jax\nk = jax.random.PRNGKey(0)\n"
+    assert codes(lint_source(src, LIB)) == ["RA001"]
+
+
+def test_ra001_suppressed_with_justification():
+    src = ("import jax\n"
+           "k = jax.random.PRNGKey(0)  # noqa: RA001 — documented salt\n")
+    assert lint_source(src, LIB) == []
+
+
+def test_ra000_suppression_without_why():
+    src = "import jax\nk = jax.random.PRNGKey(0)  # noqa: RA001\n"
+    out = lint_source(src, LIB)
+    assert codes(out) == ["RA000"]  # RA001 suppressed, sanction audited
+
+
+def test_ra002_key_reuse():
+    src = ("import jax\n"
+           "def f(key):\n"
+           "    a = jax.random.normal(key)\n"
+           "    b = jax.random.uniform(key)\n"
+           "    return a + b\n")
+    assert codes(lint_source(src, LIB)) == ["RA002"]
+
+
+def test_ra002_split_and_reassignment_are_clean():
+    src = ("import jax\n"
+           "def f(key):\n"
+           "    k1, k2 = jax.random.split(key)\n"
+           "    a = jax.random.normal(k1)\n"
+           "    key = jax.random.fold_in(key, 1)\n"
+           "    b = jax.random.normal(key)\n"
+           "    return a + b + jax.random.normal(k2)\n")
+    assert lint_source(src, LIB) == []
+
+
+def test_ra002_exclusive_return_branches_are_clean():
+    # regression: `if kind == 'a': return draw(k)` branches are
+    # exclusive — the terminated branch's consumption must not leak
+    src = ("import jax\n"
+           "def f(kind, key):\n"
+           "    if kind == 'a':\n"
+           "        return jax.random.normal(key)\n"
+           "    return jax.random.uniform(key)\n")
+    assert lint_source(src, LIB) == []
+
+
+def test_ra002_loop_reuse_across_iterations():
+    src = ("import jax\n"
+           "def f(key, n):\n"
+           "    out = 0.0\n"
+           "    for _ in range(n):\n"
+           "        out += jax.random.normal(key)\n"
+           "    return out\n")
+    assert "RA002" in codes(lint_source(src, LIB))
+
+
+def test_ra003_warn_outside_funnel():
+    src = "import warnings\nwarnings.warn('x')\n"
+    assert codes(lint_source(src, LIB)) == ["RA003"]
+    assert lint_source(src, "src/repro/obs/log.py") == []
+
+
+def test_ra004_wall_clock_and_global_rng():
+    src = "import time\nt = time.time()\n"
+    assert codes(lint_source(src, LIB)) == ["RA004"]
+    src = "import numpy as np\nx = np.random.rand(3)\n"
+    assert codes(lint_source(src, LIB)) == ["RA004"]
+    # seeded numpy generators are a dataset-synthesis tool
+    assert lint_source(src, "src/repro/data/synth.py") == []
+
+
+def test_ra005_float64_leak():
+    src = "import jax.numpy as jnp\nx = jnp.zeros(3, jnp.float64)\n"
+    assert codes(lint_source(src, LIB)) == ["RA005"]
+    # the documented allowlist path and the same-line x64 gate are clean
+    assert lint_source(src, "src/repro/optim/flens_head.py") == []
+    gated = ("import jax, jax.numpy as jnp\n"
+             "dt = jnp.float64 if jax.config.jax_enable_x64 "
+             "else jnp.float32\n")
+    assert lint_source(gated, LIB) == []
+
+
+def test_ra006_mutable_default_and_bare_assert():
+    src = "def f(x=[]):\n    assert x\n    return x\n"
+    assert sorted(codes(lint_source(src, LIB))) == ["RA006", "RA006"]
+
+
+def test_rules_table_covers_emitted_codes():
+    assert set(RULES) == {f"RA00{i}" for i in range(7)}
+
+
+def test_repo_tree_lints_clean():
+    """The committed baseline is empty, so the tree itself must be:
+    every historical violation is fixed or carries a justified noqa."""
+    assert lint_repo(ROOT) == []
+
+
+# -- baseline protocol -------------------------------------------------------
+
+def test_fingerprint_ignores_line_drift():
+    a = Finding("RA001", "p.py", 10, "msg", "k = PRNGKey(0)")
+    b = Finding("RA001", "p.py", 99, "different msg", "  k = PRNGKey(0) ")
+    assert a.fingerprint == b.fingerprint
+    assert a.fingerprint != Finding("RA002", "p.py", 10, "msg",
+                                    "k = PRNGKey(0)").fingerprint
+
+
+def test_baseline_diff_semantics(tmp_path):
+    old = Finding("RA001", "a.py", 1, "m", "ctx-old")
+    new = Finding("RA005", "b.py", 2, "m", "ctx-new")
+    path = tmp_path / "baseline.json"
+    assert load_baseline(path) == set()  # missing file: everything new
+
+    save_baseline(path, [old])
+    d = diff_baseline([old, new], load_baseline(path))
+    assert codes(d.new) == ["RA005"] and codes(d.accepted) == ["RA001"]
+    assert d.resolved == set() and d.failed
+
+    d = diff_baseline([], load_baseline(path))
+    assert d.new == [] and d.accepted == []
+    assert d.resolved == {old.fingerprint} and not d.failed
+
+
+def test_baseline_schema_mismatch_rejected(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text('{"schema": "something/v9", "findings": []}')
+    with pytest.raises(ValueError, match="schema"):
+        load_baseline(p)
+
+
+def test_cli_fails_on_seeded_violation_until_updated(tmp_path, capsys):
+    """The CI contract end-to-end: a raw PRNGKey in the tree exits 1
+    against an empty baseline, ``--update`` accepts it, reruns pass."""
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / "bad.py").write_text(
+        "import jax\nkey = jax.random.PRNGKey(0)\n")
+    baseline = tmp_path / "baseline.json"
+    argv = ["lint", "--root", str(tmp_path), "--baseline", str(baseline)]
+
+    assert analysis_main(argv) == 1
+    assert "NEW" in capsys.readouterr().out
+
+    assert analysis_main(argv + ["--update"]) == 0
+    assert analysis_main(argv) == 0
+    assert "ACCEPTED" in capsys.readouterr().out
+
+
+# -- trace auditor: broken rounds must be caught -----------------------------
+
+class _ToyOpt(FederatedOptimizer):
+    """Minimal honest round: broadcast, per-client copy, weighted mean.
+    The broken variants below each violate exactly one invariant."""
+
+    name = "toy"
+
+    def round(self, problem, state, key, comm=None):
+        w = comm.downlink("w", state["w"])
+        w_locals = comm.uplink(
+            "w_local", jnp.broadcast_to(w, (problem.m, problem.dim)))
+        p = comm.weights(problem.client_weights)
+        return {"w": jnp.einsum("j,jm->m", p, w_locals)}
+
+    def uplink_floats(self, problem):
+        return problem.dim
+
+
+class _DtypeDrift(_ToyOpt):
+    name = "toy-dtype-drift"
+
+    def round(self, problem, state, key, comm=None):
+        out = super().round(problem, state, key, comm=comm)
+        return {"w": out["w"].astype(jnp.float32)}  # x64 carry narrows
+
+
+class _WeakLeak(_ToyOpt):
+    name = "toy-weak-leak"
+
+    def round(self, problem, state, key, comm=None):
+        super().round(problem, state, key, comm=comm)
+        # same shape and dtype, but a python-scalar fill is weak-typed
+        return {"w": jnp.full((problem.dim,), 2.0)}
+
+
+class _ConstBloat(_ToyOpt):
+    name = "toy-const-bloat"
+
+    def __init__(self):
+        self.big = jnp.arange(128 * 128, dtype=jnp.float32).reshape(
+            128, 128)
+
+    def round(self, problem, state, key, comm=None):
+        out = super().round(problem, state, key, comm=comm)
+        return {"w": out["w"] + self.big[0, 0]}  # 64 KiB baked in
+
+
+class _HostCallback(_ToyOpt):
+    name = "toy-host-callback"
+
+    def round(self, problem, state, key, comm=None):
+        out = super().round(problem, state, key, comm=comm)
+        jax.debug.print("w[0] = {}", out["w"][0])
+        return out
+
+
+def _target(opt):
+    return _AuditTarget(opt, "sync", "identity")
+
+
+def test_audit_clean_on_honest_toy_round():
+    t = _target(_ToyOpt())
+    for check in (check_retrace, check_dtypes, check_const_bloat,
+                  check_primitives, check_wire):
+        assert check(t) == [], check.__name__
+
+
+def test_audit_catches_carry_dtype_drift():
+    out = check_retrace(_target(_DtypeDrift()))
+    assert codes(out) == ["AUDIT-RETRACE"]
+    assert "drift" in out[0].message
+
+
+def test_audit_catches_weak_type_leak():
+    out = check_retrace(_target(_WeakLeak()))
+    assert "AUDIT-WEAKTYPE" in codes(out)
+
+
+def test_audit_catches_const_bloat():
+    out = check_const_bloat(_target(_ConstBloat()))
+    assert codes(out) == ["AUDIT-CONST"]
+    assert "(128, 128)" in out[0].message
+
+
+def test_audit_catches_forbidden_primitive():
+    out = check_primitives(_target(_HostCallback()))
+    assert codes(out) == ["AUDIT-PRIMITIVE"]
+
+
+def test_dtype_census_flags_f64_only_when_x64_off():
+    """conftest enables x64 (so the census is vacuous in-process); feed
+    it a pre-traced f64 jaxpr with the flag toggled off to prove it
+    fires, and back on to prove it stands down."""
+    closed = jax.make_jaxpr(lambda x: x * x)(jnp.zeros((4,), jnp.float64))
+
+    class _Stub:
+        id = "stub/sync/identity"
+
+        def closed_jaxpr(self, args=None):
+            return closed
+
+    jax.config.update("jax_enable_x64", False)
+    try:
+        assert codes(check_dtypes(_Stub())) == ["AUDIT-DTYPE"]
+    finally:
+        jax.config.update("jax_enable_x64", True)
+    assert check_dtypes(_Stub()) == []
+
+
+def test_threat_scope_check_clean_and_vacuity_guard():
+    assert check_threat_scope() == []
+    # scoping to a payload fedavg never uplinks is flagged, not ignored
+    out = check_threat_scope(payload="h_sk")
+    assert codes(out) == ["AUDIT-THREAT"]
+    assert "vacuous" in out[0].message
+
+
+def test_combos_cover_all_optimizers_and_skip_fednew_population():
+    cs = list(combos())
+    opts = {o for o, _, _ in cs}
+    assert len(opts) == 11
+    assert ("fednew", "population", "identity") not in cs
+    assert ("fednew", "sync", "identity") in cs
+
+
+# -- the CLI gate itself -----------------------------------------------------
+
+def _run_cli(*argv, timeout):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=timeout)
+
+
+def test_analysis_all_restricted_is_clean():
+    """Tier-1 smoke of the shipped gate: one optimizer across every
+    driver and codec leg, lint included, against the committed (empty)
+    baseline."""
+    r = _run_cli("all", "--optimizers", "flens", "--no-dynamic",
+                 timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 new" in r.stdout
+
+
+@pytest.mark.slow
+def test_analysis_all_full_is_clean():
+    """The exact CI static-analysis invocation: all 11 optimizers x 3
+    codecs x 3 drivers, threat scope, and the dynamic retrace
+    cross-check — in a fresh process, so the x64-off dtype census is
+    live (conftest keeps it vacuous in-process)."""
+    r = _run_cli("all", timeout=1800)
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -388,6 +388,50 @@ def test_threat_deterministic_across_drivers(edge_problem):
     np.testing.assert_array_equal(hs.loss, ha.loss)
 
 
+def test_threat_payload_scope_grammar():
+    """``kind:frac[,param]@p1+p2`` restricts the attack to named
+    payloads; an empty scope is a spec error, not corrupt-nothing."""
+    th = make_threat("signflip:0.3@h_sk+sg", seed=1)
+    assert th.payloads == ("h_sk", "sg")
+    assert th.applies("h_sk") and th.applies("sg")
+    assert not th.applies("w_local")
+    assert make_threat("scale:0.2,5", seed=1).payloads is None
+    with pytest.raises(ValueError, match="empty @payload"):
+        make_threat("signflip:0.3@")
+
+
+def test_threat_scoped_to_absent_payload_is_inert(edge_problem):
+    """FedAvg never uplinks ``h_sk``: a threat scoped there must leave
+    the trajectory bit-identical to no threat at all."""
+    prob, w0, w_star = edge_problem
+    clean = run_rounds(make_optimizer("fedavg"), prob, w0, w_star,
+                       rounds=4, comm=CommConfig())
+    scoped = run_rounds(
+        make_optimizer("fedavg"), prob, w0, w_star, rounds=4,
+        comm=CommConfig(dynamics=DynamicsConfig(
+            threat="signflip:0.34@h_sk", seed=1)))
+    np.testing.assert_array_equal(clean.loss, scoped.loss)
+
+
+def test_threat_scoped_to_uplinked_payload_equals_full(edge_problem):
+    """FedAvg's only uplink IS ``w_local``: scoping the attack there is
+    the whole attack — bit-identical to the unscoped threat, and
+    different from the clean run."""
+    prob, w0, w_star = edge_problem
+    full = run_rounds(
+        make_optimizer("fedavg"), prob, w0, w_star, rounds=4,
+        comm=CommConfig(dynamics=DynamicsConfig(
+            threat="signflip:0.34", seed=1)))
+    scoped = run_rounds(
+        make_optimizer("fedavg"), prob, w0, w_star, rounds=4,
+        comm=CommConfig(dynamics=DynamicsConfig(
+            threat="signflip:0.34@w_local", seed=1)))
+    clean = run_rounds(make_optimizer("fedavg"), prob, w0, w_star,
+                       rounds=4, comm=CommConfig())
+    np.testing.assert_array_equal(full.loss, scoped.loss)
+    assert float(abs(scoped.loss[-1] - clean.loss[-1])) > 0
+
+
 def test_population_dynamics_deterministic():
     pop = SyntheticPopulation(m=64, dim=8, seed=3)
     w0 = jnp.zeros(pop.dim, jnp.float64)
